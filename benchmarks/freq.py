@@ -1,0 +1,18 @@
+"""Benchmark: operating-frequency derivation (paper §5.2, Eqs. 6/9)."""
+
+from __future__ import annotations
+
+from repro.core import timing
+
+
+def run() -> list[dict]:
+    clocks = timing.derive_paper_clocks()
+    rows = [
+        {"name": "conv_t_p_min_ns", "value": round(clocks.conv_t_p_ns, 3),
+         "paper": 19.81},
+        {"name": "conv_f_max_mhz", "value": clocks.conv_mhz, "paper": 50},
+        {"name": "proposed_t_p_min_ns", "value": round(clocks.prop_t_p_ns, 3),
+         "paper": 12.0},
+        {"name": "proposed_f_max_mhz", "value": clocks.prop_mhz, "paper": 83},
+    ]
+    return rows

@@ -1,0 +1,89 @@
+"""Roofline-term derivation from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e per chip, from the assignment brief):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s
+
+Terms per (arch × shape × mesh) cell, all per-device / per-step seconds:
+    compute    = HLO_dot_flops / 197e12
+    memory     = HLO_traffic_bytes / 819e9
+    collective = collective_bytes / 50e9
+
+plus MODEL_FLOPS (6·N_active·D train / 2·N·D prefill / 2·N·B decode), the
+useful-compute ratio MODEL_FLOPS / (HLO_flops × chips), and the roofline
+fraction = ideal model time / max(term)s — the headline score in §Perf.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_records(results_dir: pathlib.Path | str = RESULTS) -> list[dict]:
+    recs = []
+    for f in sorted(pathlib.Path(results_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict:
+    if rec["status"] != "ok":
+        return {"cell": f"{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+                "status": rec["status"], "reason": rec.get("reason", rec.get("error", ""))[:90]}
+    compute = rec["dot_flops_per_device"] / PEAK_FLOPS
+    memory = rec["traffic_bytes_per_device"] / HBM_BW
+    coll = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    hlo_global = rec["dot_flops_per_device"] * rec["chips"]
+    useful = rec["model_flops_global"] / hlo_global if hlo_global else 0.0
+    ideal = rec["model_flops_global"] / (rec["chips"] * PEAK_FLOPS)
+    frac = ideal / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    return {
+        "cell": f"{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+        "status": "ok",
+        "compute_s": round(compute, 4),
+        "memory_s": round(memory, 4),
+        "collective_s": round(coll, 4),
+        "dominant": dominant,
+        "model_flops": f"{rec['model_flops_global']:.3e}",
+        "useful_ratio": round(useful, 3),
+        "roofline_fraction": round(frac, 4),
+        "hbm_gib_per_dev": round(
+            (rec["memory"].get("argument_size_in_bytes", 0)
+             + rec["memory"].get("temp_size_in_bytes", 0)) / 2**30, 2),
+    }
+
+
+def run(results_dir=RESULTS) -> list[dict]:
+    return [roofline_row(r) for r in load_records(results_dir)]
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| cell | compute s | memory s | collective s | dominant | "
+           "useful | roofline frac | HBM GiB/dev |\n|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['cell']} | — | — | — | {r['status']}: "
+                       f"{r.get('reason','')} | — | — | — |")
+        else:
+            out.append(
+                f"| {r['cell']} | {r['compute_s']} | {r['memory_s']} | "
+                f"{r['collective_s']} | **{r['dominant']}** | "
+                f"{r['useful_ratio']} | {r['roofline_fraction']} | "
+                f"{r['hbm_gib_per_dev']} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

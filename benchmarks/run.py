@@ -1,0 +1,49 @@
+"""Benchmark harness: one entry per paper table/figure + roofline summary.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,value,paper_or_derived[,rel_err]`` CSV lines and writes the
+roofline markdown table to benchmarks/results/roofline.md.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+
+def _emit(rows):
+    for r in rows:
+        err = r.get("rel_err")
+        tail = f",{err}" if err is not None else ""
+        print(f"{r['name']},{r['value']},{r['paper']}{tail}")
+
+
+def main() -> None:
+    from benchmarks import freq, roofline, sweep_bench, tables
+
+    print("# freq (paper §5.2)")
+    _emit(freq.run())
+    print("# table3 (paper Table 3 / Fig 8)")
+    _emit(tables.run_table3())
+    print("# table4 (paper Table 4 / Fig 9)")
+    _emit(tables.run_table4())
+    print("# table5 (paper Table 5 / Fig 10)")
+    _emit(tables.run_table5())
+    print("# design-space sweep engines")
+    _emit(sweep_bench.run())
+
+    rows = roofline.run()
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"# roofline ({len(ok)} ok cells of {len(rows)}; full table -> "
+          f"benchmarks/results/roofline.md)")
+    for r in ok:
+        print(f"roofline/{r['cell']},{r['roofline_fraction']},"
+              f"dominant={r['dominant']}")
+    out = pathlib.Path(__file__).resolve().parent / "results" / "roofline.md"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(roofline.markdown_table(rows) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark: design-space sweep throughput (paper's simulator, modernised).
+
+The paper evaluates ~60 design points with an RTL co-simulation.  This
+framework's contribution is making that sweep a data-parallel tensor
+program: we time (a) the plain-Python event loop, (b) the jit+vmap
+``lax.scan`` engine, and (c) the (max,+) Pallas kernel in interpret mode
+(CPU; on TPU the same kernel runs compiled) over a
+channels × ways × interface × cell × mode grid.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import InterfaceKind, make_interface
+from repro.core.nand import CellType, chip
+from repro.core.sim import page_op_params, sweep_bandwidth_mb_s
+from repro.core.sim_ref import bandwidth_ref_mb_s
+from repro.kernels.maxplus.ops import bandwidth_maxplus_mb_s
+
+N_PAGES = 256
+
+
+def _grid():
+    ops, ways = [], []
+    for kind in InterfaceKind:
+        for cell in CellType:
+            for mode in ("read", "write"):
+                for w in (1, 2, 4, 8, 16):
+                    ops.append(page_op_params(make_interface(kind), chip(cell),
+                                              mode, w))
+                    ways.append(w)
+    return ops, ways
+
+
+def run() -> list[dict]:
+    ops, ways = _grid()
+    n = len(ops)
+
+    t0 = time.perf_counter()
+    ref = np.array([bandwidth_ref_mb_s(o, w, N_PAGES) for o, w in zip(ops, ways)])
+    t_ref = time.perf_counter() - t0
+
+    args = tuple(jnp.array(x, jnp.float32) for x in (
+        [o.cmd_us for o in ops], [o.pre_us for o in ops],
+        [o.slot_us for o in ops], [o.post_lo_us for o in ops],
+        [o.post_hi_us for o in ops], [o.data_bytes for o in ops]))
+    wv = jnp.array(ways, jnp.int32)
+    sweep_bandwidth_mb_s(*args, wv, n_pages=N_PAGES).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    vm = np.asarray(sweep_bandwidth_mb_s(*args, wv, n_pages=N_PAGES))
+    t_vm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    mp = bandwidth_maxplus_mb_s(ops, ways, n_pages=N_PAGES)
+    t_mp = time.perf_counter() - t0
+
+    assert np.allclose(ref, vm, rtol=1e-3)
+    assert np.allclose(ref, mp, rtol=1e-3)
+    return [
+        {"name": "sweep/python_event_loop_us_per_point",
+         "value": round(t_ref / n * 1e6, 1), "paper": "-"},
+        {"name": "sweep/jit_vmap_scan_us_per_point",
+         "value": round(t_vm / n * 1e6, 1), "paper": "-"},
+        {"name": "sweep/maxplus_interpret_us_per_point",
+         "value": round(t_mp / n * 1e6, 1),
+         "paper": "(compiled Pallas on TPU)"},
+        {"name": "sweep/vmap_speedup_vs_python",
+         "value": round(t_ref / max(t_vm, 1e-9), 1), "paper": "-"},
+    ]

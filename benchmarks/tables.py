@@ -1,0 +1,59 @@
+"""Benchmarks: paper Tables 3 / 4 / 5 reproduction (one per paper table)."""
+
+from __future__ import annotations
+
+from repro.core.energy import energy_nj_per_byte
+from repro.core.interface import InterfaceKind
+from repro.core.nand import CellType
+from repro.core.paper_tables import INTERFACE_ORDER, TABLE3, TABLE4, TABLE5
+from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+
+
+def _sim(cell, mode, ways, kind, channels=1):
+    return ssd_bandwidth_mb_s(
+        SSDConfig(interface=InterfaceKind(kind), cell=CellType(cell),
+                  channels=channels, ways=ways), mode)
+
+
+def run_table3() -> list[dict]:
+    rows = []
+    for cell, by_mode in TABLE3.items():
+        for mode, by_ways in by_mode.items():
+            for ways, row in by_ways.items():
+                for kind, paper in zip(INTERFACE_ORDER, row):
+                    sim = _sim(cell, mode, ways, kind)
+                    rows.append({
+                        "name": f"t3/{cell}/{mode}/{ways}way/{kind}",
+                        "value": round(sim, 2), "paper": paper,
+                        "rel_err": round((sim - paper) / paper, 4)})
+    return rows
+
+
+def run_table4() -> list[dict]:
+    rows = []
+    for cell, by_mode in TABLE4.items():
+        for mode, by_cw in by_mode.items():
+            for (channels, ways), row in by_cw.items():
+                for kind, paper in zip(INTERFACE_ORDER, row):
+                    sim = _sim(cell, mode, ways, kind, channels)
+                    rows.append({
+                        "name": f"t4/{cell}/{mode}/{channels}ch{ways}way/{kind}",
+                        "value": round(sim, 2),
+                        "paper": paper if paper is not None else "max(300)",
+                        "rel_err": (round((sim - paper) / paper, 4)
+                                    if paper is not None else 0.0)})
+    return rows
+
+
+def run_table5() -> list[dict]:
+    rows = []
+    for mode, by_ways in TABLE5.items():
+        for ways, row in by_ways.items():
+            for kind, paper in zip(INTERFACE_ORDER, row):
+                bw = _sim("slc", mode, ways, kind)
+                sim = energy_nj_per_byte(kind, bw)
+                rows.append({
+                    "name": f"t5/slc/{mode}/{ways}way/{kind}",
+                    "value": round(sim, 3), "paper": paper,
+                    "rel_err": round((sim - paper) / paper, 4)})
+    return rows

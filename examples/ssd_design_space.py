@@ -1,0 +1,43 @@
+"""Design-space exploration with the paper's SSD model (paper §5.3.2 +
+capacity planning for the training stack).
+
+    PYTHONPATH=src python examples/ssd_design_space.py
+"""
+
+from repro.core.interface import InterfaceKind
+from repro.core.nand import CellType
+from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+from repro.storage.kvoffload import plan_kv_offload
+from repro.storage.ssd_model import compare_interfaces, plan_geometry
+from repro.configs import get_arch
+
+
+def main():
+    print("== constant-capacity channel/way trade-off (paper Table 4, SLC read) ==")
+    for channels, ways in ((1, 16), (2, 8), (4, 4)):
+        row = []
+        for kind in InterfaceKind:
+            cfg = SSDConfig(interface=kind, cell=CellType.SLC,
+                            channels=channels, ways=ways)
+            row.append(f"{kind.value}={ssd_bandwidth_mb_s(cfg, 'read'):6.1f}")
+        print(f"  {channels}ch x {ways:2d}way : " + "  ".join(row) + " MB/s")
+
+    print("\n== checkpoint-stall planning: 2.7B params (minicpm), bf16+opt ==")
+    nbytes = int(2.7e9 * 2 * 3)
+    for budget in (60.0, 20.0, 5.0):
+        plan = plan_geometry(nbytes, budget_s=budget, mode="write")
+        print(f"  budget {budget:5.1f}s -> "
+              + (plan.describe() if plan else "no geometry fits"))
+
+    print("\n== interface choice for a 10 GiB dataloader shard refill ==")
+    for name, est in compare_interfaces(10 << 30, "read").items():
+        print(f"  {name:10s}: {est.seconds:6.1f} s  {est.energy_joules*1e3:7.1f} mJ")
+
+    print("\n== KV offload feasibility at 524288-token decode ==")
+    for arch_id in ("qwen2-0.5b", "recurrentgemma-9b", "xlstm-350m"):
+        plan = plan_kv_offload(get_arch(arch_id).config, 524288)
+        print(f"  {plan.note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import Arch, ShapeSpec, input_specs, smoke_batch  # noqa: F401
+from repro.configs.registry import ARCH_IDS, all_arches, get_arch  # noqa: F401

@@ -1,0 +1,121 @@
+"""Config substrate: shape grid, arch bundles, and dry-run input specs.
+
+Every assigned architecture file exposes:
+
+* ``CONFIG``  — the exact published configuration (full scale),
+* ``SMOKE``   — a reduced same-family config for CPU smoke tests,
+* ``ARCH``    — an :class:`Arch` bundle tying config + shape grid + notes.
+
+``input_specs`` builds ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a (config × shape) cell — the dry-run lowers against these, so
+no real allocation ever happens for full-scale configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, init_cache
+
+# The assigned LM shape grid (seq_len, global_batch).
+TRAIN_4K = ("train_4k", "train", 4096, 256)
+PREFILL_32K = ("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ("decode_32k", "decode", 32768, 128)
+LONG_500K = ("long_500k", "decode", 524288, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+    skip: str | None = None  # reason string when the cell is N/A
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    config: ModelConfig
+    smoke: ModelConfig
+    shapes: tuple[ShapeSpec, ...]
+    source: str = ""
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.config.name} has no shape {name}")
+
+
+def lm_shapes(*, long_context: bool, skip_reason: str = "full-attention O(S²) "
+              "— long_500k scoped to SSM/hybrid archs per assignment"
+              ) -> tuple[ShapeSpec, ...]:
+    cells = [ShapeSpec(*TRAIN_4K), ShapeSpec(*PREFILL_32K), ShapeSpec(*DECODE_32K)]
+    cells.append(ShapeSpec(*LONG_500K) if long_context
+                 else ShapeSpec(*LONG_500K[:4], skip=skip_reason))
+    return tuple(cells)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct only — never allocates)
+# ---------------------------------------------------------------------------
+
+
+def _token_spec(b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of this (arch × shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_mode == "embeddings":
+            batch = {"inputs": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype),
+                     "labels": _token_spec(b, s)}
+        else:
+            batch = {"inputs": _token_spec(b, s), "labels": _token_spec(b, s)}
+        if cfg.rope_kind == "mrope":
+            batch["position_ids"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype)
+        else:
+            inputs = _token_spec(b, s)
+        out = {"inputs": inputs}
+        if cfg.rope_kind == "mrope":
+            out["position_ids"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return out
+    # decode: one new token against a cache of seq_len positions
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    if cfg.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.cdtype)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    out = {"inputs": inputs, "cache": cache,
+           "index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.rope_kind == "mrope":
+        out["position_ids"] = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+    return out
+
+
+def smoke_batch(cfg: ModelConfig, *, batch: int = 2, seq: int = 16,
+                seed: int = 0) -> dict[str, jax.Array]:
+    """A real (allocated) tiny batch for smoke tests."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    if cfg.input_mode == "embeddings":
+        inputs = jax.random.normal(k1, (batch, seq, cfg.d_model), cfg.cdtype)
+    else:
+        inputs = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    labels = jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+    out = {"inputs": inputs, "labels": labels}
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+        out["position_ids"] = jnp.broadcast_to(pos[None], (3, batch, seq))
+    return out

@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import Arch
+
+_MODULES = {
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(name: str) -> Arch:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {', '.join(ARCH_IDS)}")
+    return importlib.import_module(_MODULES[name]).ARCH
+
+
+def all_arches() -> dict[str, Arch]:
+    return {name: get_arch(name) for name in ARCH_IDS}

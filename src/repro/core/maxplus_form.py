@@ -1,0 +1,78 @@
+"""The SSD channel event recurrence as (max,+) linear algebra.
+
+The per-page-op update of the event simulator (``repro.core.sim``)
+
+    ready   = chip_free[w] + cmd + pre                (eager)
+              round_start + (w+1)·cmd + pre           (batched)
+    bus'    = max(bus + slot, ready + slot)
+    chip'_w = bus' + post ;  chip'_j = chip_j ;  rs' = rs / bus
+
+is affine in the (max,+) semiring over the state vector
+
+    s = [bus_free, chip_free_0 .. chip_free_{W-1}, round_start]
+
+so one page op is a matvec  s' = A_i ⊗ s  with (A ⊗ s)_r = max_c (A_rc + s_c).
+The matrices are periodic in i with period 2·ways (way round-robin ×
+MLC lower/upper-page parity), so a whole trace is a fold over a periodic
+matrix sequence — the TPU-native replacement for the paper's sequential
+RTL co-simulation (DESIGN.md §2.1).  ``repro.kernels.maxplus`` evaluates
+the fold for thousands of design points in parallel.
+
+Fixed state size ``N_STATE`` (= MAX_WAYS + 2) keeps design points with
+different way counts batchable; unused chip rows are (max,+) identity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sim import MAX_WAYS, PageOpParams
+
+NEG = -1e30
+N_STATE = MAX_WAYS + 2      # bus, chips 0..15, round_start
+PERIOD = 2 * MAX_WAYS       # covers way round-robin × page parity for ways | 16
+
+
+def transition_matrices(op: PageOpParams, ways: int, policy: str = "eager",
+                        ) -> np.ndarray:
+    """[PERIOD, N_STATE, N_STATE] float32 (max,+) step matrices."""
+    assert MAX_WAYS % ways == 0, f"kernel path needs ways | {MAX_WAYS}, got {ways}"
+    bus, rs = 0, N_STATE - 1
+    mats = np.full((PERIOD, N_STATE, N_STATE), NEG, np.float32)
+    for i in range(PERIOD):
+        w = i % ways
+        post = op.post_lo_us if (i // ways) % 2 == 0 else op.post_hi_us
+        a = mats[i]
+        chip = 1 + w
+        if policy == "batched":
+            if w == 0:
+                a[bus, bus] = op.cmd_us + op.pre_us + op.slot_us
+                a[rs, bus] = 0.0
+            else:
+                a[bus, bus] = op.slot_us
+                a[bus, rs] = (w + 1) * op.cmd_us + op.pre_us + op.slot_us
+                a[rs, rs] = 0.0
+        else:  # eager
+            a[bus, bus] = op.slot_us
+            a[bus, chip] = op.cmd_us + op.pre_us + op.slot_us
+            a[rs, rs] = 0.0
+        # chip'_w = bus' + post  (same row as bus, shifted by post)
+        for c in range(N_STATE):
+            if a[bus, c] > NEG / 2:
+                a[chip, c] = a[bus, c] + post
+        for j in range(ways):
+            if j != w:
+                a[1 + j, 1 + j] = max(a[1 + j, 1 + j], 0.0)
+        for j in range(ways, MAX_WAYS):
+            a[1 + j, 1 + j] = 0.0
+    return mats
+
+
+def init_state() -> np.ndarray:
+    """All resources free at t=0 (round_start included)."""
+    return np.zeros((N_STATE,), np.float32)
+
+
+def end_time_from_state(state: np.ndarray) -> np.ndarray:
+    """Completion = max(bus, chip frees); exclude the round_start helper."""
+    return state[..., :N_STATE - 1].max(axis=-1)

@@ -1,0 +1,44 @@
+"""Plain-Python oracle for the channel event simulation.
+
+Used by unit/property tests to validate both the ``lax.scan`` engine and
+the Pallas (max,+) kernel.  Deliberately written as an explicit event loop
+with no vectorisation tricks.
+"""
+
+from __future__ import annotations
+
+from repro.core.sim import MAX_WAYS, PageOpParams
+
+
+def simulate_channel_ref(
+    op: PageOpParams,
+    ways: int,
+    n_pages: int,
+    batched: bool = False,
+) -> float:
+    """Completion time (us) of n_pages round-robin page ops on one channel."""
+    assert 1 <= ways <= MAX_WAYS
+    bus_free = 0.0
+    chip_free = [0.0] * ways
+    round_start = 0.0
+    for i in range(n_pages):
+        w = i % ways
+        rnd = i // ways
+        if w == 0:
+            round_start = bus_free
+        if batched:
+            ready = round_start + (w + 1) * op.cmd_us + op.pre_us
+        else:
+            ready = chip_free[w] + op.cmd_us + op.pre_us
+        start = max(bus_free, ready)
+        bus_free = start + op.slot_us
+        post = op.post_lo_us if rnd % 2 == 0 else op.post_hi_us
+        chip_free[w] = bus_free + post
+    return max(bus_free, max(chip_free))
+
+
+def bandwidth_ref_mb_s(
+    op: PageOpParams, ways: int, n_pages: int = 512, batched: bool = False
+) -> float:
+    end = simulate_channel_ref(op, ways, n_pages, batched)
+    return n_pages * op.data_bytes / end

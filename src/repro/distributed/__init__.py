@@ -1,0 +1,3 @@
+# Keep this package __init__ empty: repro.models.attention imports
+# repro.distributed.ctx at module load, and eagerly importing
+# partitioning here (which imports repro.models.transformer) would cycle.

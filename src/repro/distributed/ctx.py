@@ -1,0 +1,51 @@
+"""Activation-sharding context for model-internal constraints.
+
+Model code is mesh-agnostic; the launcher installs an
+:class:`ActivationSharding` context before tracing and blocks like
+attention call :func:`constrain` with *logical* dims ('batch', 'seq',
+None...).  Outside a context this is a no-op, so unit tests and CPU
+examples never touch mesh machinery.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: contextvars.ContextVar[tuple[Mesh, dict] | None] = \
+    contextvars.ContextVar("activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    """rules: logical dim name -> mesh axis (or axes tuple) or None."""
+    token = _RULES.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def constrain(x: jax.Array, dims: tuple) -> jax.Array:
+    """Constrain ``x`` so logical dim i maps per the installed rules."""
+    state = _RULES.get()
+    if state is None:
+        return x
+    mesh, rules = state
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axes_for(dim_name, dim_size):
+        axes = rules.get(dim_name) if dim_name is not None else None
+        if axes is None:
+            return None
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        prod = 1
+        for a in axes_t:
+            prod *= sizes[a]
+        return axes if dim_size % prod == 0 else None
+
+    spec = P(*(axes_for(d, s) for d, s in zip(dims, x.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,130 @@
+"""Causal / sliding-window GQA flash attention — Pallas TPU kernel.
+
+Layout ``[B, H, S, D]``.  Grid ``(B, H, Sq/BQ, Sk/BK)``: the innermost
+(kv) grid dimension is sequential on TPU, so the online-softmax state
+(m, l, acc) lives in VMEM scratch and survives across kv steps; the
+output tile is written once, on the final kv block of each q row.
+
+BlockSpecs keep one (BQ × D) query tile, one (BK × D) key/value tile and
+the (BQ × D) fp32 accumulator in VMEM — the classic flash working set.
+GQA maps query head ``h`` to kv head ``h // group`` in the k/v index
+maps, so no key/value replication is ever materialised.
+
+Causal masking is positional (``q_offset`` allows decode-style partial
+query windows); kv tiles strictly above the causal diagonal are skipped
+with ``pl.when`` — on TPU this halves causal-prefill MXU work, which the
+pure-jnp blockwise path cannot express.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bq: int, bk: int, kv_blocks: int,
+            causal: bool, window: int | None, q_offset: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        # newest query in this tile vs oldest key in the kv tile
+        block_needed = kb * bk <= q_offset + (qb + 1) * bq - 1
+    else:
+        block_needed = (kb >= -1)  # trivially true, as a traced value
+
+    @pl.when(block_needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [BQ, BK]
+        q_pos = (q_offset + qb * bq
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+        k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v,
+                                      preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kb == kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "q_offset",
+                     "interpret"))
+def flash_attention_bhsd(
+    q: jax.Array,           # [B, H, Sq, D]
+    k: jax.Array,           # [B, KVH, Sk, D]
+    v: jax.Array,           # [B, KVH, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    kv_blocks = sk // bk
+
+    kern = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(d), bq=bq, bk=bk, kv_blocks=kv_blocks,
+        causal=causal, window=window, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, sq // bq, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qb, kb: (b_, h_, qb, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qb, kb: (b_, h_ // group, kb, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qb, kb: (b_, h_ // group, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qb, kb: (b_, h_, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,35 @@
+"""jit'd public wrapper around the flash-attention kernel.
+
+Accepts the model's ``[B, S, kvH, G, D]`` grouped-query layout and the
+plain ``[B, H, S, D]`` layout; dispatches to the Pallas kernel
+(interpret=True on CPU — the TPU path just flips the flag).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
+                    block_k=128, q_offset=0, interpret=None):
+    """q: [B,S,kvH,G,D] or [B,H,S,D]; k/v: [B,S,kvH,D] or [B,KVH,S,D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grouped = q.ndim == 5
+    if grouped:
+        b, s, kvh, g, d = q.shape
+        qx = q.transpose(0, 2, 3, 1, 4).reshape(b, kvh * g, s, d)
+        kx = k.transpose(0, 2, 1, 3)
+        vx = v.transpose(0, 2, 1, 3)
+    else:
+        qx, kx, vx = q, k, v
+    out = flash_attention_bhsd(qx, kx, vx, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               q_offset=q_offset, interpret=interpret)
+    if grouped:
+        b, s, kvh, g, d = q.shape
+        return out.reshape(b, kvh, g, s, d).transpose(0, 3, 1, 2, 4)
+    return out

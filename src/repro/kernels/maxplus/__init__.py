@@ -1,0 +1,1 @@
+from repro.kernels.maxplus.ops import channel_end_time_maxplus, maxplus_fold  # noqa: F401

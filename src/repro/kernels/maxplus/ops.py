@@ -1,0 +1,53 @@
+"""Public op: SSD-channel completion time via the (max,+) Pallas kernel.
+
+``channel_end_time_maxplus`` is a drop-in alternative engine to
+``repro.core.sim._channel_end_time`` for batches of design points
+(ways must divide MAX_WAYS — the power-of-two sweep grid of the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.maxplus_form import (N_STATE, end_time_from_state, init_state,
+                                     transition_matrices)
+from repro.core.sim import PageOpParams
+from repro.kernels.maxplus.kernel import maxplus_fold_kernel
+from repro.kernels.maxplus.ref import maxplus_fold_ref
+
+
+def maxplus_fold(mats, s0, *, t_steps: int, use_kernel: bool = True,
+                 interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        return maxplus_fold_kernel(mats, s0, t_steps=t_steps, interpret=interpret)
+    return maxplus_fold_ref(mats, s0, t_steps=t_steps)
+
+
+def channel_end_time_maxplus(
+    ops: list[PageOpParams],
+    ways: list[int],
+    *,
+    n_pages: int,
+    policy: str = "eager",
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Completion times (us) for a batch of design points."""
+    mats = np.stack([transition_matrices(op, w, policy)
+                     for op, w in zip(ops, ways)])
+    s0 = np.broadcast_to(init_state(), (mats.shape[0], N_STATE)).copy()
+    final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
+                         t_steps=n_pages, use_kernel=use_kernel,
+                         interpret=interpret)
+    return end_time_from_state(np.asarray(final))
+
+
+def bandwidth_maxplus_mb_s(ops, ways, *, n_pages: int = 512,
+                           policy: str = "eager", **kw) -> np.ndarray:
+    end = channel_end_time_maxplus(ops, ways, n_pages=n_pages, policy=policy, **kw)
+    data = np.array([op.data_bytes for op in ops], np.float64)
+    return data * n_pages / np.asarray(end)

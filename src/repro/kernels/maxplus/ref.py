@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the (max,+) periodic fold."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxplus_fold_ref(mats: jax.Array, s0: jax.Array, *, t_steps: int) -> jax.Array:
+    """mats: [B, P, N, N]; s0: [B, N] -> [B, N] after t_steps ops."""
+    p = mats.shape[1]
+
+    def step(s, t):
+        a = mats[:, t % p]                                   # [B, N, N]
+        s = jnp.max(a + s[:, None, :], axis=-1)
+        return s, None
+
+    s, _ = jax.lax.scan(step, s0, jnp.arange(t_steps))
+    return s

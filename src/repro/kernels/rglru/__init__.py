@@ -1,0 +1,1 @@
+from repro.kernels.rglru.ops import rglru_linear_scan  # noqa: F401

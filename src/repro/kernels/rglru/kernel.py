@@ -1,0 +1,77 @@
+"""RG-LRU linear recurrence ``h_t = a_t·h_{t-1} + b_t`` — Pallas TPU kernel.
+
+Grid ``(B, R/BL, S/BS)`` with the sequence dimension innermost
+(sequential on TPU).  Each step scans one ``[BS, BL]`` tile:
+
+* intra-tile: Hillis–Steele inclusive scan over the affine maps
+  ``(a, b)`` — log₂(BS) fully-vectorised VPU passes (no per-row loop);
+* inter-tile: the 128-wide carry ``h`` lives in VMEM scratch and chains
+  tiles, exactly like the flash-attention accumulator.
+
+This is the TPU-native blocked form of ``jax.lax.associative_scan``
+(the pure-jnp oracle in ``ref.py``) with an O(S·log BS / BS) depth
+instead of O(S) — and it is the same shape the mLSTM/SSM family needs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, h_ref, *, bs: int, bl: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)      # [BS, BL]
+    b = b_ref[0].astype(jnp.float32)
+
+    # Hillis–Steele inclusive scan of affine maps along the tile rows:
+    # (a, b)[i] <- (a, b)[i-d] ⊕ (a, b)[i]  with ⊕ = compose-later
+    d = 1
+    while d < bs:
+        a_sh = jnp.concatenate([jnp.ones((d, bl), jnp.float32), a[:-d]], axis=0)
+        b_sh = jnp.concatenate([jnp.zeros((d, bl), jnp.float32), b[:-d]], axis=0)
+        b = b_sh * a + b
+        a = a_sh * a
+        d *= 2
+
+    h0 = h_ref[...]
+    h = a * h0[None, :] + b               # apply carry to every row
+    o_ref[0] = h.astype(o_ref.dtype)
+    h_ref[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_l", "interpret"))
+def rglru_scan_kernel(
+    a: jax.Array,   # [B, S, R] decay in (0, 1]
+    b: jax.Array,   # [B, S, R] input term
+    *,
+    block_s: int = 256,
+    block_l: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bsz, s, r = a.shape
+    bs = min(block_s, s)
+    bl = min(block_l, r)
+    assert s % bs == 0 and r % bl == 0, (s, bs, r, bl)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=bs, bl=bl),
+        grid=(bsz, r // bl, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bl), lambda b_, rb, sb: (b_, sb, rb)),
+            pl.BlockSpec((1, bs, bl), lambda b_, rb, sb: (b_, sb, rb)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bl), lambda b_, rb, sb: (b_, sb, rb)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, r), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bl,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

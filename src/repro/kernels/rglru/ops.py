@@ -1,0 +1,18 @@
+"""Public op for the RG-LRU blocked linear scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan_kernel
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+
+def rglru_linear_scan(a, b, *, use_kernel: bool = True, block_s: int = 256,
+                      interpret: bool | None = None):
+    """h_t = a_t h_{t-1} + b_t over axis 1; a, b: [B, S, R]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not use_kernel:
+        return rglru_scan_ref(a, b)
+    return rglru_scan_kernel(a, b, block_s=block_s, interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: jax.lax.associative_scan over the affine maps."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t · h_{t-1} + b_t with h_0 = 0; a, b: [B, S, R]."""
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h.astype(a.dtype)

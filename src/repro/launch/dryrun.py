@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture × input-shape × mesh) cell against
+512 placeholder host devices — the first two lines above MUST precede any
+other import (JAX locks the device count at first initialisation).
+
+For each cell we record to ``benchmarks/results/dryrun/<cell>.json``:
+
+* ``memory_analysis()``  — per-device argument/output/temp/peak bytes
+  (proves the cell fits the 16 GiB v5e HBM);
+* ``cost_analysis()``    — HLO FLOPs / bytes accessed;
+* collective traffic     — parsed from the optimized per-device HLO
+  (``repro.launch.hlo_analysis``), loop trip counts included;
+* model FLOPs (6·N·D train / 2·N·D prefill / 2·N·B decode, MoE-active-
+  aware) for the usefulness ratio in EXPERIMENTS.md §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.configs.base import input_specs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.steps import lower_cell
+from repro.models.transformer import ModelConfig, init_params
+from repro.train.optimizer import OptConfig
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def opt_config_for(cfg: ModelConfig) -> OptConfig:
+    # 8-bit moments let the 400B config fit one v5e-256 pod (DESIGN.md §6).
+    override = os.environ.get("REPRO_MOMENT_DTYPE")
+    if cfg.fsdp_units:
+        return OptConfig(moment_dtype=override or "int8")
+    return OptConfig(moment_dtype=override or "f32")
+
+
+def active_param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total_params, active_non_embedding_params) from abstract shapes."""
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = active = 0
+    moe_frac = (cfg.moe.top_k / cfg.moe.n_experts) if cfg.moe else 1.0
+
+    def visit(key_path, leaf):
+        nonlocal total, active
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in key_path)
+        total += leaf.size
+        if path.startswith("embed/"):
+            return
+        if "/ffn/" in path and re.search(r"/ffn/(wi|wg|wo)$", path) and cfg.moe \
+                and leaf.ndim == 4:  # stacked [U, E, ...] expert weights
+            active += int(leaf.size * moe_frac)
+            return
+        active += leaf.size
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    return int(total), int(active)
+
+
+def model_flops(cfg: ModelConfig, kind: str, seq: int, batch: int) -> float:
+    _, n_active = active_param_count(cfg)
+    if kind == "train":
+        return 6.0 * n_active * seq * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq * batch
+    return 2.0 * n_active * batch  # decode: one token per sequence
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        try:
+            v = getattr(mem, name)
+            out[name] = int(v() if callable(v) else v)
+        except Exception:
+            pass
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             outdir: pathlib.Path, force: bool = False,
+             grad_accum: int = 1, remat: str | None = None,
+             moe_mode: str | None = None, tag: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch_name}__{shape_name}__{mesh_name}{tag}"
+    outfile = outdir / f"{cell_id}.json"
+    if outfile.exists() and not force:
+        return json.loads(outfile.read_text())
+
+    arch = get_arch(arch_name)
+    cfg, shape = arch.config, arch.shape(shape_name)
+    if remat is not None or moe_mode is not None:
+        import dataclasses as _dc
+        kw = {}
+        if remat is not None:
+            kw["remat"] = remat
+        if moe_mode is not None:
+            kw["moe_shard_mode"] = moe_mode
+        cfg = _dc.replace(cfg, **kw)
+    rec: dict = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                 "kind": shape.kind, "seq_len": shape.seq_len,
+                 "global_batch": shape.global_batch}
+    if shape.skip:
+        rec.update(status="skipped", reason=shape.skip)
+        outfile.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh_chip_count(mesh)
+        total, active = active_param_count(cfg)
+        rec.update(chips=chips, params_total=total, params_active=active)
+
+        t0 = time.time()
+        lowered, _ = lower_cell(cfg, shape, mesh, ocfg=opt_config_for(cfg),
+                                grad_accum=grad_accum)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        cost = compiled.cost_analysis() or {}
+        mem = _mem_dict(compiled.memory_analysis())
+        text = compiled.as_text()
+        stats = hlo_analysis.analyze_module(text)
+
+        rec.update(
+            status="ok",
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            # loop-aware per-device terms (repro.launch.hlo_analysis)
+            dot_flops_per_device=stats.dot_flops,
+            traffic_bytes_per_device=stats.traffic_bytes,
+            collective_bytes_per_device=stats.collective_bytes,
+            collective_bytes_by_kind=stats.bytes_by_kind,
+            collective_counts=stats.count_by_kind,
+            loop_trip_counts=stats.trip_counts,
+            # raw XLA numbers for cross-checking (while bodies counted once!)
+            xla_flops_per_device=float(cost.get("flops", -1.0)),
+            xla_bytes_accessed_per_device=float(cost.get("bytes accessed", -1.0)),
+            memory=mem,
+            model_flops_global=model_flops(cfg, shape.kind, shape.seq_len,
+                                           shape.global_batch),
+            hlo_bytes=len(text),
+        )
+    except Exception as e:  # a failed cell is a bug — record it loudly
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    outfile.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--outdir", default=str(RESULTS_DIR))
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default=None, choices=(None, "none", "full", "dots"))
+    ap.add_argument("--moe-mode", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in get_arch(a).shapes:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    n_ok = n_skip = n_err = 0
+    for arch_name, shape_name in cells:
+        for multi in meshes:
+            rec = run_cell(arch_name, shape_name, multi, outdir, force=args.force,
+                           grad_accum=args.grad_accum, remat=args.remat,
+                           moe_mode=args.moe_mode, tag=args.tag)
+            status = rec["status"]
+            n_ok += status == "ok"
+            n_skip += status == "skipped"
+            n_err += status == "error"
+            msg = (f"[{status:7s}] {arch_name:28s} {shape_name:12s} "
+                   f"{'multi ' if multi else 'single'}")
+            if status == "ok":
+                gib = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+                ratio = (rec["model_flops_global"] /
+                         max(rec["dot_flops_per_device"] * rec["chips"], 1.0))
+                msg += (f" compile={rec['compile_s']:7.1f}s temp={gib:6.2f}GiB "
+                        f"coll={rec['collective_bytes_per_device']/2**30:7.2f}GiB "
+                        f"useful={ratio:5.2f}")
+            elif status == "error":
+                msg += " " + rec["error"][:120]
+            print(msg, flush=True)
+    print(f"dry-run: ok={n_ok} skipped={n_skip} error={n_err}", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

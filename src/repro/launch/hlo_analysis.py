@@ -1,0 +1,313 @@
+"""Roofline-term extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` is insufficient for scanned models: XLA
+counts a ``while`` body **once**, so a 24-unit ``lax.scan`` under-reports
+FLOPs/bytes/collectives by 24×.  This module parses the per-device HLO
+module into computations + a call graph, recovers loop trip counts from
+the loop-condition comparison constants, and accumulates:
+
+* ``dot_flops``        — 2·M·N·K per dot (batch dims included), loop-
+  multiplied, fusion-internal dots included with their caller's
+  multiplier;
+* ``traffic_bytes``    — Σ (operand + result bytes) over *memory-level*
+  ops (fusions, dots, copies, gathers/scatters, DUS, collectives) in
+  non-fused computations — an HBM-traffic estimate under the "fusions
+  touch memory once" model;
+* ``collective_bytes`` — Σ operand bytes per collective kind.
+
+All values are per-device (the module is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import re
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+# memory-level opcodes counted in traffic_bytes.  Deliberately restricted
+# to ops that stay memory-level after TPU-grade fusion (raw elementwise /
+# broadcast / reshape ops at the CPU top level would be fused on TPU and
+# would otherwise inflate the estimate severalfold).
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "sort",
+} | set(COLLECTIVES) | {c + "-start" for c in COLLECTIVES} | {"all-reduce-done"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+_CONST_RE = re.compile(r"[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _parse_instr(ln: str) -> tuple[str, str, str] | None:
+    """(name, type_str, opcode) from an instruction line, else None."""
+    m = _ASSIGN_RE.match(ln)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = ln[m.end():]
+    if rest.startswith("("):          # tuple type: balanced parens
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    mo = _OPCODE_RE.match(rest)
+    if not mo:
+        return None
+    return name, type_str, mo.group(1)
+
+
+def _shape_numel_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: dict[str, Instr] = dataclasses.field(default_factory=dict)
+    consts: list[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    dot_flops: float
+    traffic_bytes: float
+    collective_bytes: float
+    bytes_by_kind: dict[str, float]
+    count_by_kind: dict[str, int]
+    trip_counts: dict[str, int]
+
+    # kept for backwards compat with earlier records
+    @property
+    def total_bytes(self) -> float:
+        return self.collective_bytes
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    entry_name = ""
+    for ln in text.splitlines():
+        if ln and not ln[0].isspace():       # computation headers at column 0
+            hdr = _COMP_HDR_RE.match(ln)
+            if hdr and ln.rstrip().endswith("{"):
+                current = Computation(hdr.group(2), is_entry=bool(hdr.group(1)))
+                comps[current.name] = current
+                if current.is_entry:
+                    entry_name = current.name
+                continue
+        if current is None:
+            continue
+        parsed = _parse_instr(ln)
+        if parsed:
+            name, type_str, opcode = parsed
+            current.instrs[name] = Instr(name, type_str.strip(), opcode, ln)
+        for c in _CONST_RE.findall(ln):
+            current.consts.append(int(c))
+    return comps, entry_name
+
+
+_CALL_ATTRS = (
+    ("body", True), ("calls", False), ("to_apply", False),
+    ("branch_computations", False), ("condition", None),
+)
+
+
+def _call_edges(comps: dict[str, Computation]):
+    """Yields (caller, callee, trip, fused) per call-graph edge."""
+    for comp in comps.values():
+        for ins in comp.instrs.values():
+            ln = ins.line
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                trip = 1
+                if mc and mc.group(1) in comps:
+                    big = [c for c in comps[mc.group(1)].consts if c > 1]
+                    trip = max(big) if big else 1
+                if mb:
+                    yield comp.name, mb.group(1), trip, False
+                if mc:
+                    yield comp.name, mc.group(1), trip, True  # cond: tiny, fused-ish
+            elif ins.opcode in ("fusion", "reduce", "sort", "map", "scatter",
+                                "reduce-window", "select-and-scatter", "call",
+                                "all-reduce", "all-reduce-start", "reduce-scatter"):
+                for attr in ("calls", "to_apply"):
+                    m = re.search(attr + r"=%?([\w\.\-]+)", ln)
+                    if m:
+                        fused = ins.opcode != "call"
+                        yield comp.name, m.group(1), 1, fused
+            elif ins.opcode == "conditional":
+                for m in re.finditer(r"%?([\w\.\-]+)", ln.split("branch_computations", 1)[-1]):
+                    if m.group(1) in comps:
+                        yield comp.name, m.group(1), 1, False
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    out_elems = 1
+    for d in _shape_dims(ins.type_str):
+        out_elems *= d
+    mk = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not mk:
+        return 2.0 * out_elems  # degenerate
+    # operand 0 name
+    args = ins.line.split(ins.opcode + "(", 1)[1]
+    m0 = re.match(r"\s*%?([\w\.\-]+)", args)
+    contract = 1
+    if m0 and m0.group(1) in comp.instrs:
+        lhs_dims = _shape_dims(comp.instrs[m0.group(1)].type_str)
+        for idx in mk.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _operand_list(comp: Computation, ins: Instr) -> list[int]:
+    args = ins.line.split(ins.opcode + "(", 1)[-1]
+    depth, buf = 1, []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    names = re.findall(r"%?([\w\.\-]+)", "".join(buf))
+    return [_shape_numel_bytes(comp.instrs[n].type_str)
+            for n in names if n in comp.instrs]
+
+
+def _operand_bytes(comp: Computation, ins: Instr) -> int:
+    return sum(_operand_list(comp, ins))
+
+
+def _op_traffic_bytes(comp: Computation, ins: Instr) -> int:
+    """HBM traffic estimate for one op.  Slicing ops move only the slice,
+    not the buffer they index into (a dynamic-slice inside a 10k-trip scan
+    must not be charged the whole carried buffer every iteration)."""
+    ops = _operand_list(comp, ins)
+    res = _shape_numel_bytes(ins.type_str)
+    if ins.opcode == "dynamic-slice":
+        return 2 * res                       # read slice + write result
+    if ins.opcode == "dynamic-update-slice":
+        upd = sum(ops[1:])                   # update (+ tiny indices)
+        return 2 * upd                       # read-modify-write of the region
+    if ins.opcode == "gather":
+        return sum(ops[1:]) + 2 * res        # indices + gathered rows + result
+    if ins.opcode == "scatter":
+        return sum(ops[1:]) * 2              # indices + updates r/w
+    return sum(ops) + res
+
+
+def analyze_module(text: str) -> ModuleStats:
+    comps, entry = parse_module(text)
+    edges = list(_call_edges(comps))
+
+    # accumulate multipliers from the entry down the call DAG (Kahn order
+    # so multi-caller computations see every contribution exactly once)
+    children = collections.defaultdict(list)
+    indeg = collections.Counter()
+    for caller, callee, trip, fz in edges:
+        children[caller].append((callee, trip, fz))
+        indeg[callee] += 1
+    mult: dict[str, float] = collections.defaultdict(float)
+    fused: dict[str, bool] = {}
+    if entry:
+        mult[entry] = 1.0
+        fused[entry] = False
+    ready = [c for c in comps if indeg[c] == 0]
+    topo = []
+    while ready:
+        cur = ready.pop()
+        topo.append(cur)
+        for callee, _t, _f in children.get(cur, ()):
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                ready.append(callee)
+    for cur in topo:
+        for callee, trip, fz in children.get(cur, ()):
+            mult[callee] += mult[cur] * trip
+            callee_fused = fused.get(cur, True) or fz
+            fused[callee] = fused.get(callee, True) and callee_fused
+
+    dot_flops = 0.0
+    traffic = 0.0
+    coll_bytes: dict[str, float] = collections.defaultdict(float)
+    coll_counts: dict[str, int] = collections.defaultdict(int)
+    trips = {callee: trip for _, callee, trip, _ in edges if trip > 1}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs.values():
+            if ins.opcode in ("dot", "convolution"):
+                dot_flops += _dot_flops(comp, ins) * m
+            kind = ins.opcode.removesuffix("-start")
+            if kind in COLLECTIVES:
+                ob = _operand_bytes(comp, ins) or _shape_numel_bytes(ins.type_str)
+                coll_bytes[kind] += ob * m
+                coll_counts[kind] += 1
+            if not fused.get(comp.name, True) and ins.opcode in _TRAFFIC_OPS:
+                traffic += _op_traffic_bytes(comp, ins) * m
+
+    return ModuleStats(
+        dot_flops=dot_flops,
+        traffic_bytes=traffic,
+        collective_bytes=sum(coll_bytes.values()),
+        bytes_by_kind=dict(coll_bytes),
+        count_by_kind=dict(coll_counts),
+        trip_counts=trips,
+    )
+
+
+def analyze_collectives(text: str):  # backwards-compatible alias
+    return analyze_module(text)

@@ -1,0 +1,29 @@
+"""Production mesh definitions (TPU v5e-256 pods).
+
+``make_production_mesh`` is a function (not a module constant) so that
+importing this module never touches JAX device state — required because
+the dry-run must set ``XLA_FLAGS=--xla_force_host_platform_device_count``
+before the first JAX initialisation.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Development mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0, (n, model)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh: jax.sharding.Mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,221 @@
+"""jit-able train / prefill / decode steps with full sharding specs.
+
+These are the exact computations the dry-run lowers and the trainer /
+serving engine execute: ``train_step`` is forward + backward + AdamW
+update (donated state), ``serve_decode`` one token against the cache,
+``serve_prefill`` the batched prompt pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeSpec, input_specs
+from repro.distributed import ctx
+from repro.distributed import partitioning as part
+from repro.models.transformer import (ModelConfig, decode_step, init_cache,
+                                      init_params, loss_fn, prefill)
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+from repro.train.schedules import constant
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(cfg: ModelConfig, ocfg: OptConfig, key: jax.Array) -> Params:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(ocfg, params)}
+
+
+def abstract_train_state(cfg: ModelConfig, ocfg: OptConfig) -> Params:
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, ocfg, jax.random.PRNGKey(0)))
+
+
+def _flat_with_paths(tree) -> dict[str, Any]:
+    out = {}
+
+    def record(key_path, leaf):
+        out[part._path_str(key_path)] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        record, tree, is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def train_state_pspecs(cfg: ModelConfig, ocfg: OptConfig, mesh, state_shape: Params,
+                       *, zero1: bool = True) -> Params:
+    """PartitionSpecs for the {'params', 'opt'} train state."""
+    pspecs = part.param_pspecs(cfg, mesh, state_shape["params"])
+    zdiv = part.axis_size(mesh, part.FSDP_AXIS)
+    flat_specs = _flat_with_paths(pspecs)
+    flat_shapes = {k: v.shape for k, v in _flat_with_paths(state_shape["params"]).items()}
+
+    def opt_spec(key_path, leaf):
+        path = part._path_str(key_path)
+        if path == "count":
+            return P()
+        head, rest = path.split("/", 1)
+        suffix = None
+        if rest not in flat_specs and (rest.endswith("/q") or rest.endswith("/scale")):
+            rest, suffix = rest.rsplit("/", 1)  # int8 moment {'q','scale'} leaves
+        base = flat_specs[rest]
+        parts = list(base) + [None] * (len(flat_shapes[rest]) - len(base))
+        if suffix == "scale":
+            parts[-1] = None  # scale dim is size-1
+        spec = P(*parts)
+        return part.zero1_spec(spec, leaf.shape, zdiv) if zero1 else spec
+
+    opt_specs = jax.tree_util.tree_map_with_path(opt_spec, state_shape["opt"])
+    return {"params": pspecs, "opt": opt_specs}
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, ocfg: OptConfig,
+                    schedule: Callable[[jax.Array], jax.Array] | None = None,
+                    grad_accum: int = 1):
+    """forward+backward (+ microbatch accumulation) + AdamW update.
+
+    With ``grad_accum > 1`` the global batch is split into microbatches
+    scanned sequentially; gradients accumulate in fp32.  Under pjit the
+    per-microbatch gradient reduce-scatter overlaps the next
+    microbatch's backward — the standard comm/compute overlap trick
+    (and the collective-level analogue of the paper's decoupled
+    control/data timing, DESIGN.md §2.1).
+    """
+    schedule = schedule or constant(3e-4)
+
+    def train_step(state: Params, batch: dict[str, jax.Array]):
+        def lossf(params, mb):
+            return loss_fn(cfg, params, mb)
+
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(lossf, has_aux=True)(
+                state["params"], batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def mb_step(acc, mb):
+                (l, m), g = jax.value_and_grad(lossf, has_aux=True)(
+                    state["params"], mb)
+                gacc, lacc, ceacc = acc
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l, ceacc + m["ce"]), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state["params"])
+            (gsum, lsum, cesum), _ = jax.lax.scan(
+                mb_step, (zero_g, jnp.zeros((), jnp.float32),
+                          jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {"ce": cesum / grad_accum,
+                       "moe_aux": jnp.zeros((), jnp.float32),
+                       "tokens": jnp.asarray(batch["labels"].size, jnp.int32)}
+
+        new_params, new_opt, info = adamw_update(
+            ocfg, schedule, state["params"], grads, state["opt"])
+        metrics = dict(metrics)
+        metrics.update(info)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_serve_decode(cfg: ModelConfig):
+    def serve_decode(params, cache, inputs, index, position_ids=None):
+        return decode_step(cfg, params, cache, inputs, index, position_ids)
+    return serve_decode
+
+
+def make_serve_prefill(cfg: ModelConfig, max_seq: int):
+    def serve_prefill(params, inputs, position_ids=None):
+        return prefill(cfg, params, inputs, max_seq=max_seq, position_ids=position_ids)
+    return serve_prefill
+
+
+# ---------------------------------------------------------------------------
+# jit assembly per (arch × shape × mesh) cell — used by dry-run & trainer
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+               ocfg: OptConfig | None = None, zero1: bool = True,
+               grad_accum: int = 1):
+    """Lower one (arch × shape) cell on ``mesh``. Returns (lowered, meta)."""
+    ocfg = ocfg or OptConfig()
+    specs = input_specs(cfg, shape)
+    ns = functools.partial(part.shardings, mesh)
+
+    rules = part.activation_rules(cfg, mesh, shape.global_batch)
+    if shape.kind == "train":
+        state_shape = abstract_train_state(cfg, ocfg)
+        state_specs = train_state_pspecs(cfg, ocfg, mesh, state_shape, zero1=zero1)
+        batch_specs = part.batch_pspecs(cfg, mesh, specs["batch"])
+        metric_specs = {"ce": P(), "moe_aux": P(), "tokens": P(),
+                        "lr": P(), "grad_norm": P(), "loss": P()}
+        step = make_train_step(cfg, ocfg, grad_accum=grad_accum)
+        jitted = jax.jit(step,
+                         in_shardings=(ns(state_specs), ns(batch_specs)),
+                         out_shardings=(ns(state_specs), ns(metric_specs)),
+                         donate_argnums=(0,))
+        with ctx.activation_sharding(mesh, rules):
+            lowered = jitted.lower(state_shape, specs["batch"])
+        return lowered, {"state_shape": state_shape, "state_specs": state_specs}
+
+    params_shape = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    param_specs = part.param_pspecs(cfg, mesh, params_shape)
+
+    if shape.kind == "prefill":
+        step = make_serve_prefill(cfg, shape.seq_len)
+        in_specs = [ns(param_specs), ns(part.batch_pspecs(cfg, mesh, {"inputs": specs["inputs"]}))["inputs"]]
+        args = [params_shape, specs["inputs"]]
+        if "position_ids" in specs:
+            in_specs.append(ns(part.batch_pspecs(cfg, mesh, {"position_ids": specs["position_ids"]}))["position_ids"])
+            args.append(specs["position_ids"])
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_specs = part.cache_pspecs(cfg, mesh, cache_shape)
+        blogit = part.batch_axes(mesh, shape.global_batch)
+        out_specs = (NamedSharding(mesh, P(blogit, None, "model")), ns(cache_specs))
+        jitted = jax.jit(step, in_shardings=tuple(in_specs), out_shardings=out_specs)
+        with ctx.activation_sharding(mesh, rules):
+            lowered = jitted.lower(*args)
+        return lowered, {}
+
+    # decode
+    cache_shape = specs["cache"]
+    cache_specs = part.cache_pspecs(cfg, mesh, cache_shape)
+    step = make_serve_decode(cfg)
+    binp = part.batch_axes(mesh, shape.global_batch)
+    inp_spec = NamedSharding(
+        mesh, P(binp, None, None) if specs["inputs"].ndim == 3 else P(binp, None))
+    in_specs = [ns(param_specs), ns(cache_specs), inp_spec,
+                NamedSharding(mesh, P())]
+    args = [params_shape, cache_shape, specs["inputs"], specs["index"]]
+    if "position_ids" in specs:
+        in_specs.append(NamedSharding(mesh, P(None, binp, None)))
+        args.append(specs["position_ids"])
+    out_specs = (NamedSharding(mesh, P(binp, None, "model")), ns(cache_specs))
+    jitted = jax.jit(step, in_shardings=tuple(in_specs), out_shardings=out_specs,
+                     donate_argnums=(1,))
+    with ctx.activation_sharding(mesh, rules):
+        lowered = jitted.lower(*args)
+    return lowered, {}

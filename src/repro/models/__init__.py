@@ -1,0 +1,5 @@
+"""Model zoo: composable decoder stacks for the ten assigned architectures."""
+
+from repro.models.transformer import (  # noqa: F401
+    LayerSpec, ModelConfig, decode_step, forward, init_cache, init_params,
+    loss_fn, param_count, prefill)

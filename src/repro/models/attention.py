@@ -1,0 +1,254 @@
+"""Attention: GQA/MHA, RoPE/M-RoPE, sliding-window, prefill + decode paths.
+
+Grouped-native projection layout (sharding-critical design decision):
+``wq`` is ``[d, kvH, G, Dh]`` (kv-head × group factored out **in the
+parameter**, never by reshape) and K/V are ``[d, kvH, Dh]``.  GSPMD can
+then shard either the ``kvH`` axis (GQA with ≥8 kv heads) or the ``G``
+axis (kv=1/2 archs) over the ``model`` mesh axis without any reshape of
+a sharded dimension — reshapes across padded sharded dims would force
+all-gathers.  See ``repro.distributed.partitioning``.
+
+Two full-sequence implementations:
+
+* ``_attn_plain``     — materialises [B, kvH, G, Sq, Sk] scores (fp32
+  softmax).  Used for short sequences.
+* ``_attn_blockwise`` — streaming log-sum-exp over KV blocks (the
+  flash-attention recurrence in pure jnp, ``lax.scan`` over blocks).
+  Peak activation memory O(S · kv_block) instead of O(S²); also the
+  reference semantics for the Pallas kernel
+  (``repro.kernels.flash_attention``), which replaces it on TPU.
+
+Decode (``attn_decode``) is a single-token query against a KV cache laid
+out ``[B, kvH, S_cache, Dh]``; sliding-window layers use a ring buffer
+with an explicit per-slot absolute-position array so RoPE and masking
+stay correct after wrap-around.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models import rope as rope_mod
+from repro.models.layers import Params, dense_init
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    out_bias: bool = False
+    rope_kind: str = "rope"           # 'rope' | 'mrope' | 'none'
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    window: int | None = None         # sliding-window size (None = global)
+    softcap: float | None = None      # attention-logit soft cap
+    kv_block: int = 1024              # blockwise KV tile
+    blockwise_threshold: int = 8192   # use blockwise when Sk >= this
+
+    @property
+    def q_groups(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+def init_attention(key: jax.Array, d: int, spec: AttnSpec, dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    h, kvh, g, hd = spec.n_heads, spec.n_kv_heads, spec.q_groups, spec.head_dim
+    p: Params = {
+        "wq": dense_init(kq, d, h * hd, shape=(d, kvh, g, hd), dtype=dtype),
+        "wk": dense_init(kk, d, kvh * hd, shape=(d, kvh, hd), dtype=dtype),
+        "wv": dense_init(kv, d, kvh * hd, shape=(d, kvh, hd), dtype=dtype),
+        "wo": dense_init(ko, h * hd, d, shape=(kvh, g, hd, d), dtype=dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((kvh, g, hd), dtype)
+        p["bk"] = jnp.zeros((kvh, hd), dtype)
+        p["bv"] = jnp.zeros((kvh, hd), dtype)
+    if spec.out_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, spec: AttnSpec, x: jax.Array, dtype):
+    """q: [B, S, kvH, G, Dh]; k, v: [B, S, kvH, Dh]."""
+    q = jnp.einsum("bsd,dhgk->bshgk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if spec.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    return q, k, v
+
+
+def _apply_positional(spec: AttnSpec, q, k, positions, position_ids):
+    if spec.rope_kind == "rope":
+        q = rope_mod.apply_rope(q, positions, theta=spec.rope_theta)
+        k = rope_mod.apply_rope(k, positions, theta=spec.rope_theta)
+    elif spec.rope_kind == "mrope":
+        q = rope_mod.apply_mrope(q, position_ids, spec.mrope_sections, theta=spec.rope_theta)
+        k = rope_mod.apply_mrope(k, position_ids, spec.mrope_sections, theta=spec.rope_theta)
+    return q, k
+
+
+def _mask_bias(q_pos, k_pos, window):
+    """[B, Sq, Sk] additive bias from causal (+ optional window) mask."""
+    ok = q_pos[:, :, None] >= k_pos[:, None, :]
+    if window is not None:
+        ok &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _softcap(scores, cap):
+    return cap * jnp.tanh(scores / cap) if cap is not None else scores
+
+
+def _out_proj(p: Params, out: jax.Array, dtype) -> jax.Array:
+    """out: [B, S, kvH, G, Dh] -> [B, S, d]."""
+    y = jnp.einsum("bshgk,hgkd->bsd", out.astype(dtype), p["wo"].astype(dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(dtype)
+    return y
+
+
+def _attn_plain(spec: AttnSpec, q, k, v, q_pos, k_pos):
+    hd = spec.head_dim
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", q, k).astype(jnp.float32)
+    scores = _softcap(scores * (1.0 / math.sqrt(hd)), spec.softcap)
+    scores = scores + _mask_bias(q_pos, k_pos, spec.window)[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+
+
+def _attn_blockwise(spec: AttnSpec, q, k, v, q_pos, k_pos):
+    """Streaming softmax over KV blocks; O(S·kv_block) live memory."""
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    blk = min(spec.kv_block, sk)
+    pad = (-sk) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=jnp.iinfo(jnp.int32).max)
+    n_blk = k.shape[1] // blk
+    scale = 1.0 / math.sqrt(hd)
+
+    k_blocks = jnp.moveaxis(k.reshape(b, n_blk, blk, kvh, hd), 1, 0)
+    v_blocks = jnp.moveaxis(v.reshape(b, n_blk, blk, kvh, hd), 1, 0)
+    p_blocks = jnp.moveaxis(k_pos.reshape(b, n_blk, blk), 1, 0)
+
+    def step(carry, blk_in):
+        m, l, acc = carry
+        kb, vb, pb = blk_in
+        s = jnp.einsum("bqhgk,bshk->bhgqs", q, kb).astype(jnp.float32) * scale
+        s = _softcap(s, spec.softcap)
+        s = s + _mask_bias(q_pos, pb, spec.window)[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(pexp, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqs,bshk->bhgqk", pexp.astype(vb.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, kvh, g, sq), jnp.float32),
+        jnp.zeros((b, kvh, g, sq, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, (k_blocks, v_blocks, p_blocks))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]          # [B, kvH, G, Sq, Dh]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)   # [B, Sq, kvH, G, Dh]
+
+
+def attn_full(
+    p: Params,
+    spec: AttnSpec,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    position_ids: jax.Array | None = None,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Full-sequence (training / prefill) attention. x: [B, S, d]."""
+    x = x.astype(compute_dtype)
+    q, k, v = _project_qkv(p, spec, x, compute_dtype)
+    q, k = _apply_positional(spec, q, k, positions, position_ids)
+    # context-parallel fallback: when heads don't divide the TP axis the
+    # launcher's activation rules shard the *query sequence* instead
+    # (no-op outside an activation_sharding context / when seq % tp != 0)
+    q = constrain(q, ("batch", "seq", None, None, None))
+    q_pos = constrain(positions, ("batch", "seq"))
+    if x.shape[1] >= spec.blockwise_threshold:
+        out = _attn_blockwise(spec, q, k, v, q_pos, positions)
+    else:
+        out = _attn_plain(spec, q, k, v, q_pos, positions)
+    return _out_proj(p, out, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+
+def init_attn_cache(
+    batch: int, spec: AttnSpec, max_seq: int, dtype=jnp.bfloat16
+) -> Params:
+    """KV cache. Windowed layers get a ring buffer of ``window`` slots with
+    an absolute-position side array (-1 = empty)."""
+    slots = min(max_seq, spec.window) if spec.window is not None else max_seq
+    return {
+        "k": jnp.zeros((batch, spec.n_kv_heads, slots, spec.head_dim), dtype),
+        "v": jnp.zeros((batch, spec.n_kv_heads, slots, spec.head_dim), dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def attn_decode(
+    p: Params,
+    spec: AttnSpec,
+    x: jax.Array,
+    cache: Params,
+    index: jax.Array,
+    *,
+    position_ids: jax.Array | None = None,
+    compute_dtype=jnp.bfloat16,
+) -> tuple[jax.Array, Params]:
+    """One decode step. x: [B, 1, d]; index: scalar int32 absolute position."""
+    b = x.shape[0]
+    x = x.astype(compute_dtype)
+    q, k, v = _project_qkv(p, spec, x, compute_dtype)   # q: [B,1,kvH,G,Dh]
+    positions = jnp.broadcast_to(index[None, None], (b, 1)).astype(jnp.int32)
+    q, k = _apply_positional(spec, q, k, positions, position_ids)
+
+    slots = cache["k"].shape[2]
+    slot = (index % slots).astype(jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype), slot, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype), slot, axis=2)
+    pos_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], positions, slot, axis=1)
+
+    hd = spec.head_dim
+    scores = jnp.einsum("bqhgk,bhsk->bhgqs", q, k_cache.astype(q.dtype))
+    scores = scores.astype(jnp.float32) * (1.0 / math.sqrt(hd))
+    scores = _softcap(scores, spec.softcap)
+    ok = (pos_cache >= 0) & (pos_cache <= index)
+    if spec.window is not None:
+        ok &= (index - pos_cache) < spec.window
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bhgqs,bhsk->bqhgk", probs, v_cache.astype(compute_dtype))
+    y = _out_proj(p, out, compute_dtype)
+    return y, {"k": k_cache, "v": v_cache, "pos": pos_cache}

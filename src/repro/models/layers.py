@@ -1,0 +1,161 @@
+"""Core neural-net layers shared by every architecture in the zoo.
+
+Pure-JAX (no flax/optax in this environment): parameters are plain pytrees
+of ``jnp.ndarray``; every layer is an ``init_*`` function returning a param
+dict plus an ``apply``-style pure function.  All matmul-bearing layers take
+an explicit ``compute_dtype`` so the stack runs mixed-precision (bf16
+compute / configurable param dtype) exactly like a production trainer.
+
+Initialization follows standard LM practice: truncated-normal fan-in
+scaling for projections, ones for norm scales, zeros for biases.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, *, scale: float | None = None,
+               dtype=jnp.float32, shape: tuple[int, ...] | None = None) -> jax.Array:
+    """Fan-in scaled truncated normal; optional explicit leading shape."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    shape = shape if shape is not None else (d_in, d_out)
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, *, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    orig_dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(orig_dtype)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32) -> Params:
+    return init_rmsnorm(d, dtype) if kind == "rms" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rms" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# feed-forward (gated SwiGLU/GeGLU or classic 2-layer MLP)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, d: int, d_ff: int, *, gated: bool, bias: bool = False,
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {"wi": dense_init(ks[0], d, d_ff, dtype=dtype),
+                 "wo": dense_init(ks[1], d_ff, d, dtype=dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, d_ff, dtype=dtype)
+    if bias:
+        p["bi"] = jnp.zeros((d_ff,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, *, act: str, compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = x.astype(compute_dtype)
+    h = x @ p["wi"].astype(compute_dtype)
+    if "bi" in p:
+        h = h + p["bi"].astype(compute_dtype)
+    h = ACTIVATIONS[act](h)
+    if "wg" in p:
+        h = h * (x @ p["wg"].astype(compute_dtype))
+    out = h @ p["wo"].astype(compute_dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(compute_dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# logits head / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": embed_init(key, vocab, d, dtype=dtype)}
+
+
+def embed(p: Params, ids: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+
+
+def init_head(key: jax.Array, d: int, vocab: int, dtype=jnp.float32) -> Params:
+    return {"w": dense_init(key, d, vocab, dtype=dtype)}
+
+
+def logits_head(w: jax.Array, x: jax.Array, *, softcap: float | None = None,
+                compute_dtype=jnp.bfloat16,
+                valid_vocab: int | None = None) -> jax.Array:
+    """``w`` is ``[V, d]`` (tied-embedding layout) or ``[d, V]``.
+
+    ``valid_vocab`` masks Megatron-style vocab-padding columns to -inf so
+    padded entries never receive probability mass.
+    """
+    w = w.astype(compute_dtype)
+    if w.shape[0] != x.shape[-1]:  # [V, d] tied layout
+        logits = jnp.einsum("...d,vd->...v", x.astype(compute_dtype), w)
+    else:
+        logits = x.astype(compute_dtype) @ w
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < valid_vocab, logits, -1e30)
+    return logits

@@ -1,0 +1,172 @@
+"""Mixture-of-Experts FFN with capacity-based token dropping.
+
+Design notes (scalability — see DESIGN.md §6):
+
+* **Gather dispatch / scatter-add combine.**  The classic Mesh-TF one-hot
+  ``einsum`` dispatch costs O(T·E·C·d) FLOPs and would dominate the real
+  expert compute for top-8/small-expert configs (granite-moe: ~1000×
+  overcount).  We instead build an integer routing table ``src[b, e, c]``
+  (token index feeding expert e's slot c) with a scatter, *gather* expert
+  inputs (zero FLOPs), run the batched expert FFN
+  ``[G, E, C, d] × [E, d, f]``, and *scatter-add* weighted outputs back.
+  Under GSPMD with experts sharded over the ``model`` mesh axis this
+  yields per-shard partial outputs + one all-reduce per MoE layer —
+  the same collective cost as a Megatron FFN.
+
+* **Grouping.**  Capacity is allocated per token *group*.  For training /
+  prefill a group is one sequence row (aligned with the batch sharding so
+  the routing cumsum stays local); for single-token decode the whole batch
+  forms one group (otherwise capacity would round up to ≥1 slot per
+  expert per token — an E× compute overcount).
+
+* **Router.**  Softmax top-k with renormalised weights (+ optional
+  sigmoid scaling, Llama-4 style) and an optional always-on shared
+  expert.  Dropped tokens (capacity overflow) fall through on the
+  residual path, standard for capacity-based MoE.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models.layers import ACTIVATIONS, Params, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden width
+    shared_d_ff: int = 0            # 0 = no shared expert
+    capacity_factor: float = 1.25
+    router_scale: str = "softmax"   # 'softmax' | 'sigmoid' (llama4-style)
+    gated: bool = True
+    act: str = "silu"
+
+
+def init_moe(key: jax.Array, d: int, spec: MoESpec, dtype=jnp.float32) -> Params:
+    kr, ki, kg, ko, s1, s2, s3 = jax.random.split(key, 7)
+    e, f = spec.n_experts, spec.d_ff
+    p: Params = {
+        "router": dense_init(kr, d, e, dtype=jnp.float32),  # router kept fp32
+        "wi": dense_init(ki, d, f, shape=(e, d, f), dtype=dtype),
+        "wo": dense_init(ko, f, d, shape=(e, f, d), dtype=dtype),
+    }
+    if spec.gated:
+        p["wg"] = dense_init(kg, d, f, shape=(e, d, f), dtype=dtype)
+    if spec.shared_d_ff:
+        p["shared_wi"] = dense_init(s1, d, spec.shared_d_ff, dtype=dtype)
+        p["shared_wg"] = dense_init(s2, d, spec.shared_d_ff, dtype=dtype)
+        p["shared_wo"] = dense_init(s3, spec.shared_d_ff, d, dtype=dtype)
+    return p
+
+
+def capacity_per_group(group_tokens: int, spec: MoESpec) -> int:
+    c = math.ceil(group_tokens * spec.top_k * spec.capacity_factor / spec.n_experts)
+    return max(1, c)
+
+
+def _route(router_w: jax.Array, x: jax.Array, spec: MoESpec):
+    """x: [G, T, d] -> (weights [G, T, K] fp32, ids [G, T, K] int32)."""
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32), router_w)
+    if spec.router_scale == "sigmoid":
+        weights, ids = jax.lax.top_k(logits, spec.top_k)
+        weights = jax.nn.sigmoid(weights)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, ids = jax.lax.top_k(probs, spec.top_k)
+        weights = weights / jnp.maximum(jnp.sum(weights, -1, keepdims=True), 1e-9)
+    return weights, ids
+
+
+def _routing_tables(ids, weights, spec: MoESpec, capacity: int):
+    """Build src-token and weight tables per expert slot.
+
+    ids/weights: [G, T, K]  ->  src [G, E, C] int32 (T*K = dropped sentinel),
+                               w   [G, E, C] fp32.
+    """
+    g, t, k = ids.shape
+    e, c = spec.n_experts, capacity
+    ids_f = ids.reshape(g, t * k)
+    w_f = weights.reshape(g, t * k)
+    tok_f = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[:, None], (t, k)).reshape(t * k)
+
+    onehot = jax.nn.one_hot(ids_f, e, dtype=jnp.int32)            # [G, TK, E]
+    pos = (jnp.cumsum(onehot, axis=1) - 1) * onehot               # slot at the hot position
+    pos_f = jnp.sum(pos, axis=-1)                                 # [G, TK]
+    keep = pos_f < c
+
+    slot = jnp.where(keep, pos_f, c)                              # overflow -> OOB (dropped)
+    g_idx = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32)[:, None], (g, t * k))
+    src = jnp.full((g, e, c + 1), t, jnp.int32)                   # sentinel token = t
+    src = src.at[g_idx, ids_f, slot].set(tok_f[None, :], mode="drop")
+    wtab = jnp.zeros((g, e, c + 1), jnp.float32)
+    wtab = wtab.at[g_idx, ids_f, slot].set(w_f, mode="drop")
+    return src[:, :, :c], wtab[:, :, :c]
+
+
+def _expert_ffn(p: Params, spec: MoESpec, xe: jax.Array, dtype) -> jax.Array:
+    """xe: [G, E, C, d] -> [G, E, C, d]; experts stay on their mesh shard."""
+    h = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(dtype))
+    h = ACTIVATIONS[spec.act](h)
+    if spec.gated:
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(dtype))
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dtype))
+
+
+def apply_moe(p: Params, spec: MoESpec, x: jax.Array, *,
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    """x: [B, S, d]. Groups = rows (S > 1) or the whole batch (decode)."""
+    b, s, d = x.shape
+    xg = x if s > 1 else x.reshape(1, b, d)           # [G, T, d]
+    g, t, _ = xg.shape
+    cap = capacity_per_group(t, spec)
+    if s == 1:
+        # decode: near-dropless (serving must not drop whole FFN outputs;
+        # a ≥4·k floor makes expert collisions at batch scale negligible)
+        cap = min(t * spec.top_k, max(cap, 4 * spec.top_k))
+
+    weights, ids = _route(p["router"], xg, spec)
+    src, wtab = _routing_tables(ids, weights, spec, cap)
+    # capacity-slot parallelism (non-divisible expert counts): shard the
+    # slot axis of the dispatch buffers over 'model' — expert einsums stay
+    # local, only the combine all-reduces (no-op outside a sharding ctx)
+    src = constrain(src, ("batch", None, "moe_cap"))
+    wtab = constrain(wtab, ("batch", None, "moe_cap"))
+
+    x_pad = jnp.concatenate(
+        [xg.astype(compute_dtype), jnp.zeros((g, 1, d), compute_dtype)], axis=1)
+    g_idx = jnp.arange(g, dtype=jnp.int32)[:, None, None]
+    xe = x_pad[g_idx, src]                            # [G, E, C, d] gather
+    xe = constrain(xe, ("batch", None, "moe_cap", None))
+    ye = _expert_ffn(p, spec, xe, compute_dtype)
+    ye = ye * wtab[..., None].astype(compute_dtype)
+    ye = constrain(ye, ("batch", None, "moe_cap", None))
+
+    out = jnp.zeros((g, t + 1, d), compute_dtype)
+    out = out.at[g_idx, src].add(ye, mode="drop")     # scatter-add combine
+    out = out[:, :t]
+
+    if spec.shared_d_ff:
+        hs = xg.astype(compute_dtype) @ p["shared_wi"].astype(compute_dtype)
+        hs = ACTIVATIONS[spec.act](hs)
+        hs = hs * (xg.astype(compute_dtype) @ p["shared_wg"].astype(compute_dtype))
+        out = out + hs @ p["shared_wo"].astype(compute_dtype)
+
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(router_w: jax.Array, x: jax.Array, spec: MoESpec) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (fraction · probability)."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, spec.n_experts, dtype=jnp.float32), axis=(0, 1))
+    imp = jnp.mean(probs, axis=(0, 1))
+    return spec.n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,151 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (temporal-mixing half of a residual block):
+
+    x ──→ Wx ──→ causal depthwise conv (w=4) ──→ RG-LRU ──┐
+      └─→ Wy ──→ GeLU ───────────────────────────────────⊙─→ Wo → out
+
+RG-LRU recurrence (fp32):
+
+    r_t = sigmoid(blockdiag(x_t, A_gate))          # recurrence gate
+    i_t = sigmoid(blockdiag(x_t, X_gate))          # input gate
+    log a_t = -c · softplus(Λ) · r_t               # c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The full-sequence path uses ``jax.lax.associative_scan`` over the affine
+maps (a, b) — O(S log S) work, log-depth, TPU friendly — and is the
+oracle for the Pallas blocked-scan kernel (``repro.kernels.rglru``).
+Decode is the O(1) single-step update with a (state, conv-tail) cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+RGLRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_rnn: int
+    n_heads: int
+    conv_width: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_rnn % self.n_heads == 0
+        return self.d_rnn // self.n_heads
+
+
+def init_rglru_block(key: jax.Array, d: int, spec: RGLRUSpec, dtype=jnp.float32) -> Params:
+    kx, ky, ko, kc, ka, kg, kl = jax.random.split(key, 7)
+    r, h, hd = spec.d_rnn, spec.n_heads, spec.head_dim
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix).
+    u = jax.random.uniform(kl, (r,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * RGLRU_C)))  # softplus^-1
+    return {
+        "wx": dense_init(kx, d, r, dtype=dtype),
+        "wy": dense_init(ky, d, r, dtype=dtype),
+        "wo": dense_init(ko, r, d, dtype=dtype),
+        "conv_w": (0.1 * jax.random.truncated_normal(kc, -2, 2, (spec.conv_width, r))).astype(dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+        "a_gate": dense_init(ka, hd, hd, shape=(h, hd, hd), dtype=dtype),
+        "a_bias": jnp.zeros((r,), dtype),
+        "x_gate": dense_init(kg, hd, hd, shape=(h, hd, hd), dtype=dtype),
+        "x_bias": jnp.zeros((r,), dtype),
+        "lambda": lam,  # fp32 always
+    }
+
+
+def _blockdiag(x: jax.Array, w: jax.Array, b: jax.Array, n_heads: int) -> jax.Array:
+    """x: [..., R] -> [..., R] via per-head dense (block-diagonal) map."""
+    shape = x.shape
+    xh = x.reshape(*shape[:-1], n_heads, shape[-1] // n_heads)
+    yh = jnp.einsum("...hd,hde->...he", xh, w)
+    return yh.reshape(shape) + b
+
+
+def _gates(p: Params, spec: RGLRUSpec, x: jax.Array):
+    """fp32 (log_a, beta·i·x) for the recurrence; x: [..., R]."""
+    xf = x.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(
+        _blockdiag(xf, p["a_gate"].astype(jnp.float32), p["a_bias"].astype(jnp.float32), spec.n_heads))
+    i_gate = jax.nn.sigmoid(
+        _blockdiag(xf, p["x_gate"].astype(jnp.float32), p["x_bias"].astype(jnp.float32), spec.n_heads))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lambda"]) * r_gate
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i_gate * xf
+
+
+def rglru_scan(p: Params, spec: RGLRUSpec, x: jax.Array) -> jax.Array:
+    """Full sequence. x: [B, S, R] -> h: [B, S, R] (same dtype as x)."""
+    log_a, b = _gates(p, spec, x)
+    a = jnp.exp(log_a)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(p: Params, spec: RGLRUSpec, x: jax.Array, h_prev: jax.Array):
+    """One step. x: [B, 1, R]; h_prev: [B, R] fp32."""
+    log_a, b = _gates(p, spec, x)
+    h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+    return h.astype(x.dtype)[:, None], h
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B, S, R]; w: [W, R]."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def causal_conv_step(x: jax.Array, tail: jax.Array, w: jax.Array, b: jax.Array):
+    """x: [B, 1, R]; tail: [B, W-1, R] (previous inputs). Returns (y, new_tail)."""
+    window = jnp.concatenate([tail, x], axis=1)               # [B, W, R]
+    y = jnp.einsum("bwr,wr->br", window, w)[:, None] + b
+    return y, window[:, 1:]
+
+
+def init_rglru_cache(batch: int, spec: RGLRUSpec, dtype=jnp.bfloat16) -> Params:
+    return {
+        "h": jnp.zeros((batch, spec.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d_rnn), dtype),
+    }
+
+
+def rglru_block(p: Params, spec: RGLRUSpec, x: jax.Array, *,
+                compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Full-sequence temporal-mixing block. x: [B, S, d] -> [B, S, d]."""
+    x = x.astype(compute_dtype)
+    xb = x @ p["wx"].astype(compute_dtype)
+    gb = jax.nn.gelu(x @ p["wy"].astype(compute_dtype))
+    xb = causal_conv(xb, p["conv_w"].astype(compute_dtype), p["conv_b"].astype(compute_dtype))
+    h = rglru_scan(p, spec, xb)
+    return (h * gb) @ p["wo"].astype(compute_dtype)
+
+
+def rglru_block_step(p: Params, spec: RGLRUSpec, x: jax.Array, cache: Params, *,
+                     compute_dtype=jnp.bfloat16) -> tuple[jax.Array, Params]:
+    """One decode step. x: [B, 1, d]."""
+    x = x.astype(compute_dtype)
+    xb = x @ p["wx"].astype(compute_dtype)
+    gb = jax.nn.gelu(x @ p["wy"].astype(compute_dtype))
+    xb, new_tail = causal_conv_step(
+        xb, cache["conv"], p["conv_w"].astype(compute_dtype), p["conv_b"].astype(compute_dtype))
+    hseq, h_state = rglru_step(p, spec, xb, cache["h"])
+    y = (hseq * gb) @ p["wo"].astype(compute_dtype)
+    return y, {"h": h_state, "conv": new_tail.astype(cache["conv"].dtype)}

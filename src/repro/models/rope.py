@@ -1,0 +1,69 @@
+"""Rotary position embeddings: classic RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (multimodal RoPE, arXiv:2409.12191) splits the head dimension into
+``sections`` (temporal / height / width); each section consumes a different
+row of a ``[3, B, S]`` position-id tensor.  Text tokens carry identical
+(t, h, w) ids, so M-RoPE degenerates to RoPE for pure-text inputs — the
+property tests assert this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape [head_dim // 2], float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _expand(a: jax.Array, ndim: int) -> jax.Array:
+    """Insert singleton head axes: [B, S, D/2] -> [B, S, 1..., D/2]."""
+    return a.reshape(a.shape[:2] + (1,) * (ndim - 3) + a.shape[-1:])
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, ..., D] (any head axes); positions: [B, S] int32."""
+    freqs = rope_freqs(x.shape[-1], theta)  # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, D/2]
+    cos = _expand(jnp.cos(angles), x.ndim)
+    sin = _expand(jnp.sin(angles), x.ndim)
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, position_ids: jax.Array, sections: tuple[int, int, int],
+                *, theta: float = 10000.0) -> jax.Array:
+    """M-RoPE. x: [B, S, H, D]; position_ids: [3, B, S] (t, h, w).
+
+    ``sections`` gives the number of *frequency pairs* per modality section
+    (sum == D // 2), mirroring HF's ``mrope_section``.
+    """
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(x.shape[-1], theta)  # [D/2]
+    # angles per modality: [3, B, S, D/2]
+    angles = position_ids.astype(jnp.float32)[..., None] * freqs
+    # pick section s for frequency slots belonging to that section
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d_half
+    )  # [D/2]
+    angles = jnp.take_along_axis(
+        jnp.moveaxis(angles, 0, -1),  # [B, S, D/2, 3]
+        sec_id[None, None, :, None],
+        axis=-1,
+    )[..., 0]  # [B, S, D/2]
+    cos = _expand(jnp.cos(angles), x.ndim)
+    sin = _expand(jnp.sin(angles), x.ndim)
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Degenerate (t == h == w) M-RoPE ids for pure-text tokens: [3, B, S]."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

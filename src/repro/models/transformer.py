@@ -1,0 +1,519 @@
+"""Composable decoder-only LM covering all ten assigned architectures.
+
+A model is a repeating **pattern** of layers (e.g. RecurrentGemma's
+``(rglru, rglru, local-attn)``, Llama-4's ``(dense-ffn, moe-ffn)``,
+xLSTM's ``(mlstm×7, slstm)``) applied ``num_units`` times.  Per-layer
+parameters are stacked on a leading unit axis and the stack runs as a
+single ``jax.lax.scan`` over units (optionally ``jax.checkpoint``-ed for
+remat) — one compiled unit body regardless of depth, which keeps HLO size
+and compile time flat across the zoo.
+
+Three execution modes share the same layer code:
+
+* ``forward``      — full-sequence training/scoring forward (logits).
+* ``prefill``      — full sequence + per-layer cache extraction.
+* ``decode_step``  — single token against the cache (serving).
+
+Parameters are plain pytrees; sharding is applied externally by
+``repro.distributed.partitioning`` (path-based rules), so this module is
+completely mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import AttnSpec
+from repro.models.layers import (Params, apply_norm, embed, init_embedding,
+                                 init_head, init_mlp, init_norm, logits_head, mlp)
+from repro.models.moe import MoESpec
+from repro.models.rglru import RGLRUSpec
+from repro.models.xlstm import MLSTMSpec, SLSTMSpec
+from repro.models.rope import text_mrope_positions
+
+DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"        # 'attn' | 'rglru' | 'mlstm' | 'slstm'
+    ffn: str = "dense"         # 'dense' | 'moe' | 'none'
+    window: int | None = None  # sliding window for 'attn'
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    vocab_size: int
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    tail: tuple[LayerSpec, ...] = ()   # trailing layers when depth % pattern != 0
+    # attention
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    rope_kind: str = "rope"           # 'rope' | 'mrope' | 'none'
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    attn_softcap: float | None = None
+    # dense ffn
+    d_ff: int = 0
+    act: str = "silu"
+    ffn_gated: bool = True
+    mlp_bias: bool = False
+    # sub-block specs (None when unused)
+    moe: MoESpec | None = None
+    rglru: RGLRUSpec | None = None
+    mlstm: MLSTMSpec | None = None
+    slstm: SLSTMSpec | None = None
+    # embeddings / head
+    tie_embeddings: bool = False
+    input_mode: str = "tokens"        # 'tokens' | 'embeddings' (modality stub)
+    emb_scale: float | None = None
+    logit_scale: float | None = None
+    logit_softcap: float | None = None
+    residual_scale: float | None = None   # MiniCPM-style depth scaling
+    norm: str = "rms"
+    # numerics
+    param_dtype: str = "bf16"
+    compute_dtype: str = "bf16"
+    remat: str = "full"               # 'none' | 'full' | 'dots'
+    vocab_pad_to: int = 256           # Megatron-style vocab padding (TP divisibility)
+    # losses
+    moe_aux_weight: float = 0.01
+    # distribution hints (consumed by repro.distributed.partitioning)
+    fsdp_units: bool = False   # shard the stacked unit axis over 'data' (ZeRO-3)
+    moe_shard_mode: str = "auto"   # 'auto' | 'e_data_f_model' (perf variant)
+    # misc notes (e.g. applicability of paper technique)
+    supports_kv_offload: bool = True
+
+    def __post_init__(self):
+        assert (self.n_layers - len(self.tail)) % len(self.pattern) == 0, \
+            (self.name, self.n_layers)
+
+    @property
+    def num_units(self) -> int:
+        return (self.n_layers - len(self.tail)) // len(self.pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return (self.vocab_size + p - 1) // p * p
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def pdtype(self):
+        return DTYPES[self.param_dtype]
+
+    @property
+    def cdtype(self):
+        return DTYPES[self.compute_dtype]
+
+    def attn_spec(self, window: int | None) -> AttnSpec:
+        return AttnSpec(
+            n_heads=self.n_heads, n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            qkv_bias=self.qkv_bias, rope_kind=self.rope_kind,
+            rope_theta=self.rope_theta, mrope_sections=self.mrope_sections,
+            window=window, softcap=self.attn_softcap)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: ModelConfig, spec: LayerSpec, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model, jnp.float32)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_mod.init_attention(k1, cfg.d_model, cfg.attn_spec(spec.window), cfg.pdtype)
+    elif spec.mixer == "rglru":
+        p["mixer"] = rglru_mod.init_rglru_block(k1, cfg.d_model, cfg.rglru, cfg.pdtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm_block(k1, cfg.d_model, cfg.mlstm, cfg.pdtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm_block(k1, cfg.d_model, cfg.slstm, cfg.pdtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, jnp.float32)
+        if spec.ffn == "dense":
+            p["ffn"] = init_mlp(k2, cfg.d_model, cfg.d_ff, gated=cfg.ffn_gated,
+                                bias=cfg.mlp_bias, dtype=cfg.pdtype)
+        elif spec.ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(k3, cfg.d_model, cfg.moe, cfg.pdtype)
+        else:
+            raise ValueError(spec.ffn)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, kh, ku = jax.random.split(key, 3)
+    params: Params = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = init_embedding(ke, cfg.padded_vocab, cfg.d_model, cfg.pdtype)
+    if not cfg.tie_embeddings:
+        params["head"] = init_head(kh, cfg.d_model, cfg.padded_vocab, cfg.pdtype)
+
+    def init_unit(k):
+        ks = jax.random.split(k, len(cfg.pattern))
+        return {f"layer{i}": _init_layer(cfg, spec, ks[i])
+                for i, spec in enumerate(cfg.pattern)}
+
+    params["unit"] = jax.vmap(init_unit)(jax.random.split(ku, cfg.num_units))
+    if cfg.tail:
+        kt = jax.random.split(jax.random.fold_in(ku, 1), len(cfg.tail))
+        params["tail"] = {f"tail{i}": _init_layer(cfg, spec, kt[i])
+                          for i, spec in enumerate(cfg.tail)}
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model, jnp.float32)
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# layer application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_mixer(cfg: ModelConfig, spec: LayerSpec, p: Params, h: jax.Array,
+                 positions, position_ids, mode: str, cache, index):
+    cd = cfg.cdtype
+    if spec.mixer == "attn":
+        aspec = cfg.attn_spec(spec.window)
+        if mode == "decode":
+            return attn_mod.attn_decode(p, aspec, h, cache, index,
+                                        position_ids=position_ids, compute_dtype=cd)
+        out = attn_mod.attn_full(p, aspec, h, positions,
+                                 position_ids=position_ids, compute_dtype=cd)
+        return out, None
+    if spec.mixer == "rglru":
+        if mode == "decode":
+            return rglru_mod.rglru_block_step(p, cfg.rglru, h, cache, compute_dtype=cd)
+        return rglru_mod.rglru_block(p, cfg.rglru, h, compute_dtype=cd), None
+    if spec.mixer == "mlstm":
+        if mode == "decode":
+            return xlstm_mod.mlstm_block_step(p, cfg.mlstm, h, cache, compute_dtype=cd)
+        return xlstm_mod.mlstm_block(p, cfg.mlstm, h, compute_dtype=cd), None
+    if spec.mixer == "slstm":
+        if mode == "decode":
+            return xlstm_mod.slstm_block_step(p, cfg.slstm, h, cache, compute_dtype=cd)
+        return xlstm_mod.slstm_block(p, cfg.slstm, h, compute_dtype=cd), None
+    raise ValueError(spec.mixer)
+
+
+def _apply_layer(cfg: ModelConfig, spec: LayerSpec, p: Params, x: jax.Array,
+                 positions, position_ids, mode: str, cache, index):
+    rs = cfg.residual_scale if cfg.residual_scale is not None else 1.0
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    h, new_cache = _apply_mixer(cfg, spec, p["mixer"], h, positions, position_ids,
+                                mode, cache, index)
+    x = x + rs * h
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        h = apply_norm(cfg.norm, p["norm2"], x)
+        if spec.ffn == "dense":
+            h = mlp(p["ffn"], h, act=cfg.act, compute_dtype=cfg.cdtype)
+        else:
+            aux = moe_mod.aux_load_balance_loss(p["ffn"]["router"], h, cfg.moe) \
+                if mode == "train" else aux
+            h = moe_mod.apply_moe(p["ffn"], cfg.moe, h, compute_dtype=cfg.cdtype)
+        x = x + rs * h
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / score)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, inputs: jax.Array) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        x = embed(params["embed"], inputs, compute_dtype=cfg.cdtype)
+    else:
+        x = inputs.astype(cfg.cdtype)
+    if cfg.emb_scale is not None:
+        x = x * jnp.asarray(cfg.emb_scale, cfg.cdtype)
+    return x
+
+
+def _head(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    w = params["embed"]["table"] if cfg.tie_embeddings else params["head"]["w"]
+    logits = logits_head(w, x, softcap=cfg.logit_softcap, compute_dtype=cfg.cdtype,
+                         valid_vocab=cfg.vocab_size)
+    if cfg.logit_scale is not None:
+        logits = logits * cfg.logit_scale
+    return logits
+
+
+def forward(cfg: ModelConfig, params: Params, inputs: jax.Array,
+            positions: jax.Array | None = None,
+            position_ids: jax.Array | None = None,
+            mode: str = "train") -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits [B,S,V] fp32, moe_aux scalar)."""
+    b, s = inputs.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.rope_kind == "mrope" and position_ids is None:
+        position_ids = text_mrope_positions(positions)
+    x = _embed_inputs(cfg, params, inputs)
+
+    def unit_fn(carry, unit_p):
+        x, aux = carry
+        for i, spec in enumerate(cfg.pattern):
+            x, _, a = _apply_layer(cfg, spec, unit_p[f"layer{i}"], x,
+                                   positions, position_ids, mode, None, None)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+                  else jax.checkpoint_policies.checkpoint_dots)
+        unit_fn = jax.checkpoint(unit_fn, policy=policy, prevent_cse=False)
+
+    (x, aux), _ = jax.lax.scan(unit_fn, (x, jnp.zeros((), jnp.float32)), params["unit"])
+    for i, spec in enumerate(cfg.tail):
+        x, _, a = _apply_layer(cfg, spec, params["tail"][f"tail{i}"], x,
+                               positions, position_ids, mode, None, None)
+        aux = aux + a
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _head(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict[str, jax.Array]
+            ) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Next-token cross entropy (+ MoE aux). batch: inputs, labels[, mask]."""
+    logits, aux = forward(cfg, params, batch["inputs"],
+                          batch.get("positions"), batch.get("position_ids"),
+                          mode="train")
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    total = ce + cfg.moe_aux_weight * aux
+    return total, {"ce": ce, "moe_aux": aux,
+                   "tokens": jnp.sum(mask).astype(jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_seq: int):
+    cd = cfg.cdtype
+    if spec.mixer == "attn":
+        return attn_mod.init_attn_cache(batch, cfg.attn_spec(spec.window), max_seq, cd)
+    if spec.mixer == "rglru":
+        return rglru_mod.init_rglru_cache(batch, cfg.rglru, cd)
+    if spec.mixer == "mlstm":
+        return xlstm_mod.init_mlstm_cache(batch, cfg.mlstm, cd)
+    if spec.mixer == "slstm":
+        return xlstm_mod.init_slstm_cache(batch, cfg.slstm, cd)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    """{'unit': stacked per-unit cache, 'tail': per-tail-layer cache}."""
+    unit = {f"layer{i}": _init_layer_cache(cfg, spec, batch, max_seq)
+            for i, spec in enumerate(cfg.pattern)}
+    u = cfg.num_units
+    cache: Params = {
+        "unit": jax.tree.map(lambda a: jnp.broadcast_to(a[None], (u,) + a.shape), unit)
+    }
+    if cfg.tail:
+        cache["tail"] = {f"tail{i}": _init_layer_cache(cfg, spec, batch, max_seq)
+                         for i, spec in enumerate(cfg.tail)}
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                inputs: jax.Array, index: jax.Array,
+                position_ids: jax.Array | None = None
+                ) -> tuple[jax.Array, Params]:
+    """One decode step. inputs: [B, 1] tokens (or [B, 1, d] embeddings);
+    index: scalar int32 absolute position. Returns (logits [B,1,V], cache)."""
+    if cfg.rope_kind == "mrope" and position_ids is None:
+        b = inputs.shape[0]
+        pos = jnp.broadcast_to(index[None, None], (b, 1)).astype(jnp.int32)
+        position_ids = text_mrope_positions(pos)
+    x = _embed_inputs(cfg, params, inputs)
+
+    def unit_fn(x, scanned):
+        unit_p, unit_c = scanned
+        new_c = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, new_c[f"layer{i}"], _ = _apply_layer(
+                cfg, spec, unit_p[f"layer{i}"], x, None, position_ids,
+                "decode", unit_c[f"layer{i}"], index)
+        return x, new_c
+
+    x, new_unit_cache = jax.lax.scan(unit_fn, x, (params["unit"], cache["unit"]))
+    new_cache: Params = {"unit": new_unit_cache}
+    if cfg.tail:
+        new_cache["tail"] = {}
+        for i, spec in enumerate(cfg.tail):
+            x, c, _ = _apply_layer(cfg, spec, params["tail"][f"tail{i}"], x,
+                                   None, position_ids, "decode",
+                                   cache["tail"][f"tail{i}"], index)
+            new_cache["tail"][f"tail{i}"] = c
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _head(cfg, params, x), new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, inputs: jax.Array,
+            max_seq: int | None = None,
+            position_ids: jax.Array | None = None
+            ) -> tuple[jax.Array, Params]:
+    """Full-sequence prefill: logits for the last position + a filled cache.
+
+    Implemented as forward + cache reconstruction per layer; attention
+    layers re-project K/V into the cache layout (ring-aligned for
+    windowed layers), recurrent layers keep their final state.
+    """
+    b, s = inputs.shape[:2]
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.rope_kind == "mrope" and position_ids is None:
+        position_ids = text_mrope_positions(positions)
+    x = _embed_inputs(cfg, params, inputs)
+
+    def unit_fn(x, unit_p):
+        caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            name = f"layer{i}"
+            h = apply_norm(cfg.norm, unit_p[name]["norm1"], x)
+            out, c = _prefill_mixer(cfg, spec, unit_p[name]["mixer"], h,
+                                    positions, position_ids, max_seq)
+            rs = cfg.residual_scale if cfg.residual_scale is not None else 1.0
+            x = x + rs * out
+            if spec.ffn != "none":
+                h = apply_norm(cfg.norm, unit_p[name]["norm2"], x)
+                if spec.ffn == "dense":
+                    h = mlp(unit_p[name]["ffn"], h, act=cfg.act, compute_dtype=cfg.cdtype)
+                else:
+                    h = moe_mod.apply_moe(unit_p[name]["ffn"], cfg.moe, h,
+                                          compute_dtype=cfg.cdtype)
+                x = x + rs * h
+            caches[name] = c
+        return x, caches
+
+    x, unit_cache = jax.lax.scan(unit_fn, x, params["unit"])
+    cache: Params = {"unit": unit_cache}
+    if cfg.tail:
+        cache["tail"] = {}
+        for i, spec in enumerate(cfg.tail):
+            name = f"tail{i}"
+            p = params["tail"][name]
+            h = apply_norm(cfg.norm, p["norm1"], x)
+            out, c = _prefill_mixer(cfg, spec, p["mixer"], h,
+                                    positions, position_ids, max_seq)
+            rs = cfg.residual_scale if cfg.residual_scale is not None else 1.0
+            x = x + rs * out
+            if spec.ffn != "none":
+                h = apply_norm(cfg.norm, p["norm2"], x)
+                if spec.ffn == "dense":
+                    h = mlp(p["ffn"], h, act=cfg.act, compute_dtype=cfg.cdtype)
+                else:
+                    h = moe_mod.apply_moe(p["ffn"], cfg.moe, h, compute_dtype=cfg.cdtype)
+                x = x + rs * h
+            cache["tail"][name] = c
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return _head(cfg, params, x[:, -1:]), cache
+
+
+def _ring_align(k: jax.Array, v: jax.Array, positions: jax.Array, slots: int):
+    """Pack the last ≤slots (k, v) pairs into ring layout (pos % slots)."""
+    b, s = positions.shape
+    if s <= slots:
+        padk = jnp.zeros((b, slots - s) + k.shape[2:], k.dtype)
+        kr = jnp.concatenate([k, padk], axis=1)
+        vr = jnp.concatenate([v, padk], axis=1)
+        pr = jnp.concatenate(
+            [positions, jnp.full((b, slots - s), -1, jnp.int32)], axis=1)
+        return kr, vr, pr
+    idx = s - 1 - (s - 1 - jnp.arange(slots)) % slots  # source row per slot
+    return k[:, idx], v[:, idx], positions[:, idx]
+
+
+def _prefill_mixer(cfg: ModelConfig, spec: LayerSpec, p: Params, h: jax.Array,
+                   positions, position_ids, max_seq: int):
+    cd = cfg.cdtype
+    if spec.mixer == "attn":
+        aspec = cfg.attn_spec(spec.window)
+        q, k, v = attn_mod._project_qkv(p, aspec, h.astype(cd), cd)
+        q, k = attn_mod._apply_positional(aspec, q, k, positions, position_ids)
+        if h.shape[1] >= aspec.blockwise_threshold:
+            out = attn_mod._attn_blockwise(aspec, q, k, v, positions, positions)
+        else:
+            out = attn_mod._attn_plain(aspec, q, k, v, positions, positions)
+        y = attn_mod._out_proj(p, out, cd)
+        slots = min(max_seq, aspec.window) if aspec.window else max_seq
+        kr, vr, pr = _ring_align(k, v, positions, slots)
+        cache = {"k": kr.transpose(0, 2, 1, 3), "v": vr.transpose(0, 2, 1, 3), "pos": pr}
+        return y, cache
+    if spec.mixer == "rglru":
+        sp = cfg.rglru
+        x = h.astype(cd)
+        xb_raw = x @ p["wx"].astype(cd)
+        gb = jax.nn.gelu(x @ p["wy"].astype(cd))
+        xb = rglru_mod.causal_conv(xb_raw, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+        hs = rglru_mod.rglru_scan(p, sp, xb)
+        tail = _conv_tail(xb_raw, sp.conv_width)   # decode consumes PRE-conv inputs
+        y = (hs * gb) @ p["wo"].astype(cd)
+        return y, {"h": hs[:, -1].astype(jnp.float32), "conv": tail}
+    if spec.mixer == "mlstm":
+        sp = cfg.mlstm
+        x = h.astype(cd)
+        u = x @ p["w_up_v"].astype(cd)
+        z = x @ p["w_up_g"].astype(cd)
+        c = jax.nn.silu(rglru_mod.causal_conv(u, p["conv_w"].astype(cd), p["conv_b"].astype(cd)))
+        q, k, v, i_raw, f_raw = xlstm_mod._mlstm_qkv_gates(p, sp, u, c, cd)
+        hs, (C, n, m) = xlstm_mod.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=sp.chunk)
+        hs = hs.reshape(x.shape[0], x.shape[1], sp.d_inner).astype(cd)
+        hs = xlstm_mod._headwise_rmsnorm(hs, p["gn_scale"], sp.n_heads)
+        y = (hs * jax.nn.silu(z)) @ p["w_down"].astype(cd)
+        return y, {"C": C, "n": n, "m": m, "conv": _conv_tail(u, sp.conv_width)}
+    if spec.mixer == "slstm":
+        sp = cfg.slstm
+        x = h.astype(cd)
+        xc = jax.nn.silu(rglru_mod.causal_conv(x, p["conv_w"].astype(cd), p["conv_b"].astype(cd)))
+        b = x.shape[0]
+        zeros = jnp.zeros((b, sp.d), jnp.float32)
+        state = (zeros, zeros, zeros, jnp.full((b, sp.d), -1e30, jnp.float32))
+        hs, (cst, nst, hst, mst) = xlstm_mod._slstm_scan(p, sp, x, xc, state)
+        y = xlstm_mod._slstm_out(p, sp, hs, cd)
+        return y, {"c": cst, "n": nst, "h": hst, "m": mst,
+                   "conv": _conv_tail(x, sp.conv_width)}
+    raise ValueError(spec.mixer)
+
+
+def _conv_tail(x: jax.Array, width: int) -> jax.Array:
+    b, s, d = x.shape
+    tail = width - 1
+    if s >= tail:
+        return x[:, s - tail:]
+    return jnp.concatenate([jnp.zeros((b, tail - s, d), x.dtype), x], axis=1)

@@ -1,0 +1,355 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+(arXiv:2405.04517.)  Both cells use the paper's exp-gate stabilisation
+(running max ``m``).  The mLSTM (matrix memory C ∈ R^{Dk×Dv}) is computed
+in a **chunkwise-parallel form**: intra-chunk attention-like scores with
+cumulative log-decay, inter-chunk linear recurrence on the (C, n, m)
+state — the same decomposition the Pallas kernel (``repro.kernels.mlstm``)
+tiles for VMEM.  The sLSTM has a true hidden-state feedback (block-diagonal
+per-head recurrent matrices) and is inherently sequential: ``lax.scan``
+over time.
+
+mLSTM block:   x ─→ up(×2) ─→ conv4 ─→ silu ─→ (q,k) ; u ─→ v ; gates(u)
+               h = mLSTM(q,k,v,i,f) ─→ per-head RMSNorm ─⊙ silu(gate) ─→ down
+sLSTM block:   conv4/silu feeds (i,f); z,o from x; post GN + GeGLU(4/3) FF.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+from repro.models.rglru import causal_conv, causal_conv_step, _blockdiag
+
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMSpec:
+    d_inner: int
+    n_heads: int
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMSpec:
+    d: int
+    n_heads: int
+    conv_width: int = 4
+    d_ff: int = 0  # gated FF width after the cell (0 = none)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, *, chunk: int, initial=None):
+    """q,k,v: [B, S, H, D]; i_raw,f_raw: [B, S, H] (pre-activation gates).
+
+    Returns (h [B, S, H, D], final_state (C, n, m)).  fp32 internally.
+    """
+    b, s, h, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    logi = i_raw.astype(jnp.float32)
+
+    pad = (-s) % chunk
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, zpad) for a in (q, k, v))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))          # f=1: keeps state
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    nc = q.shape[1] // chunk
+    L = chunk
+
+    def to_chunks(a, feat):
+        a = a.reshape((b, nc, L, h) + ((d,) if feat else ()))
+        return jnp.moveaxis(a, 1, 0)  # [NC, B, L, H, ...]
+
+    qc, kc, vc = to_chunks(q, True), to_chunks(k, True), to_chunks(v, True)
+    lfc, lic = to_chunks(logf, False), to_chunks(logi, False)
+
+    if initial is None:
+        C0 = jnp.zeros((b, h, d, d), jnp.float32)
+        n0 = jnp.zeros((b, h, d), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = initial
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qx, kx, vx, lf, li = xs  # [B, L, H(, D)]
+        bcum = jnp.cumsum(lf, axis=1)                     # [B, L, H]
+        g = bcum[:, -1]                                   # [B, H]
+        # log weights: intra (i attends j<=i) and inter (state)
+        intra = (bcum[:, :, None] - bcum[:, None, :] + li[:, None, :, :])  # [B,L,L,H]
+        intra = jnp.where(causal[None, :, :, None], intra, -1e30)
+        m_intra = jnp.max(intra, axis=2)                  # [B, L, H]
+        m_inter = m[:, None] + bcum                       # [B, L, H]
+        m_i = jnp.maximum(m_intra, m_inter)
+        A = jnp.exp(intra - m_i[:, :, None, :])           # [B, L, L, H]
+        rho = jnp.exp(m_inter - m_i)                      # [B, L, H]
+
+        s_qk = jnp.einsum("blhd,bjhd->bljh", qx, kx)      # [B, L, L, H]
+        num = (
+            jnp.einsum("bljh,bjhd->blhd", A * s_qk, vx)
+            + rho[..., None] * jnp.einsum("blhd,bhde->blhe", qx, C)
+        )
+        nv = (
+            jnp.einsum("bljh,bjhd->blhd", A, kx)
+            + rho[..., None] * n[:, None]
+        )
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("blhd,blhd->blh", qx, nv)), jnp.exp(-m_i))
+        h_out = num / denom[..., None]
+
+        # state update to end of chunk
+        m_new = jnp.maximum(m + g, jnp.max(g[:, None] - bcum + li, axis=1))
+        w_state = jnp.exp(m[:, None] + g[:, None] - m_new[:, None])      # not used per-pos
+        decay_j = jnp.exp(g[:, None] - bcum + li - m_new[:, None])        # [B, L, H]
+        C_new = (
+            jnp.exp(m + g - m_new)[:, :, None, None] * C
+            + jnp.einsum("blh,blhd,blhe->bhde", decay_j, kx, vx)
+        )
+        n_new = (
+            jnp.exp(m + g - m_new)[:, :, None] * n
+            + jnp.einsum("blh,blhd->bhd", decay_j, kx)
+        )
+        del w_state
+        return (C_new, n_new, m_new), h_out
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lfc, lic))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, nc * L, h, d)[:, :s]
+    return hs, (C, n, m)
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """Single decode step. q,k,v: [B, H, D]; gates: [B, H]."""
+    C, n, m = state
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    q = q.astype(jnp.float32) * scale
+    k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    logi = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(logi - m_new)
+    C_new = fp[..., None, None] * C + ip[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), jnp.exp(-m_new))
+    return num / denom[..., None], (C_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm_block(key: jax.Array, d: int, spec: MLSTMSpec, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 9)
+    di, h, hd = spec.d_inner, spec.n_heads, spec.head_dim
+    return {
+        "w_up_v": dense_init(ks[0], d, di, dtype=dtype),
+        "w_up_g": dense_init(ks[1], d, di, dtype=dtype),
+        "conv_w": (0.1 * jax.random.truncated_normal(ks[2], -2, 2, (spec.conv_width, di))).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        # per-head block-diagonal q/k/v maps (keeps the 350M budget; the
+        # matrix memory mixes within heads only, as in the paper's cell)
+        "wq": dense_init(ks[3], hd, hd, shape=(h, hd, hd), dtype=dtype),
+        "wk": dense_init(ks[4], hd, hd, shape=(h, hd, hd), dtype=dtype),
+        "wv": dense_init(ks[5], hd, hd, shape=(h, hd, hd), dtype=dtype),
+        "wi": dense_init(ks[6], di, h, dtype=jnp.float32),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "wf": dense_init(ks[7], di, h, dtype=jnp.float32),
+        # positive f bias => long memory at init (paper's init)
+        "bf": jnp.linspace(3.0, 6.0, h).astype(jnp.float32),
+        "gn_scale": jnp.ones((di,), jnp.float32),
+        "w_down": dense_init(ks[8], di, d, dtype=dtype),
+    }
+
+
+def _headwise_rmsnorm(x: jax.Array, scale: jax.Array, n_heads: int) -> jax.Array:
+    b, s, di = x.shape
+    xh = x.astype(jnp.float32).reshape(b, s, n_heads, di // n_heads)
+    var = jnp.mean(jnp.square(xh), axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + 1e-6)
+    return (xh.reshape(b, s, di) * scale).astype(x.dtype)
+
+
+def _mlstm_qkv_gates(p: Params, spec: MLSTMSpec, u, c, dtype):
+    h, hd = spec.n_heads, spec.head_dim
+    ch = c.reshape(c.shape[0], c.shape[1], h, hd)
+    uh = u.reshape(u.shape[0], u.shape[1], h, hd)
+    q = jnp.einsum("bshd,hde->bshe", ch, p["wq"].astype(dtype))
+    k = jnp.einsum("bshd,hde->bshe", ch, p["wk"].astype(dtype))
+    v = jnp.einsum("bshd,hde->bshe", uh, p["wv"].astype(dtype))
+    i_raw = jnp.einsum("bsd,dh->bsh", u.astype(jnp.float32), p["wi"]) + p["bi"]
+    f_raw = jnp.einsum("bsd,dh->bsh", u.astype(jnp.float32), p["wf"]) + p["bf"]
+    return q, k, v, i_raw, f_raw
+
+
+def mlstm_block(p: Params, spec: MLSTMSpec, x: jax.Array, *,
+                compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = x.astype(compute_dtype)
+    u = x @ p["w_up_v"].astype(compute_dtype)
+    z = x @ p["w_up_g"].astype(compute_dtype)
+    c = jax.nn.silu(causal_conv(u, p["conv_w"].astype(compute_dtype),
+                                p["conv_b"].astype(compute_dtype)))
+    q, k, v, i_raw, f_raw = _mlstm_qkv_gates(p, spec, u, c, compute_dtype)
+    h, _ = mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=spec.chunk)
+    h = h.reshape(x.shape[0], x.shape[1], spec.d_inner).astype(compute_dtype)
+    h = _headwise_rmsnorm(h, p["gn_scale"], spec.n_heads)
+    return (h * jax.nn.silu(z)) @ p["w_down"].astype(compute_dtype)
+
+
+def init_mlstm_cache(batch: int, spec: MLSTMSpec, dtype=jnp.bfloat16) -> Params:
+    h, hd = spec.n_heads, spec.head_dim
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d_inner), dtype),
+    }
+
+
+def mlstm_block_step(p: Params, spec: MLSTMSpec, x: jax.Array, cache: Params, *,
+                     compute_dtype=jnp.bfloat16) -> tuple[jax.Array, Params]:
+    x = x.astype(compute_dtype)  # [B, 1, d]
+    u = x @ p["w_up_v"].astype(compute_dtype)
+    z = x @ p["w_up_g"].astype(compute_dtype)
+    c, new_tail = causal_conv_step(u, cache["conv"], p["conv_w"].astype(compute_dtype),
+                                   p["conv_b"].astype(compute_dtype))
+    c = jax.nn.silu(c)
+    q, k, v, i_raw, f_raw = _mlstm_qkv_gates(p, spec, u, c, compute_dtype)
+    h, (C, n, m) = mlstm_step(q[:, 0], k[:, 0], v[:, 0], i_raw[:, 0], f_raw[:, 0],
+                              (cache["C"], cache["n"], cache["m"]))
+    h = h.reshape(x.shape[0], 1, spec.d_inner).astype(compute_dtype)
+    h = _headwise_rmsnorm(h, p["gn_scale"], spec.n_heads)
+    y = (h * jax.nn.silu(z)) @ p["w_down"].astype(compute_dtype)
+    return y, {"C": C, "n": n, "m": m, "conv": new_tail.astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(key: jax.Array, d: int, spec: SLSTMSpec, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 12)
+    h, hd = spec.n_heads, spec.head_dim
+    p: Params = {
+        "conv_w": (0.1 * jax.random.truncated_normal(ks[0], -2, 2, (spec.conv_width, d))).astype(dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+    }
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = dense_init(ks[1 + i], d, d, dtype=dtype)
+        p[f"r{g}"] = dense_init(ks[5 + i], hd, hd, shape=(h, hd, hd), dtype=dtype)
+        p[f"b{g}"] = (jnp.linspace(3.0, 6.0, d).astype(jnp.float32) if g == "f"
+                      else jnp.zeros((d,), jnp.float32))
+    if spec.d_ff:
+        p["ff_w1"] = dense_init(ks[9], d, spec.d_ff, dtype=dtype)
+        p["ff_w2"] = dense_init(ks[10], d, spec.d_ff, dtype=dtype)
+        p["ff_w3"] = dense_init(ks[11], spec.d_ff, d, dtype=dtype)
+    return p
+
+
+def _slstm_cell(p: Params, spec: SLSTMSpec, xz, xi, xf, xo, state):
+    """One timestep; all args [B, d] fp32; state = (c, n, h, m)."""
+    c, n, h_prev, m = state
+    nh = spec.n_heads
+    f32 = jnp.float32
+
+    def rec(g):
+        return _blockdiag(h_prev, p[f"r{g}"].astype(f32), 0.0, nh)
+
+    z = jnp.tanh(xz + rec("z") + p["bz"])
+    o = jax.nn.sigmoid(xo + rec("o") + p["bo"])
+    i_raw = xi + rec("i") + p["bi"]
+    f_raw = xf + rec("f") + p["bf"]
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    ip = jnp.exp(i_raw - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h_new = o * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+    return c_new, n_new, h_new, m_new
+
+
+def _slstm_scan(p: Params, spec: SLSTMSpec, x: jax.Array, xc: jax.Array, state):
+    """x (for z/o), xc (conv'd, for i/f): [B, S, d]. Returns h [B,S,d], state."""
+    f32 = jnp.float32
+    xz = x.astype(f32) @ p["wz"].astype(f32)
+    xo = x.astype(f32) @ p["wo"].astype(f32)
+    xi = xc.astype(f32) @ p["wi"].astype(f32)
+    xf = xc.astype(f32) @ p["wf"].astype(f32)
+
+    def step(carry, xs):
+        new = _slstm_cell(p, spec, xs[0], xs[1], xs[2], xs[3], carry)
+        return new, new[2]
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xz, xi, xf, xo))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def init_slstm_cache(batch: int, spec: SLSTMSpec, dtype=jnp.bfloat16) -> Params:
+    zeros = jnp.zeros((batch, spec.d), jnp.float32)
+    return {
+        "c": zeros, "n": zeros, "h": zeros,
+        "m": jnp.full((batch, spec.d), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d), dtype),
+    }
+
+
+def _slstm_out(p: Params, spec: SLSTMSpec, h: jax.Array, dtype) -> jax.Array:
+    h = _headwise_rmsnorm(h.astype(dtype), p["gn_scale"], spec.n_heads)
+    if spec.d_ff:
+        a = jax.nn.gelu(h @ p["ff_w1"].astype(dtype), approximate=True)
+        h = (a * (h @ p["ff_w2"].astype(dtype))) @ p["ff_w3"].astype(dtype)
+    return h
+
+
+def slstm_block(p: Params, spec: SLSTMSpec, x: jax.Array, *,
+                compute_dtype=jnp.bfloat16) -> jax.Array:
+    x = x.astype(compute_dtype)
+    xc = jax.nn.silu(causal_conv(x, p["conv_w"].astype(compute_dtype),
+                                 p["conv_b"].astype(compute_dtype)))
+    b = x.shape[0]
+    zeros = jnp.zeros((b, spec.d), jnp.float32)
+    state = (zeros, zeros, zeros, jnp.full((b, spec.d), -1e30, jnp.float32))
+    h, _ = _slstm_scan(p, spec, x, xc, state)
+    return _slstm_out(p, spec, h, compute_dtype)
+
+
+def slstm_block_step(p: Params, spec: SLSTMSpec, x: jax.Array, cache: Params, *,
+                     compute_dtype=jnp.bfloat16) -> tuple[jax.Array, Params]:
+    x = x.astype(compute_dtype)  # [B, 1, d]
+    xc, new_tail = causal_conv_step(x, cache["conv"], p["conv_w"].astype(compute_dtype),
+                                    p["conv_b"].astype(compute_dtype))
+    xc = jax.nn.silu(xc)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    h, state = _slstm_scan(p, spec, x, xc, state)
+    c, n, hst, m = state
+    y = _slstm_out(p, spec, h, compute_dtype)
+    return y, {"c": c, "n": n, "h": hst, "m": m,
+               "conv": new_tail.astype(cache["conv"].dtype)}

@@ -1,0 +1,2 @@
+from repro.serve.engine import GenerationResult, ServingEngine  # noqa: F401
+from repro.serve.sampler import SamplerConfig, sample  # noqa: F401

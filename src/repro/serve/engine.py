@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + decode with a persistent KV cache.
+
+Wave-batched execution: requests are grouped into aligned waves (one
+shared position counter per wave — matching the production cells, where
+``decode_32k`` runs 128 aligned streams).  The decode step is jit'd once
+per (batch, cache-length) bucket; prompts are left-padded into the
+bucket so a wave admits mixed prompt lengths (per-row validity comes
+from the cache's position array).
+
+KV paging for long contexts is *planned* (not executed on CPU) by the
+SSD tier model — see ``repro.storage.kvoffload``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (ModelConfig, decode_step, init_cache,
+                                      prefill)
+from repro.serve.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray           # [B, n_new]
+    prefill_logits: np.ndarray   # [B, vocab]
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int,
+                 sampler: SamplerConfig | None = None):
+        self.cfg, self.params, self.max_seq = cfg, params, max_seq
+        self.sampler = sampler or SamplerConfig()
+        self._prefill = jax.jit(
+            lambda p, x: prefill(cfg, p, x, max_seq=max_seq))
+        self._decode = jax.jit(
+            lambda p, c, x, i: decode_step(cfg, p, c, x, i))
+
+    def _pad_prompts(self, prompts: Sequence[Sequence[int]]) -> np.ndarray:
+        width = max(len(p) for p in prompts)
+        out = np.zeros((len(prompts), width), np.int32)
+        for r, p in enumerate(prompts):
+            out[r, width - len(p):] = p        # left-pad (aligned wave)
+        return out
+
+    def generate(self, prompts: Sequence[Sequence[int]], n_new: int,
+                 seed: int = 0) -> GenerationResult:
+        """Greedy/temperature generation for one aligned wave."""
+        toks = self._pad_prompts(prompts)
+        b, s = toks.shape
+        assert s + n_new <= self.max_seq, (s, n_new, self.max_seq)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        key = jax.random.PRNGKey(seed)
+        out = []
+        last = sample(logits[:, -1], key, self.sampler)
+        out.append(np.asarray(last))
+        for i in range(n_new - 1):
+            key, sub = jax.random.split(key)
+            step_logits, cache = self._decode(
+                self.params, cache, last[:, None], jnp.asarray(s + i, jnp.int32))
+            last = sample(step_logits[:, -1], sub, self.sampler)
+            out.append(np.asarray(last))
+        return GenerationResult(
+            tokens=np.stack(out, axis=1),
+            prefill_logits=np.asarray(logits[:, -1]),
+            steps=n_new)
+
+    def score(self, tokens: np.ndarray) -> np.ndarray:
+        """Log-prob of each next token under the model (batch scoring)."""
+        from repro.models.transformer import forward
+        logits, _ = forward(self.cfg, self.params, jnp.asarray(tokens),
+                            mode="eval")
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        gold = jnp.take_along_axis(logp, jnp.asarray(tokens)[:, 1:, None],
+                                   axis=-1)[..., 0]
+        return np.asarray(gold)

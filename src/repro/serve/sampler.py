@@ -1,0 +1,25 @@
+"""Token samplers: greedy / temperature / top-k."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0     # 0 = greedy
+    top_k: int = 0               # 0 = full softmax
+
+
+def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """logits: [B, V] fp32 -> tokens [B] int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        logits = jnp.where(logits >= kth, logits, -1e30)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

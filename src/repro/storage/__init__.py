@@ -1,0 +1,5 @@
+from repro.storage.checkpoint import CheckpointEngine, place_on_mesh  # noqa: F401
+from repro.storage.datapipe import (FileBackedTokens, PipeState,  # noqa: F401
+                                    StripedTokenStore, SyntheticTokens)
+from repro.storage.kvoffload import plan_kv_offload  # noqa: F401
+from repro.storage.ssd_model import compare_interfaces, estimate_io, plan_geometry  # noqa: F401

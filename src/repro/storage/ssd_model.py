@@ -1,0 +1,72 @@
+"""SSD cost model: the paper's simulator as a capacity-planning service.
+
+Every storage-tier component (checkpoint engine, data pipeline, KV
+offload) prices its I/O against the paper's SSD model: given an
+interface (CONV / SYNC_ONLY / PROPOSED), cell type and channel/way
+geometry, we get sustained read/write bandwidth (Table 3/4 reproduction)
+and controller energy (Table 5).  ``plan_geometry`` inverts the model:
+find the cheapest (channels, ways) meeting a bandwidth target — the
+design-space search runs on the (max,+) engine, i.e. the paper's §5.3.2
+trade-off study automated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.energy import ControllerEnergyModel
+from repro.core.interface import InterfaceKind
+from repro.core.nand import CellType
+from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+
+
+@dataclasses.dataclass(frozen=True)
+class IOEstimate:
+    seconds: float
+    bandwidth_mb_s: float
+    energy_joules: float
+    config: SSDConfig
+
+    def describe(self) -> str:
+        return (f"{self.config.describe()}: {self.bandwidth_mb_s:.0f} MB/s, "
+                f"{self.seconds:.2f} s, {self.energy_joules * 1e3:.1f} mJ")
+
+
+def estimate_io(nbytes: int, cfg: SSDConfig, mode: str) -> IOEstimate:
+    bw = ssd_bandwidth_mb_s(cfg, mode)
+    seconds = nbytes / (bw * 1e6)
+    energy = ControllerEnergyModel(cfg.interface).energy_joules(nbytes, bw) \
+        * cfg.channels
+    return IOEstimate(seconds, bw, energy, cfg)
+
+
+def plan_geometry(nbytes: int, budget_s: float, mode: str,
+                  interface: InterfaceKind = InterfaceKind.PROPOSED,
+                  cell: CellType = CellType.MLC) -> IOEstimate | None:
+    """Smallest (channels × ways) geometry that meets the time budget.
+
+    Area cost model per the paper §2.2.1: a channel costs ~4× a way
+    (NAND_IF + ECC block + pins), so we sort candidates by
+    4·channels + ways and return the first that fits.
+    """
+    candidates = [(c, w) for c in (1, 2, 4, 8) for w in (1, 2, 4, 8, 16)]
+    candidates.sort(key=lambda cw: (4 * cw[0] + cw[1], cw[0]))
+    for channels, ways in candidates:
+        cfg = SSDConfig(interface=interface, cell=cell,
+                        channels=channels, ways=ways)
+        est = estimate_io(nbytes, cfg, mode)
+        if est.seconds <= budget_s:
+            return est
+    return None
+
+
+def compare_interfaces(nbytes: int, mode: str, *, channels: int = 4,
+                       ways: int = 8, cell: CellType = CellType.MLC
+                       ) -> dict[str, IOEstimate]:
+    """CONV vs SYNC_ONLY vs PROPOSED at a fixed geometry (paper Fig. 8)."""
+    return {
+        kind.value: estimate_io(
+            nbytes, SSDConfig(interface=kind, cell=cell,
+                              channels=channels, ways=ways), mode)
+        for kind in InterfaceKind
+    }

@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, global_norm  # noqa: F401
+from repro.train.schedules import SCHEDULES, constant, warmup_cosine, wsd  # noqa: F401

@@ -1,0 +1,37 @@
+"""LR schedules: linear-warmup cosine and MiniCPM's WSD (warmup-stable-decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def wsd(base_lr: float, warmup: int, stable: int, decay: int, min_ratio: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395 §4): flat plateau then
+    a short exponential-ish decay to min_ratio·lr."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+        dec = base_lr * jnp.exp(jnp.log(jnp.maximum(min_ratio, 1e-6)) * frac)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, base_lr, dec))
+    return lr
+
+
+def constant(base_lr: float):
+    def lr(step):
+        return jnp.full((), base_lr, jnp.float32)
+    return lr
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd, "constant": constant}

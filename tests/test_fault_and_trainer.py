@@ -1,0 +1,102 @@
+"""Fault tolerance: watchdog (mocked clock), failure injection, trainer
+checkpoint-restart, serving-engine consistency."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.distributed.fault import (FailureInjector, RestartableFailure,
+                                     StepWatchdog)
+from repro.launch.mesh import make_host_mesh
+from repro.models.transformer import forward, init_params
+from repro.serve.engine import ServingEngine
+from repro.storage.datapipe import SyntheticTokens
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_watchdog_detects_stragglers():
+    clk = FakeClock()
+    wd = StepWatchdog(factor=3.0, patience=3, clock=clk)
+    # establish 1s baseline
+    for step in range(5):
+        wd.start(); clk.t += 1.0
+        assert wd.stop(step) is None
+    # one 5s straggler -> skip-and-redistribute event, EMA unpoisoned
+    wd.start(); clk.t += 5.0
+    ev = wd.stop(5)
+    assert ev is not None and ev.action == "skip-and-redistribute"
+    assert wd.ema == pytest.approx(1.0)
+    # persistent straggler escalates to a restartable failure
+    with pytest.raises(RestartableFailure):
+        for step in range(6, 12):
+            wd.start(); clk.t += 5.0
+            wd.stop(step)
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector(fail_at_steps=(3,))
+    inj.maybe_fail(2)
+    with pytest.raises(RestartableFailure):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)  # second pass: already fired
+
+
+def test_trainer_restart_and_resume(tmp_path):
+    cfg = get_arch("qwen2-0.5b").smoke
+    mesh = make_host_mesh(model=1)
+    data = SyntheticTokens(cfg.vocab_size, batch=4, seq=12)
+    tr = Trainer(cfg, TrainerConfig(steps=12, log_every=4, ckpt_every=4,
+                                    ckpt_dir=str(tmp_path)),
+                 mesh, data, injector=FailureInjector(fail_at_steps=(6,)))
+    res = tr.run()
+    assert res["final_step"] == 12
+    assert res["restarts"] == 1
+    # mechanics are the assertion here (restart fired, checkpoint resumed,
+    # run completed, training didn't diverge); monotone loss decrease over
+    # 12 steps of random tokens is covered by test_train_step_decreases_loss
+    losses = [h["loss"] for h in res["history"]]
+    assert losses[-1] < 2.0 * losses[0] and all(np.isfinite(losses))
+
+
+def test_trainer_grad_accum_equivalence(tmp_path):
+    """accum=2 over batch 8 ≈ accum=1 over the same batch (same data)."""
+    cfg = get_arch("qwen2-0.5b").smoke
+    mesh = make_host_mesh(model=1)
+
+    def run(accum, d):
+        data = SyntheticTokens(cfg.vocab_size, batch=8, seq=8, seed=3)
+        tr = Trainer(cfg, TrainerConfig(steps=3, log_every=1, ckpt_every=100,
+                                        ckpt_dir=str(d), grad_accum=accum),
+                     mesh, data)
+        return [h["loss"] for h in tr.run()["history"]]
+
+    l1 = run(1, tmp_path / "a")
+    l2 = run(2, tmp_path / "b")
+    assert np.allclose(l1, l2, rtol=2e-2), (l1, l2)
+
+
+def test_serving_engine_greedy_matches_forward():
+    cfg = get_arch("granite-3-2b").smoke
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, max_seq=32)
+    prompts = [[5, 6, 7, 8, 9, 10], [11, 12, 13, 14, 15, 16]]
+    res = eng.generate(prompts, n_new=5)
+    assert res.tokens.shape == (2, 5)
+    # teacher-forced check: feed generated sequence through forward; argmax
+    # of each prefix must reproduce the generated token
+    for r, p in enumerate(prompts):
+        seq = list(p) + list(res.tokens[r])
+        logits, _ = forward(cfg, params, jnp.asarray([seq], jnp.int32), mode="eval")
+        for i in range(len(p) - 1, len(seq) - 1):
+            assert int(jnp.argmax(logits[0, i])) == seq[i + 1], (r, i)

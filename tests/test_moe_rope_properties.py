@@ -1,0 +1,110 @@
+"""Property tests for MoE routing and rotary embeddings."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import mlp
+from repro.models.moe import MoESpec, apply_moe, capacity_per_group, init_moe
+from repro.models.rope import apply_mrope, apply_rope, text_mrope_positions
+
+KEY = jax.random.PRNGKey(3)
+
+
+# --- MoE ---------------------------------------------------------------------
+
+
+def test_single_expert_moe_equals_dense():
+    """E=1, k=1, cf high => MoE must equal the dense expert exactly."""
+    spec = MoESpec(n_experts=1, top_k=1, d_ff=32, capacity_factor=2.0)
+    p = init_moe(KEY, 16, spec, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 8, 16), jnp.float32)
+    out = apply_moe(p, spec, x, compute_dtype=jnp.float32)
+    dense = {"wi": p["wi"][0], "wg": p["wg"][0], "wo": p["wo"][0]}
+    ref = mlp(dense, x, act="silu", compute_dtype=jnp.float32)
+    assert np.allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_identical_experts_invariant():
+    """If all experts share weights, routing choice must not matter."""
+    spec = MoESpec(n_experts=8, top_k=2, d_ff=32, capacity_factor=8.0)
+    p = init_moe(KEY, 16, spec, jnp.float32)
+    for w in ("wi", "wg", "wo"):
+        p[w] = jnp.broadcast_to(p[w][:1], p[w].shape)
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 8, 16), jnp.float32)
+    out = apply_moe(p, spec, x, compute_dtype=jnp.float32)
+    dense = {"wi": p["wi"][0], "wg": p["wg"][0], "wo": p["wo"][0]}
+    ref = mlp(dense, x, act="silu", compute_dtype=jnp.float32)
+    assert np.allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(2, 64),
+       st.floats(0.5, 4.0))
+def test_capacity_formula(tokens, k, experts, cf):
+    k = min(k, experts)
+    c = capacity_per_group(tokens, MoESpec(n_experts=experts, top_k=k,
+                                           d_ff=8, capacity_factor=cf))
+    assert c >= 1
+    assert c >= tokens * k * cf / experts - 1
+
+
+def test_capacity_drops_tokens():
+    """With capacity_factor << 1 most tokens fall through to the residual
+    (output far smaller than with generous capacity)."""
+    x = jax.random.normal(jax.random.fold_in(KEY, 4), (1, 64, 16), jnp.float32)
+    big = MoESpec(n_experts=4, top_k=1, d_ff=32, capacity_factor=4.0)
+    tiny = MoESpec(n_experts=4, top_k=1, d_ff=32, capacity_factor=0.05)
+    p = init_moe(KEY, 16, big, jnp.float32)
+    out_big = apply_moe(p, big, x, compute_dtype=jnp.float32)
+    out_tiny = apply_moe(p, tiny, x, compute_dtype=jnp.float32)
+    assert float(jnp.sum(jnp.abs(out_tiny))) < 0.6 * float(jnp.sum(jnp.abs(out_big)))
+
+
+def test_decode_grouping_runs():
+    """S=1 decode path groups the whole batch (no E× blowup, no crash)."""
+    spec = MoESpec(n_experts=8, top_k=2, d_ff=32, capacity_factor=1.25)
+    p = init_moe(KEY, 16, spec, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 5), (16, 1, 16), jnp.float32)
+    out = apply_moe(p, spec, x, compute_dtype=jnp.float32)
+    assert out.shape == x.shape and bool(jnp.all(jnp.isfinite(out)))
+
+
+# --- RoPE / M-RoPE ------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 3), st.integers(2, 32), st.sampled_from([32, 64, 128]))
+def test_rope_preserves_norm(b, s, d):
+    k = jax.random.fold_in(KEY, b * s + d)
+    x = jax.random.normal(k, (b, s, 2, 2, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    y = apply_rope(x, pos, theta=1e4)
+    assert np.allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                       np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+def test_mrope_degenerates_to_rope_for_text():
+    """t == h == w position ids must reduce M-RoPE to plain RoPE."""
+    b, s, d = 2, 16, 128
+    x = jax.random.normal(KEY, (b, s, 2, 3, d), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    rope = apply_rope(x, pos, theta=1e6)
+    mrope = apply_mrope(x, text_mrope_positions(pos), (16, 24, 24), theta=1e6)
+    assert np.allclose(np.asarray(rope), np.asarray(mrope), atol=1e-5)
+
+
+def test_rope_relative_property():
+    """Attention scores under RoPE depend only on relative distance."""
+    d = 64
+    q = jax.random.normal(KEY, (1, 1, 1, 1, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 9), (1, 1, 1, 1, d), jnp.float32)
+
+    def score(pq, pk):
+        qq = apply_rope(q, jnp.array([[pq]], jnp.int32))
+        kk = apply_rope(k, jnp.array([[pk]], jnp.int32))
+        return float(jnp.sum(qq * kk))
+
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)

@@ -1,0 +1,126 @@
+"""Divisibility-aware sharding rules against the production 16×16 mesh
+(AbstractMesh: no devices needed)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.distributed import partitioning as part
+from repro.launch.steps import abstract_train_state, train_state_pspecs
+from repro.models.transformer import init_cache, init_params
+from repro.train.optimizer import OptConfig
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _specs(name, mesh=MESH):
+    arch = get_arch(name)
+    shapes = jax.eval_shape(lambda: init_params(arch.config, jax.random.PRNGKey(0)))
+    return arch.config, shapes, part.param_pspecs(arch.config, mesh, shapes)
+
+
+def _flat(tree):
+    out = {}
+    jax.tree_util.tree_map_with_path(
+        lambda kp, l: out.setdefault(part._path_str(kp), l),
+        tree, is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def _assert_all_divisible(shapes, specs, mesh):
+    sizes = dict(mesh.shape)
+    fs, fsh = _flat(specs), _flat(shapes)
+    for path, spec in fs.items():
+        shape = fsh[path].shape
+        for dim, entry in zip(shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            assert dim % prod == 0, (path, shape, spec)
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "recurrentgemma-9b",
+                                  "llama4-maverick-400b-a17b",
+                                  "granite-moe-3b-a800m", "xlstm-350m",
+                                  "minicpm-2b"])
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["single", "multi"])
+def test_param_specs_divisible(name, mesh):
+    cfg, shapes, specs = _specs(name, mesh)
+    _assert_all_divisible(shapes, specs, mesh)
+
+
+def test_attention_fallback_chain():
+    # recurrentgemma: G = 16 divides -> Megatron head parallel on the group axis
+    _, _, specs = _specs("recurrentgemma-9b")
+    fs = _flat(specs)
+    wq = [v for k, v in fs.items() if k.endswith("mixer/wq")][0]
+    assert tuple(wq) == (None, None, None, "model", None)  # [U, d, kvH, G, Dh]
+    # qwen2: kv=2, G=7 -> replicated weights (sequence-sharded activations)
+    _, _, specs = _specs("qwen2-0.5b")
+    wq = [v for k, v in _flat(specs).items() if k.endswith("mixer/wq")][0]
+    assert all(e is None for e in tuple(wq))
+
+
+def test_moe_fallback_chain():
+    # llama4: E=128 divides 16 -> expert parallel (layer1 is the MoE layer)
+    _, _, specs = _specs("llama4-maverick-400b-a17b")
+    wi = _flat(specs)["unit/layer1/ffn/wi"]
+    assert tuple(wi)[1] == "model"
+    # granite-moe: E=40 does not divide -> capacity-slot parallel
+    # (weights replicated; the [G,E,C,d] dispatch buffer shards its slot
+    # axis via an activation constraint — see partitioning._moe_spec)
+    _, _, specs = _specs("granite-moe-3b-a800m")
+    wi = [v for k, v in _flat(specs).items() if k.endswith("ffn/wi")][0]
+    assert all(e is None for e in tuple(wi))
+
+
+def test_fsdp_units_only_llama4():
+    _, _, specs = _specs("llama4-maverick-400b-a17b")
+    used = [v for k, v in _flat(specs).items() if k.startswith("unit/")]
+    assert any("data" in str(tuple(s)) for s in used)
+    _, _, specs = _specs("qwen2-0.5b")
+    used = [v for k, v in _flat(specs).items() if k.startswith("unit/")]
+    assert not any("data" in str(tuple(s)) for s in used)
+
+
+def test_vocab_padding():
+    cfg = get_arch("minicpm-2b").config
+    assert cfg.vocab_size == 122753
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_zero1_and_train_state_specs_divisible():
+    arch = get_arch("granite-3-2b")
+    ocfg = OptConfig()
+    st = abstract_train_state(arch.config, ocfg)
+    specs = train_state_pspecs(arch.config, ocfg, MESH, st)
+    _assert_all_divisible(st, specs, MESH)
+    # moments must pick up a 'data' sharding somewhere
+    mspecs = _flat(specs["opt"])
+    assert any("data" in str(tuple(v)) for k, v in mspecs.items()
+               if k.startswith("m/"))
+
+
+def test_cache_specs_shard_seq_over_model():
+    arch = get_arch("qwen2-0.5b")
+    cache = jax.eval_shape(lambda: init_cache(arch.config, 128, 32768))
+    specs = part.cache_pspecs(arch.config, MESH, cache)
+    fs, fsh = _flat(specs), _flat(cache)
+    kspec = [v for k, v in fs.items() if k.endswith("/k")][0]
+    assert tuple(kspec)[3] == "model"       # [U, B, kvH, S, Dh] -> S sharded
+    _assert_all_divisible(cache, specs, MESH)
+
+
+def test_activation_rules():
+    r = part.activation_rules(get_arch("qwen2-0.5b").config, MESH, 256)
+    assert r["seq"] == "model"              # context-parallel fallback
+    r = part.activation_rules(get_arch("recurrentgemma-9b").config, MESH, 256)
+    assert r["seq"] is None                 # head-TP available
+    assert part.batch_axes(MESH, 1) is None
+    assert part.batch_axes(MESH3, 256) == ("pod", "data")

@@ -1,0 +1,101 @@
+"""Equivalence of the three simulator engines + structural properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interface import InterfaceKind, make_interface
+from repro.core.nand import CellType, chip
+from repro.core.sim import (PageOpParams, channel_bandwidth_mb_s,
+                            page_op_params, saturation_ways, steady_state_mb_s)
+from repro.core.sim_ref import bandwidth_ref_mb_s, simulate_channel_ref
+from repro.kernels.maxplus.ops import channel_end_time_maxplus
+
+op_strategy = st.builds(
+    PageOpParams,
+    cmd_us=st.floats(0.01, 1.0),
+    pre_us=st.floats(0.0, 100.0),
+    slot_us=st.floats(1.0, 100.0),
+    post_lo_us=st.floats(0.0, 500.0),
+    post_hi_us=st.floats(0.0, 2000.0),
+    data_bytes=st.just(2048),
+)
+
+
+@settings(deadline=None, max_examples=25)
+@given(op_strategy, st.sampled_from([1, 2, 4, 8, 16]),
+       st.booleans(), st.integers(16, 128))
+def test_scan_engine_matches_oracle(op, ways, batched, n_pages):
+    ref = simulate_channel_ref(op, ways, n_pages, batched=batched)
+    bw = float(channel_bandwidth_mb_s(
+        op, ways, "batched" if batched else "eager", n_pages=n_pages))
+    assert bw == pytest.approx(n_pages * op.data_bytes / ref, rel=1e-4)
+
+
+@settings(deadline=None, max_examples=15)
+@given(op_strategy, st.sampled_from([1, 2, 4, 8, 16]), st.booleans())
+def test_maxplus_engine_matches_oracle(op, ways, batched):
+    policy = "batched" if batched else "eager"
+    ref = simulate_channel_ref(op, ways, 64, batched=batched)
+    end = channel_end_time_maxplus([op], [ways], n_pages=64, policy=policy)
+    assert float(end[0]) == pytest.approx(ref, rel=1e-4)
+
+
+@settings(deadline=None, max_examples=25)
+@given(op_strategy, st.sampled_from([1, 2, 4, 8, 16]))
+def test_bandwidth_bounded_by_bus_and_chip(op, ways):
+    """The event sim can never beat the closed-form steady-state bound."""
+    bw = bandwidth_ref_mb_s(op, ways, n_pages=256)
+    bus_bound = op.data_bytes / op.slot_us
+    assert bw <= bus_bound * 1.001
+    # and interleaving helps monotonically up to the bus bound
+    if ways > 1:
+        bw1 = bandwidth_ref_mb_s(op, 1, n_pages=256)
+        assert bw >= bw1 * 0.999
+
+
+@settings(deadline=None, max_examples=25)
+@given(op_strategy)
+def test_saturation_ways_property(op):
+    """At W = saturation_ways a symmetric-program channel nearly saturates
+    the bus (MLC hi/lo alternation is tested separately)."""
+    import dataclasses as dc
+    op = dc.replace(op, post_hi_us=op.post_lo_us)
+    w = min(saturation_ways(op), 16)
+    bw = bandwidth_ref_mb_s(op, w, n_pages=512)
+    assert bw <= op.data_bytes / op.slot_us * 1.001
+    if saturation_ways(op) <= 16:
+        assert bw >= 0.70 * op.data_bytes / op.slot_us
+
+
+def test_mlc_write_alternation_matters():
+    """Paper §5.3.1 Case III: asymmetric MLC paired-page programming limits
+    interleaving more than the mean program time alone."""
+    iface = make_interface(InterfaceKind.PROPOSED)
+    mlc = chip(CellType.MLC)
+    op = page_op_params(iface, mlc, "write", 8)
+    sym = PageOpParams(op.cmd_us, op.pre_us, op.slot_us,
+                       op.post_mean_us(), op.post_mean_us(), op.data_bytes)
+    bw_alt = bandwidth_ref_mb_s(op, 8, 512)
+    bw_sym = bandwidth_ref_mb_s(sym, 8, 512)
+    assert bw_alt < bw_sym  # alternation is strictly worse at fixed mean
+
+
+def test_vmapped_sweep_consistency():
+    from repro.core.sim import sweep_bandwidth_mb_s
+    import jax.numpy as jnp
+    ops = [page_op_params(make_interface(k), chip(c), m, 4)
+           for k in InterfaceKind for c in CellType for m in ("read", "write")]
+    bw = sweep_bandwidth_mb_s(
+        jnp.array([o.cmd_us for o in ops], jnp.float32),
+        jnp.array([o.pre_us for o in ops], jnp.float32),
+        jnp.array([o.slot_us for o in ops], jnp.float32),
+        jnp.array([o.post_lo_us for o in ops], jnp.float32),
+        jnp.array([o.post_hi_us for o in ops], jnp.float32),
+        jnp.array([o.data_bytes for o in ops], jnp.float32),
+        jnp.array([4] * len(ops), jnp.int32))
+    for i, op in enumerate(ops):
+        assert float(bw[i]) == pytest.approx(
+            bandwidth_ref_mb_s(op, 4, 512), rel=1e-4)

@@ -1,0 +1,107 @@
+"""Reproduction of the paper's experimental tables (the paper-faithful
+baseline the rest of the framework builds on)."""
+
+import numpy as np
+import pytest
+
+from repro.core.energy import energy_nj_per_byte
+from repro.core.interface import InterfaceKind, make_interface
+from repro.core.nand import CellType
+from repro.core.paper_tables import CLAIMS, INTERFACE_ORDER, TABLE3, TABLE4, TABLE5
+from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+
+# The 2-way SLC PROPOSED read cell (70.47 MB/s, barely above SYNC_ONLY) is
+# anomalous in the paper: the same interface saturates at 117.6 at 4-way and
+# CONV/SYNC scale ~linearly 1->2 way.  Our simulator (either policy) cannot
+# reproduce it without breaking every neighbouring cell; see EXPERIMENTS.md.
+ANOMALIES = {("slc", "read", 2, "proposed")}
+
+
+def _sim(cell, mode, ways, kind, channels=1):
+    cfg = SSDConfig(interface=InterfaceKind(kind), cell=CellType(cell),
+                    channels=channels, ways=ways)
+    return ssd_bandwidth_mb_s(cfg, mode)
+
+
+def test_table3_reproduction_tolerance():
+    errs, worst = [], 0.0
+    for cell, by_mode in TABLE3.items():
+        for mode, by_ways in by_mode.items():
+            for ways, row in by_ways.items():
+                for kind, paper in zip(INTERFACE_ORDER, row):
+                    if (cell, mode, ways, kind) in ANOMALIES:
+                        continue
+                    rel = abs(_sim(cell, mode, ways, kind) - paper) / paper
+                    errs.append(rel)
+                    worst = max(worst, rel)
+    assert np.mean(errs) < 0.04, f"mean rel err {np.mean(errs):.3f}"
+    assert worst < 0.16, f"worst rel err {worst:.3f}"
+
+
+def test_table4_reproduction():
+    errs = []
+    for cell, by_mode in TABLE4.items():
+        for mode, by_cw in by_mode.items():
+            for (channels, ways), row in by_cw.items():
+                for kind, paper in zip(INTERFACE_ORDER, row):
+                    sim = _sim(cell, mode, ways, kind, channels)
+                    if paper is None:  # 'max' = hit the SATA2 300 MB/s cap
+                        assert sim >= 299.0
+                        continue
+                    if (cell, mode, ways, kind) in ANOMALIES:
+                        continue
+                    errs.append(abs(sim - paper) / paper)
+    assert np.mean(errs) < 0.05, f"mean rel err {np.mean(errs):.3f}"
+
+
+def test_headline_speedup_claims():
+    """Abstract: SLC read 1.65-2.76x, write 1.09-2.45x; MLC 1.64-2.66 / 1.05-1.76."""
+    for (cell, mode), (lo, hi) in CLAIMS.items():
+        ratios = []
+        for ways in (1, 2, 4, 8, 16):
+            c = _sim(cell, mode, ways, "conv")
+            p = _sim(cell, mode, ways, "proposed")
+            ratios.append(p / c)
+        assert min(ratios) == pytest.approx(lo, rel=0.12), (cell, mode)
+        assert max(ratios) == pytest.approx(hi, rel=0.12), (cell, mode)
+
+
+def test_saturation_structure():
+    """§5.3.1: CONV read saturates at 2-way, PROPOSED at 4-way (SLC)."""
+    conv = [_sim("slc", "read", w, "conv") for w in (1, 2, 4, 8, 16)]
+    prop = [_sim("slc", "read", w, "proposed") for w in (1, 2, 4, 8, 16)]
+    assert conv[1] / conv[0] > 1.4 and conv[2] / conv[1] < 1.05
+    assert prop[2] / prop[1] > 1.2 and prop[3] / prop[2] < 1.05
+
+
+def test_interface_ordering():
+    """PROPOSED >= SYNC_ONLY >= CONV for every cell/mode/ways."""
+    for cell in ("slc", "mlc"):
+        for mode in ("read", "write"):
+            for ways in (1, 2, 4, 8, 16):
+                c = _sim(cell, mode, ways, "conv")
+                s = _sim(cell, mode, ways, "sync_only")
+                p = _sim(cell, mode, ways, "proposed")
+                assert p >= s * 0.999 >= c * 0.995, (cell, mode, ways)
+
+
+def test_table5_energy_reproduction():
+    errs = []
+    for mode, by_ways in TABLE5.items():
+        for ways, row in by_ways.items():
+            for kind, paper in zip(INTERFACE_ORDER, row):
+                if ("slc", mode, ways, kind) in ANOMALIES:
+                    continue
+                bw = _sim("slc", mode, ways, kind)
+                sim = energy_nj_per_byte(kind, bw)
+                errs.append(abs(sim - paper) / paper)
+    assert np.mean(errs) < 0.06, f"mean rel err {np.mean(errs):.3f}"
+
+
+def test_energy_crossover():
+    """§5.3.3: PROPOSED becomes the most energy-efficient at high way counts."""
+    def e(kind, ways, mode):
+        return energy_nj_per_byte(kind, _sim("slc", mode, ways, kind))
+    assert e("proposed", 1, "write") > e("conv", 1, "write")
+    assert e("proposed", 16, "write") < e("conv", 16, "write")
+    assert e("proposed", 16, "read") < e("conv", 16, "read")

@@ -1,0 +1,61 @@
+"""Paper §4.3/§5.2 closed-form timing equations."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import timing
+
+
+def test_eq6_conventional_matches_paper():
+    # (7.82 + 20 + 1.65 + 0.25) / 1.5 = 19.81 ns  ->  50 MHz
+    t = timing.t_p_min_conventional()
+    assert t == pytest.approx(19.81, abs=0.01)
+    assert timing.max_frequency_mhz(t) == 50
+
+
+def test_eq9_proposed_matches_paper():
+    # max{(0.25 + 0.02 + 4.69) * 2, 12} = 12 ns  ->  83 MHz
+    t = timing.t_p_min_proposed()
+    assert t == pytest.approx(12.0)
+    assert timing.max_frequency_mhz(t) == 83
+
+
+def test_proposed_is_t_byte_limited():
+    """Paper §6: the proposed cycle is limited purely by t_BYTE."""
+    b = timing.PAPER_BOARD
+    assert (b.t_S + b.t_H + b.t_DIFF) * 2 < b.t_BYTE
+
+
+def test_derive_paper_clocks():
+    c = timing.derive_paper_clocks()
+    assert (c.conv_mhz, c.prop_mhz) == (50, 83)
+    assert c.conv_cycle_ns == pytest.approx(20.0)
+    assert c.prop_cycle_ns == pytest.approx(1e3 / 83)
+
+
+def test_eq2_dll():
+    assert timing.t_dll(5.0, 1.0, 0.25) == pytest.approx(4.25)
+
+
+@given(st.floats(0.0, 0.5))
+def test_eq1_and_alpha_monotonicity(alpha):
+    """Larger alpha (more D_CON delay budget) never hurts the CONV clock."""
+    t = timing.t_p_min_conventional(alpha=alpha)
+    t_half = timing.t_p_min_conventional(alpha=0.5)
+    assert t >= t_half - 1e-12
+    assert timing.t_d(alpha, 20.0) == pytest.approx(alpha * 20.0)
+
+
+@given(st.floats(0.1, 50.0), st.floats(0.01, 10.0), st.floats(0.1, 40.0))
+def test_eq8_lower_bound(t_ios, t_ioh, t_byte):
+    t = timing.t_p_min_proposed_io(t_ios, t_ioh, t_byte)
+    assert t >= (t_ios + t_ioh) * 2 - 1e-12
+    assert t >= t_byte - 1e-12
+    assert t == pytest.approx(max((t_ios + t_ioh) * 2, t_byte))
+
+
+def test_alpha_validation():
+    with pytest.raises(ValueError):
+        timing.t_d(0.7, 10.0)
