@@ -5,7 +5,9 @@ framework's contribution is making that sweep a data-parallel tensor
 program: we time (a) the plain-Python event loop, (b) the jit+vmap
 ``lax.scan`` engine, and (c) the (max,+) Pallas kernel in interpret mode
 (CPU; on TPU the same kernel runs compiled) over a
-channels × ways × interface × cell × mode grid.
+channels × ways × interface × cell × mode grid — and, beyond the paper,
+over **mixed-workload op traces** (read fraction × geometry grid) that
+exercise the shared-controller contention path on all three engines.
 """
 
 from __future__ import annotations
@@ -17,9 +19,11 @@ import numpy as np
 
 from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import CellType, chip
-from repro.core.sim import page_op_params, sweep_bandwidth_mb_s
-from repro.core.sim_ref import bandwidth_ref_mb_s
-from repro.kernels.maxplus.ops import bandwidth_maxplus_mb_s
+from repro.core.sim import SSDConfig, page_op_params, sweep_bandwidth_mb_s
+from repro.core.sim_ref import bandwidth_ref_mb_s, trace_bandwidth_ref_mb_s
+from repro.core.trace import mixed_trace, op_class_table, trace_bandwidth_mb_s
+from repro.kernels.maxplus.ops import (bandwidth_maxplus_mb_s,
+                                       trace_bandwidth_maxplus_mb_s)
 
 N_PAGES = 256
 
@@ -70,4 +74,53 @@ def run() -> list[dict]:
          "paper": "(compiled Pallas on TPU)"},
         {"name": "sweep/vmap_speedup_vs_python",
          "value": round(t_ref / max(t_vm, 1e-9), 1), "paper": "-"},
+    ] + run_mixed()
+
+
+def run_mixed() -> list[dict]:
+    """Mixed-workload design-point sweep (beyond the paper's §5.3 grid):
+    read fraction × (channels, ways), all three engines on one trace per
+    geometry, batching interfaces×cells through the (max,+) kernel."""
+    rows, agree = [], 0.0
+    n_points = 0
+    t_scan = t_mp = t_ref = 0.0
+    for channels, ways in ((1, 8), (2, 4), (4, 8)):
+        for read_frac in (1.0, 0.7, 0.5, 0.0):
+            tr = mixed_trace(N_PAGES * channels, channels, ways, read_frac,
+                             seed=channels * 100 + int(read_frac * 10))
+            cfgs = [SSDConfig(interface=k, cell=c, channels=channels,
+                              ways=ways)
+                    for k in InterfaceKind for c in CellType]
+            tables = [op_class_table(cfg) for cfg in cfgs]
+            t0 = time.perf_counter()
+            scan_bw = np.array([trace_bandwidth_mb_s(t, tr) for t in tables])
+            t_scan += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            mp_bw = trace_bandwidth_maxplus_mb_s(tables, tr)
+            t_mp += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ref_bw = np.array([trace_bandwidth_ref_mb_s(t, tr)
+                               for t in tables])
+            t_ref += time.perf_counter() - t0
+            agree = max(agree,
+                        float(np.max(np.abs(scan_bw - ref_bw) / ref_bw)),
+                        float(np.max(np.abs(mp_bw - ref_bw) / ref_bw)))
+            n_points += len(tables)
+            rows.append({
+                "name": (f"mixed/{channels}ch{ways}way/"
+                         f"read{int(read_frac * 100)}"
+                         "/proposed_mlc_mb_s"),
+                "value": round(float(scan_bw[-1]), 1),
+                "paper": "-"})
+    assert agree < 1e-3, f"engines disagree by {agree:.2e} on mixed traces"
+    rows += [
+        {"name": "mixed/engine_max_rel_disagreement", "value": f"{agree:.1e}",
+         "paper": "<1e-3"},
+        {"name": "mixed/scan_us_per_point",
+         "value": round(t_scan / n_points * 1e6, 1), "paper": "-"},
+        {"name": "mixed/maxplus_interpret_us_per_point",
+         "value": round(t_mp / n_points * 1e6, 1), "paper": "-"},
+        {"name": "mixed/python_oracle_us_per_point",
+         "value": round(t_ref / n_points * 1e6, 1), "paper": "-"},
     ]
+    return rows

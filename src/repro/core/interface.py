@@ -65,6 +65,15 @@ class InterfaceParams:
         e = ECC[cell]
         return e.cycles * self.cycle_ns * 1e-3 + e.fixed_us
 
+    def ecc_fixed_us(self, cell: CellType) -> float:
+        """Clock-independent FTL/firmware share of the ECC occupancy.
+
+        The cycle-scaled part runs on the per-channel ECC block (§2.2.1:
+        every channel carries its own NAND_IF + ECC hardware); only this
+        fixed firmware part occupies the single shared controller thread
+        in the multi-channel simulation (DESIGN.md §3)."""
+        return ECC[cell].fixed_us
+
     def read_slot_us(self, chip: NandChipParams) -> float:
         """Bus+controller occupancy of one page read (excl. t_R)."""
         return self.cmd_us + self.data_us(chip.page_total_bytes) + self.ecc_us(chip.cell)

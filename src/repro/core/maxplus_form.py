@@ -1,78 +1,168 @@
-"""The SSD channel event recurrence as (max,+) linear algebra.
+"""The SSD trace event recurrence as (max,+) linear algebra.
 
-The per-page-op update of the event simulator (``repro.core.sim``)
+The per-op update of the trace simulator (``repro.core.sim``)
 
-    ready   = chip_free[w] + cmd + pre                (eager)
-              round_start + (w+1)·cmd + pre           (batched)
-    bus'    = max(bus + slot, ready + slot)
-    chip'_w = bus' + post ;  chip'_j = chip_j ;  rs' = rs / bus
+    ready    = chip_free[c,w] + cmd + pre               (eager)
+               round_start[c] + (w+1)·cmd + pre         (batched)
+    start    = max(bus_free[c], ready, ctrl_free) + arb
+    bus'_c   = start + slot ;  ctrl' = start + ctrl
+    chip'_cw = bus'_c + post(parity)
 
 is affine in the (max,+) semiring over the state vector
 
-    s = [bus_free, chip_free_0 .. chip_free_{W-1}, round_start]
+    s = [bus_0..bus_{C-1},
+         chip_00..chip_{C-1,W-1},
+         ctrl_free,
+         round_start_0..round_start_{C-1}]
 
-so one page op is a matvec  s' = A_i ⊗ s  with (A ⊗ s)_r = max_c (A_rc + s_c).
-The matrices are periodic in i with period 2·ways (way round-robin ×
-MLC lower/upper-page parity), so a whole trace is a fold over a periodic
-matrix sequence — the TPU-native replacement for the paper's sequential
-RTL co-simulation (DESIGN.md §2.1).  ``repro.kernels.maxplus`` evaluates
-the fold for thousands of design points in parallel.
+so one op is a matvec  s' = A ⊗ s  with (A ⊗ s)_r = max_c (A_rc + s_c).
+Each *distinct* (op-class, channel, way, parity) combination appearing in
+a trace gets one matrix; the trace compiles to a **matrix dictionary**
+``mats [M, N, N]`` plus an index sequence ``idx [T]``, and the whole
+trace is the fold  s_T = A_{idx[T-1]} ⊗ … ⊗ A_{idx[0]} ⊗ s_0 — the
+TPU-native replacement for the paper's sequential RTL co-simulation
+(DESIGN.md §2.1).  A homogeneous single-channel stream degenerates to the
+old periodic form: M = 2·ways matrices (way round-robin × MLC page
+parity) and idx[t] = t mod 2·ways.  ``repro.kernels.maxplus`` evaluates
+the fold for thousands of design points in parallel, gathering
+``A[idx[t]]`` inside its ``fori_loop``.
 
-Fixed state size ``N_STATE`` (= MAX_WAYS + 2) keeps design points with
-different way counts batchable; unused chip rows are (max,+) identity.
+``StateLayout`` fixes (channels, ways) per batch so design points with
+different geometries stay batchable; unused rows are (max,+) identity.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core.sim import MAX_WAYS, PageOpParams
 
 NEG = -1e30
-N_STATE = MAX_WAYS + 2      # bus, chips 0..15, round_start
-PERIOD = 2 * MAX_WAYS       # covers way round-robin × page parity for ways | 16
+
+
+@dataclasses.dataclass(frozen=True)
+class StateLayout:
+    """Row indexing of the (max,+) state vector for a (C, W) geometry."""
+
+    channels: int = 1
+    ways: int = MAX_WAYS
+
+    @property
+    def n_state(self) -> int:
+        c, w = self.channels, self.ways
+        return c + c * w + 1 + c
+
+    def bus(self, c: int) -> int:
+        return c
+
+    def chip(self, c: int, w: int) -> int:
+        return self.channels + c * self.ways + w
+
+    @property
+    def ctrl(self) -> int:
+        return self.channels * (1 + self.ways)
+
+    def rs(self, c: int) -> int:
+        return self.ctrl + 1 + c
+
+    @property
+    def n_completion_rows(self) -> int:
+        """bus + chip rows participate in the completion time; the ctrl
+        and round_start helpers never exceed them."""
+        return self.channels * (1 + self.ways)
+
+
+DEFAULT_LAYOUT = StateLayout(1, MAX_WAYS)
+N_STATE = DEFAULT_LAYOUT.n_state   # bus, chips 0..15, ctrl, round_start
+PERIOD = 2 * MAX_WAYS              # homogeneous: round-robin × page parity
+
+
+def op_matrix(layout: StateLayout, *, cmd_us: float, pre_us: float,
+              slot_us: float, ctrl_us: float, arb_us: float, post_us: float,
+              channel: int, way: int, policy: str = "eager") -> np.ndarray:
+    """(max,+) step matrix of one op on (channel, way)."""
+    n = layout.n_state
+    a = np.full((n, n), NEG, np.float32)
+    for r in range(n):
+        a[r, r] = 0.0                       # untouched resources persist
+    bus, chip = layout.bus(channel), layout.chip(channel, way)
+    ctrl, rs = layout.ctrl, layout.rs(channel)
+    # start = max over these source columns (+ per-column offsets) + arb:
+    if policy == "batched":
+        if way == 0:
+            sources = {bus: cmd_us + pre_us}
+            a[rs, :] = NEG
+            a[rs, bus] = 0.0                # round_start' = old bus_free
+        else:
+            sources = {bus: 0.0, rs: (way + 1) * cmd_us + pre_us}
+    else:
+        sources = {bus: 0.0, chip: cmd_us + pre_us}
+    sources[ctrl] = max(sources.get(ctrl, NEG), 0.0)
+    for row, extra in ((bus, slot_us), (ctrl, ctrl_us),
+                       (chip, slot_us + post_us)):
+        a[row, :] = NEG
+        for col, off in sources.items():
+            a[row, col] = arb_us + off + extra
+    return a
 
 
 def transition_matrices(op: PageOpParams, ways: int, policy: str = "eager",
-                        ) -> np.ndarray:
-    """[PERIOD, N_STATE, N_STATE] float32 (max,+) step matrices."""
+                        arb_us: float = 0.0) -> np.ndarray:
+    """[PERIOD, N_STATE, N_STATE] periodic matrices of a homogeneous
+    single-channel stream (back-compat design-point batching form)."""
     assert MAX_WAYS % ways == 0, f"kernel path needs ways | {MAX_WAYS}, got {ways}"
-    bus, rs = 0, N_STATE - 1
-    mats = np.full((PERIOD, N_STATE, N_STATE), NEG, np.float32)
-    for i in range(PERIOD):
-        w = i % ways
-        post = op.post_lo_us if (i // ways) % 2 == 0 else op.post_hi_us
-        a = mats[i]
-        chip = 1 + w
-        if policy == "batched":
-            if w == 0:
-                a[bus, bus] = op.cmd_us + op.pre_us + op.slot_us
-                a[rs, bus] = 0.0
-            else:
-                a[bus, bus] = op.slot_us
-                a[bus, rs] = (w + 1) * op.cmd_us + op.pre_us + op.slot_us
-                a[rs, rs] = 0.0
-        else:  # eager
-            a[bus, bus] = op.slot_us
-            a[bus, chip] = op.cmd_us + op.pre_us + op.slot_us
-            a[rs, rs] = 0.0
-        # chip'_w = bus' + post  (same row as bus, shifted by post)
-        for c in range(N_STATE):
-            if a[bus, c] > NEG / 2:
-                a[chip, c] = a[bus, c] + post
-        for j in range(ways):
-            if j != w:
-                a[1 + j, 1 + j] = max(a[1 + j, 1 + j], 0.0)
-        for j in range(ways, MAX_WAYS):
-            a[1 + j, 1 + j] = 0.0
+    mats = np.stack([
+        op_matrix(DEFAULT_LAYOUT, cmd_us=op.cmd_us, pre_us=op.pre_us,
+                  slot_us=op.slot_us, ctrl_us=op.ctrl_us, arb_us=arb_us,
+                  post_us=(op.post_lo_us if (i // ways) % 2 == 0
+                           else op.post_hi_us),
+                  channel=0, way=i % ways, policy=policy)
+        for i in range(PERIOD)])
     return mats
 
 
-def init_state() -> np.ndarray:
-    """All resources free at t=0 (round_start included)."""
-    return np.zeros((N_STATE,), np.float32)
+def trace_combos(trace) -> tuple[list[tuple[int, int, int, int]], np.ndarray]:
+    """Distinct (class, channel, way, parity) combos of a trace, in order
+    of first appearance, plus the per-op index into them.  Depends only on
+    the trace — shareable across a batch of timing tables."""
+    combos: dict[tuple[int, int, int, int], int] = {}
+    idx = np.empty(trace.n_ops, np.int32)
+    for t in range(trace.n_ops):
+        key = (int(trace.cls[t]), int(trace.channel[t]),
+               int(trace.way[t]), int(trace.parity[t]) % 2)
+        m = combos.get(key)
+        if m is None:
+            m = combos[key] = len(combos)
+        idx[t] = m
+    return list(combos), idx
 
 
-def end_time_from_state(state: np.ndarray) -> np.ndarray:
-    """Completion = max(bus, chip frees); exclude the round_start helper."""
-    return state[..., :N_STATE - 1].max(axis=-1)
+def combo_matrices(table, combos, layout: StateLayout,
+                   policy: str = "eager") -> np.ndarray:
+    """[M, N, N] step matrices for one timing table over shared combos."""
+    return np.stack([
+        op_matrix(
+            layout,
+            cmd_us=float(table.cmd_us[k]), pre_us=float(table.pre_us[k]),
+            slot_us=float(table.slot_us[k]), ctrl_us=float(table.ctrl_us[k]),
+            arb_us=float(table.arb_us[k]),
+            post_us=float(table.post_lo_us[k] if par == 0
+                          else table.post_hi_us[k]),
+            channel=c, way=w, policy=policy)
+        for k, c, w, par in combos])
+
+
+
+
+def init_state(layout: StateLayout = DEFAULT_LAYOUT) -> np.ndarray:
+    """All resources free at t=0 (controller and round_starts included)."""
+    return np.zeros((layout.n_state,), np.float32)
+
+
+def end_time_from_state(state: np.ndarray,
+                        layout: StateLayout = DEFAULT_LAYOUT) -> np.ndarray:
+    """Completion = max(bus, chip frees); excludes the ctrl/round_start
+    helper rows (they never exceed the issuing op's bus row)."""
+    return state[..., :layout.n_completion_rows].max(axis=-1)

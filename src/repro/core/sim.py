@@ -1,31 +1,54 @@
-"""JAX-native discrete-event simulator of an SSD channel.
+"""JAX-native discrete-event simulator of a multi-channel SSD.
 
 The paper evaluates its DDR NAND interface with a behavioural RTL
 co-simulation (MentorGraphics Seamless).  We reformulate that event loop as
 a **data-parallel timeline recurrence**: the only state needed to advance
 the simulation by one page operation is
 
-    s = (bus_free_time, chip_free_time[way_0..way_{W-1}] [, round_start])
+    s = (bus_free[ch_0..ch_{C-1}],
+         chip_free[ch, way_0..way_{W-1}],
+         ctrl_free,                       # shared ECC/FTL controller
+         round_start[ch])
 
-and the per-page update is a (max, +) expression over that state.  This
-gives three interchangeable engines:
+and the per-op update is a (max, +) expression over that state.  Each op in
+a trace carries (op-class, channel, way, page-parity); the per-op timing is
+a gather from a small op-class table (``repro.core.trace.OpClassTable``),
+so a single engine handles heterogeneous mixed read/write traffic across
+all channels jointly.  Three interchangeable engines evaluate the
+recurrence (DESIGN.md §2):
 
-* ``simulate_channel`` / ``channel_bandwidth_mb_s`` — ``jax.lax.scan`` over
-  page ops (jit/vmap-able);
-* ``repro.kernels.maxplus`` — the same recurrence as a blocked associative
-  (max,+) matrix scan in Pallas (TPU-native, log-depth across a trace);
-* ``repro.core.sim_ref`` — plain-Python oracle for tests.
+* ``trace_end_time`` / ``channel_bandwidth_mb_s`` — ``jax.lax.scan`` over
+  trace ops (jit/vmap-able);
+* ``repro.kernels.maxplus`` — the same recurrence as a blocked (max,+)
+  matrix fold in Pallas, gathering the per-op-class matrix ``A[idx[t]]``
+  per step (TPU-native, batched across design points);
+* ``repro.core.sim_ref`` — plain-Python trace oracle for tests.
 
-Model structure (per channel, W ways, round-robin page striping)
------------------------------------------------------------------
+Model structure (C channels, W ways each, round-robin page striping)
+--------------------------------------------------------------------
 READ  page:  pre = t_CMD + t_R   (off-bus: command latch + array fetch)
              slot = t_DATA(page+spare) + t_ECC   (bus + ECC occupancy)
 WRITE page:  slot = t_CMD + t_DATA + t_ECC + W*t_POLL  (the controller
              status-polls every way once per page slot), then the chip is
              busy for t_PROG.  MLC chips program paired pages with strongly
-             asymmetric times (lower/upper page); we model the alternation
-             explicitly — it is what makes MLC write interleaving scale
-             sub-ideally (paper §5.3.1 Case III).
+             asymmetric times (lower/upper page); the trace carries the
+             page parity explicitly — it is what makes MLC write
+             interleaving scale sub-ideally (paper §5.3.1 Case III).
+
+Shared-controller occupancy (DESIGN.md §3)
+------------------------------------------
+The paper's SSD has ONE embedded controller arbitrating all channels,
+while every channel carries its own NAND_IF + ECC hardware (§2.2.1).  Per
+op, the clock-independent FTL/firmware share of the slot (``ctrl_us`` =
+ECC fixed cost + write status polling) occupies that controller serially
+across channels (``ctrl_free`` state row).  With more than one active
+channel the firmware additionally pays, per bus grant, a context switch
+plus a status scan of every other channel —
+``arb_us = (CTRL_ARB_SWITCH_FRAC + CTRL_ARB_SCAN_FRAC*(C-1)) * ctrl_us``
+(zero for a dedicated single-channel loop).  This replaces the retired
+``STRIPE_EFFICIENCY_EXP`` bandwidth fudge: multi-channel Table 4 numbers
+now come out of the joint simulation itself, and the old exponent survives
+only as a calibration cross-check (``repro.core.calibrate``).
 
 Scheduling policies
 -------------------
@@ -37,7 +60,7 @@ behaviour:
   idle (commands squeeze into bus gaps; 7 cycles ≈ 0.1 us vs transfers of
   12–90 us).
 * ``batched`` — strict in-order firmware loop: round r's commands are only
-  issued once the bus drained round r-1's transfers.
+  issued once the channel's bus drained round r-1's transfers.
 
 Reads bracket the paper's measurements between these; writes are bus-gated
 in both, so the policies coincide for writes.
@@ -55,15 +78,35 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.interface import (WRITE_POLL_FIXED_US, InterfaceKind,
                                   InterfaceParams, make_interface)
 from repro.core.nand import CellType, NandChipParams, chip as nand_chip
 
 MAX_WAYS = 16
+MAX_CHANNELS = 8
+
+# Firmware channel arbitration: with more than one active channel, each
+# bus grant costs the single controller thread a context switch
+# (CTRL_ARB_SWITCH_FRAC of the op's firmware occupancy) plus a status
+# scan of every additional channel (CTRL_ARB_SCAN_FRAC each).  A
+# dedicated single-channel loop pays neither.  Both fractions are
+# calibrated on paper Table 4 (constant-capacity channel/way trade-off);
+# see DESIGN.md §3.2 and ``repro.core.calibrate.stripe_crosscheck``.
+CTRL_ARB_SWITCH_FRAC = 0.4
+CTRL_ARB_SCAN_FRAC = 0.1
 
 Policy = Literal["eager", "batched"]
 Mode = Literal["read", "write"]
+
+
+def controller_arb_us(ctrl_us: float, channels: int) -> float:
+    """Per-op firmware arbitration charge for a C-channel controller."""
+    if channels <= 1:
+        return 0.0
+    return (CTRL_ARB_SWITCH_FRAC
+            + CTRL_ARB_SCAN_FRAC * (channels - 1)) * ctrl_us
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,15 +129,17 @@ class SSDConfig:
 
 @dataclasses.dataclass(frozen=True)
 class PageOpParams:
-    """Scalar timing of one page-operation class on one channel.
+    """Scalar timing of one page-operation class.
 
-    Recurrence consumed by all engines (see module docstring):
+    Recurrence consumed by all engines, per op on channel c / way w (see
+    module docstring; arb_us = controller_arb_us(ctrl_us, C)):
 
-        ready        = chip_free[w] + cmd_us + pre_us              (eager)
-                       round_start + (w+1)*cmd_us + pre_us         (batched)
-        start        = max(bus_free, ready)
-        bus_free'    = start + slot_us
-        chip_free'[w]= bus_free' + post_us(page)
+        ready          = chip_free[c,w] + cmd_us + pre_us           (eager)
+                         round_start[c] + (w+1)*cmd_us + pre_us     (batched)
+        start          = max(bus_free[c], ready, ctrl_free) + arb_us
+        bus_free'[c]   = start + slot_us
+        ctrl_free'     = start + ctrl_us
+        chip_free'[c,w]= bus_free'[c] + post_us(page parity)
     """
 
     cmd_us: float        # command/address latch occupancy
@@ -103,6 +148,7 @@ class PageOpParams:
     post_lo_us: float    # chip busy after slot (t_PROG; 0 for reads)
     post_hi_us: float    # odd-numbered page on a chip (MLC upper page)
     data_bytes: int      # user payload per op
+    ctrl_us: float = 0.0  # FTL/firmware share of slot_us (shared controller)
 
     def post_mean_us(self) -> float:
         return 0.5 * (self.post_lo_us + self.post_hi_us)
@@ -119,62 +165,79 @@ def page_op_params(
             post_lo_us=0.0,
             post_hi_us=0.0,
             data_bytes=nand.page_data_bytes,
+            ctrl_us=iface.ecc_fixed_us(nand.cell),
         )
+    poll_us = (ways * nand.t_poll_cycles * iface.cycle_ns * 1e-3
+               + WRITE_POLL_FIXED_US)
     return PageOpParams(
         cmd_us=iface.cmd_us,
         pre_us=0.0,
-        slot_us=(
-            iface.data_us(nand.page_total_bytes)
-            + iface.ecc_us(nand.cell)
-            + ways * nand.t_poll_cycles * iface.cycle_ns * 1e-3
-            + WRITE_POLL_FIXED_US
-        ),
+        slot_us=(iface.data_us(nand.page_total_bytes)
+                 + iface.ecc_us(nand.cell) + poll_us),
         post_lo_us=nand.t_prog_lo_us,
         post_hi_us=nand.t_prog_hi_us,
         data_bytes=nand.page_data_bytes,
+        ctrl_us=iface.ecc_fixed_us(nand.cell) + poll_us,
     )
 
 
 # ---------------------------------------------------------------------------
-# lax.scan engine
+# lax.scan trace engine
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("n_pages", "batched"))
-def _channel_end_time(
-    cmd_us: jax.Array,
-    pre_us: jax.Array,
-    slot_us: jax.Array,
-    post_lo_us: jax.Array,
-    post_hi_us: jax.Array,
-    ways: jax.Array,
-    n_pages: int,
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_end_time(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K] shared-controller share of slot
+    arb_us: jax.Array,       # [K] per-op firmware arbitration charge
+    cls: jax.Array,          # [T] int32 op-class index per op
+    channel: jax.Array,      # [T] int32
+    way: jax.Array,          # [T] int32
+    parity: jax.Array,       # [T] int32 page parity (MLC lower/upper)
+    n_channels: int,
     batched: bool,
 ) -> jax.Array:
-    """Completion time of ``n_pages`` round-robin page ops on one channel."""
+    """Completion time (us) of a heterogeneous op trace on C channels."""
 
-    def step(state, i):
-        bus_free, chip_free, round_start = state
-        w = jnp.mod(i, ways)
-        rnd = i // ways
-        round_start = jnp.where(w == 0, bus_free, round_start)
+    def step(state, op):
+        bus_free, chip_free, ctrl_free, round_start = state
+        k, c, w, par = op
+        cmd = cmd_us[k]
+        round_start = jnp.where(
+            w == 0, round_start.at[c].set(bus_free[c]), round_start)
         if batched:
-            ready = round_start + (w + 1).astype(jnp.float32) * cmd_us + pre_us
+            ready = round_start[c] + (w + 1).astype(jnp.float32) * cmd + pre_us[k]
         else:
-            ready = chip_free[w] + cmd_us + pre_us
-        start = jnp.maximum(bus_free, ready)
-        new_bus = start + slot_us
-        post = jnp.where(rnd % 2 == 0, post_lo_us, post_hi_us)
-        chip_free = chip_free.at[w].set(new_bus + post)
-        return (new_bus, chip_free, round_start), None
+            ready = chip_free[c, w] + cmd + pre_us[k]
+        start = (jnp.maximum(jnp.maximum(bus_free[c], ready), ctrl_free)
+                 + arb_us[k])
+        new_bus = start + slot_us[k]
+        post = jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k])
+        bus_free = bus_free.at[c].set(new_bus)
+        chip_free = chip_free.at[c, w].set(new_bus + post)
+        return (bus_free, chip_free, start + ctrl_us[k], round_start), None
 
     init = (
+        jnp.zeros((n_channels,), jnp.float32),
+        jnp.zeros((n_channels, MAX_WAYS), jnp.float32),
         jnp.asarray(0.0, jnp.float32),
-        jnp.zeros((MAX_WAYS,), jnp.float32),
-        jnp.asarray(0.0, jnp.float32),
+        jnp.zeros((n_channels,), jnp.float32),
     )
-    (bus_free, chip_free, _), _ = jax.lax.scan(step, init, jnp.arange(n_pages))
-    return jnp.maximum(bus_free, jnp.max(chip_free))
+    ops = (cls.astype(jnp.int32), channel.astype(jnp.int32),
+           way.astype(jnp.int32), parity.astype(jnp.int32))
+    (bus_free, chip_free, _, _), _ = jax.lax.scan(step, init, ops)
+    return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
+
+
+def _steady_pattern(n_pages, ways):
+    """way/parity index pattern of a single-channel round-robin stream."""
+    i = jnp.arange(n_pages)
+    return jnp.mod(i, ways).astype(jnp.int32), ((i // ways) % 2).astype(jnp.int32)
 
 
 def channel_bandwidth_mb_s(
@@ -184,35 +247,53 @@ def channel_bandwidth_mb_s(
     n_pages: int = 512,
 ) -> jax.Array:
     """Steady-stream bandwidth of a single channel, MB/s."""
-    end = _channel_end_time(
-        jnp.asarray(op.cmd_us, jnp.float32),
-        jnp.asarray(op.pre_us, jnp.float32),
-        jnp.asarray(op.slot_us, jnp.float32),
-        jnp.asarray(op.post_lo_us, jnp.float32),
-        jnp.asarray(op.post_hi_us, jnp.float32),
-        jnp.asarray(ways, jnp.int32),
-        n_pages=n_pages,
+    way, parity = _steady_pattern(n_pages, jnp.asarray(ways, jnp.int32))
+    zeros = jnp.zeros((n_pages,), jnp.int32)
+    end = trace_end_time(
+        jnp.asarray([op.cmd_us], jnp.float32),
+        jnp.asarray([op.pre_us], jnp.float32),
+        jnp.asarray([op.slot_us], jnp.float32),
+        jnp.asarray([op.post_lo_us], jnp.float32),
+        jnp.asarray([op.post_hi_us], jnp.float32),
+        jnp.asarray([op.ctrl_us], jnp.float32),
+        jnp.asarray([0.0], jnp.float32),
+        zeros, zeros, way, parity,
+        n_channels=1,
         batched=(policy == "batched"),
     )
     return (n_pages * op.data_bytes) / end  # bytes/us == MB/s
 
 
-# Channel-striping efficiency exponent, calibrated on paper Table 4: the
-# single embedded controller/FTL arbitrates all channels, costing ~5.5% of
-# aggregate bandwidth per channel doubling (74.07/2×39.78 @2ch,
-# 103.76/4×39.78-ish @4ch, consistent across cells/modes/interfaces).
-STRIPE_EFFICIENCY_EXP = 0.92
-
-
 def ssd_bandwidth_mb_s(cfg: SSDConfig, mode: Mode, n_pages: int = 512) -> float:
-    """SSD-level bandwidth: striped channels (sub-linear, calibrated on
-    Table 4), capped by the SATA2 host link."""
+    """SSD-level bandwidth: all channels simulated jointly against the
+    shared controller (no striping fudge), capped by the SATA2 host link.
+
+    ``n_pages`` is per channel; the joint trace stripes pages round-robin
+    across channels, then ways, with explicit MLC page parity.
+    """
     iface = make_interface(cfg.interface)
     nand = nand_chip(cfg.cell)
     op = page_op_params(iface, nand, mode, cfg.ways)
-    per_channel = channel_bandwidth_mb_s(op, cfg.ways, cfg.policy, n_pages=n_pages)
-    total = per_channel * (cfg.channels ** STRIPE_EFFICIENCY_EXP)
-    return float(jnp.minimum(total, cfg.sata_mb_s))
+    c_count, w_count = cfg.channels, cfg.ways
+    t = np.arange(n_pages * c_count)
+    per_ch = t // c_count
+    end = trace_end_time(
+        jnp.asarray([op.cmd_us], jnp.float32),
+        jnp.asarray([op.pre_us], jnp.float32),
+        jnp.asarray([op.slot_us], jnp.float32),
+        jnp.asarray([op.post_lo_us], jnp.float32),
+        jnp.asarray([op.post_hi_us], jnp.float32),
+        jnp.asarray([op.ctrl_us], jnp.float32),
+        jnp.asarray([controller_arb_us(op.ctrl_us, c_count)], jnp.float32),
+        jnp.zeros((t.size,), jnp.int32),
+        jnp.asarray(t % c_count, jnp.int32),
+        jnp.asarray(per_ch % w_count, jnp.int32),
+        jnp.asarray((per_ch // w_count) % 2, jnp.int32),
+        n_channels=c_count,
+        batched=(cfg.policy == "batched"),
+    )
+    total = (t.size * op.data_bytes) / float(end)
+    return float(min(total, cfg.sata_mb_s))
 
 
 # ---------------------------------------------------------------------------
@@ -251,10 +332,18 @@ def sweep_bandwidth_mb_s(
     n_pages: int = 512,
     batched: bool = False,
 ) -> jax.Array:
-    """Vectorised bandwidth over a batch of design points (all arrays [N])."""
+    """Vectorised single-channel bandwidth over design points (arrays [N])."""
+
+    zeros_i = jnp.zeros((n_pages,), jnp.int32)
+    zero_k = jnp.zeros((1,), jnp.float32)
 
     def one(cmd, pre, slot, lo, hi, nbytes, w):
-        end = _channel_end_time(cmd, pre, slot, lo, hi, w, n_pages, batched)
+        way, parity = _steady_pattern(n_pages, w)
+        end = trace_end_time(
+            cmd[None], pre[None], slot[None], lo[None], hi[None],
+            zero_k, zero_k, zeros_i, zeros_i, way, parity,
+            n_channels=1, batched=batched)
         return (n_pages * nbytes) / end
 
-    return jax.vmap(one)(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, data_bytes, ways)
+    return jax.vmap(one)(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                         data_bytes, ways)

@@ -1,13 +1,51 @@
-"""Plain-Python oracle for the channel event simulation.
+"""Plain-Python oracle for the multi-channel trace simulation.
 
 Used by unit/property tests to validate both the ``lax.scan`` engine and
-the Pallas (max,+) kernel.  Deliberately written as an explicit event loop
+the Pallas (max,+) kernel.  Deliberately written as explicit event loops
 with no vectorisation tricks.
+
+``simulate_trace_ref`` is the general oracle: it walks a heterogeneous
+``OpTrace`` against an ``OpClassTable`` with per-channel buses, the
+shared-controller occupancy row and the firmware arbitration charge
+(DESIGN.md §2-3).  ``simulate_channel_ref`` is the original
+single-channel homogeneous-stream loop, kept verbatim as an independent
+cross-check that the trace machinery did not drift.
 """
 
 from __future__ import annotations
 
 from repro.core.sim import MAX_WAYS, PageOpParams
+
+
+def simulate_trace_ref(table, trace, policy: str = "eager") -> float:
+    """Completion time (us) of an OpTrace on C channels (trace oracle)."""
+    batched = policy == "batched"
+    c_count, w_count = trace.channels, trace.ways
+    bus_free = [0.0] * c_count
+    chip_free = [[0.0] * w_count for _ in range(c_count)]
+    ctrl_free = 0.0
+    round_start = [0.0] * c_count
+    for t in range(trace.n_ops):
+        k = int(trace.cls[t])
+        c = int(trace.channel[t])
+        w = int(trace.way[t])
+        par = int(trace.parity[t])
+        if w == 0:
+            round_start[c] = bus_free[c]
+        if batched:
+            ready = round_start[c] + (w + 1) * table.cmd_us[k] + table.pre_us[k]
+        else:
+            ready = chip_free[c][w] + table.cmd_us[k] + table.pre_us[k]
+        start = max(bus_free[c], ready, ctrl_free) + table.arb_us[k]
+        bus_free[c] = start + table.slot_us[k]
+        ctrl_free = start + table.ctrl_us[k]
+        post = table.post_lo_us[k] if par % 2 == 0 else table.post_hi_us[k]
+        chip_free[c][w] = bus_free[c] + post
+    return float(max(max(bus_free), max(max(row) for row in chip_free)))
+
+
+def trace_bandwidth_ref_mb_s(table, trace, policy: str = "eager") -> float:
+    return trace.total_bytes(table) / simulate_trace_ref(table, trace, policy)
 
 
 def simulate_channel_ref(
@@ -16,7 +54,11 @@ def simulate_channel_ref(
     n_pages: int,
     batched: bool = False,
 ) -> float:
-    """Completion time (us) of n_pages round-robin page ops on one channel."""
+    """Completion time (us) of n_pages round-robin page ops on one channel.
+
+    Single-channel homogeneous special case: the shared controller never
+    binds (ctrl_us <= slot_us, arb_us = 0), so the original pre-trace loop
+    is unchanged."""
     assert 1 <= ways <= MAX_WAYS
     bus_free = 0.0
     chip_free = [0.0] * ways

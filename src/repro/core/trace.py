@@ -1,0 +1,304 @@
+"""Heterogeneous op traces for the multi-channel SSD simulator.
+
+The paper's evaluation (§5.3) covers only homogeneous steady streams —
+pure reads or pure writes on one channel.  Real SSD traffic is mixed and
+contention-dominated, so every engine in this repo consumes an
+``OpTrace``: per-op arrays of op-class index, channel, way and page
+parity, plus an ``OpClassTable`` mapping class indices to scalar timing
+(DESIGN.md §2.2).  Builders cover steady streams, mixed read/write
+ratios, hot/cold skew, and the access patterns of the storage-tier
+consumers (checkpoint / datapipe / KV-offload).
+
+The homogeneous builders reproduce the original single-stream engines
+bit-for-bit (regression-pinned in ``tests/test_trace_engines.py``); the
+heterogeneous ones are what the paper's simulator could not express.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import make_interface
+from repro.core.nand import chip as nand_chip
+from repro.core.sim import (MAX_CHANNELS, MAX_WAYS, Policy, SSDConfig,
+                            controller_arb_us, page_op_params,
+                            trace_end_time)
+
+READ, WRITE = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class OpClassTable:
+    """Timing table of the op classes a trace indexes into (arrays [K])."""
+
+    cmd_us: np.ndarray
+    pre_us: np.ndarray
+    slot_us: np.ndarray
+    post_lo_us: np.ndarray
+    post_hi_us: np.ndarray
+    ctrl_us: np.ndarray       # shared-controller (FTL/firmware) share of slot
+    arb_us: np.ndarray        # per-op firmware arbitration charge
+    data_bytes: np.ndarray
+    labels: tuple[str, ...] = ()
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.cmd_us)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpTrace:
+    """One op per entry; arrays [T] int32.  ``parity`` is the MLC
+    lower/upper page alternation index of the op on its chip.
+    ``payload`` marks ops that deliver user bytes — hedged duplicate
+    reads occupy the bus/controller but are not counted as payload."""
+
+    cls: np.ndarray
+    channel: np.ndarray
+    way: np.ndarray
+    parity: np.ndarray
+    channels: int
+    ways: int
+    payload: np.ndarray | None = None   # bool [T]; None = all payload
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.cls)
+
+    def payload_mask(self) -> np.ndarray:
+        if self.payload is None:
+            return np.ones(self.n_ops, bool)
+        return self.payload.astype(bool)
+
+    def total_bytes(self, table: OpClassTable) -> int:
+        return int(table.data_bytes[self.cls[self.payload_mask()]].sum())
+
+    def read_fraction(self) -> float:
+        return float(np.mean(self.cls == READ))
+
+    def describe(self) -> str:
+        return (f"{self.n_ops} ops, {self.channels}ch x {self.ways}way, "
+                f"read_frac={self.read_fraction():.2f}")
+
+
+def op_class_table(cfg: SSDConfig) -> OpClassTable:
+    """READ/WRITE op classes for one SSD design point."""
+    iface = make_interface(cfg.interface)
+    nand = nand_chip(cfg.cell)
+    ops = [page_op_params(iface, nand, mode, cfg.ways)
+           for mode in ("read", "write")]
+    return OpClassTable(
+        cmd_us=np.array([o.cmd_us for o in ops], np.float32),
+        pre_us=np.array([o.pre_us for o in ops], np.float32),
+        slot_us=np.array([o.slot_us for o in ops], np.float32),
+        post_lo_us=np.array([o.post_lo_us for o in ops], np.float32),
+        post_hi_us=np.array([o.post_hi_us for o in ops], np.float32),
+        ctrl_us=np.array([o.ctrl_us for o in ops], np.float32),
+        arb_us=np.array(
+            [controller_arb_us(o.ctrl_us, cfg.channels) for o in ops],
+            np.float32),
+        data_bytes=np.array([o.data_bytes for o in ops], np.int64),
+        labels=("read", "write"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def _finalize(cls, channel, way, channels, ways, payload=None):
+    """Derive per-chip page parity: the i-th op on a chip programs the
+    lower (even i) or upper (odd i) page of an MLC pair."""
+    assert 1 <= channels <= MAX_CHANNELS, \
+        f"channels must be in [1, {MAX_CHANNELS}], got {channels}"
+    assert 1 <= ways <= MAX_WAYS, \
+        f"ways must be in [1, {MAX_WAYS}], got {ways}"
+    cls = np.asarray(cls, np.int32)
+    channel = np.asarray(channel, np.int32)
+    way = np.asarray(way, np.int32)
+    parity = np.zeros_like(cls)
+    counts = np.zeros((channels, ways), np.int64)
+    for t in range(len(cls)):
+        c, w = channel[t], way[t]
+        parity[t] = counts[c, w] % 2
+        counts[c, w] += 1
+    return OpTrace(cls=cls, channel=channel, way=way, parity=parity,
+                   channels=channels, ways=ways,
+                   payload=(None if payload is None
+                            else np.asarray(payload, bool)))
+
+
+def _round_robin(n_ops: int, channels: int, ways: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """(channel, way) placement of ``n_ops`` sequential pages: stripe
+    round-robin over channels first, then over a channel's ways — the
+    single definition every sequential builder (and the Table 3/4
+    regression baseline) shares."""
+    t = np.arange(n_ops)
+    return t % channels, (t // channels) % ways
+
+
+def steady_trace(n_pages_per_channel: int, channels: int, ways: int,
+                 op_cls: int = READ) -> OpTrace:
+    """Homogeneous stream, striped round-robin over channels then ways —
+    the paper's §5.3 workload; reproduces the retired single-stream
+    engines exactly at channels=1."""
+    n = n_pages_per_channel * channels
+    chan, way = _round_robin(n, channels, ways)
+    return _finalize(np.full(n, op_cls), chan, way, channels, ways)
+
+
+def mixed_trace(n_ops: int, channels: int, ways: int, read_fraction: float,
+                seed: int = 0) -> OpTrace:
+    """Mixed read/write traffic, channel/way round-robin placement."""
+    rng = np.random.default_rng(seed)
+    cls = np.where(rng.random(n_ops) < read_fraction, READ, WRITE)
+    chan, way = _round_robin(n_ops, channels, ways)
+    return _finalize(cls, chan, way, channels, ways)
+
+
+def hot_cold_trace(n_ops: int, channels: int, ways: int,
+                   read_fraction: float = 0.7, hot_fraction: float = 0.8,
+                   hot_share: float = 0.25, seed: int = 0) -> OpTrace:
+    """Skewed placement: ``hot_fraction`` of ops land on the ``hot_share``
+    hottest chips (FTL hot/cold separation stress; no round-robin)."""
+    rng = np.random.default_rng(seed)
+    n_chips = channels * ways
+    n_hot = max(1, int(round(hot_share * n_chips)))
+    hot = rng.random(n_ops) < hot_fraction
+    chip = np.where(hot, rng.integers(0, n_hot, n_ops),
+                    rng.integers(0, n_chips, n_ops))
+    cls = np.where(rng.random(n_ops) < read_fraction, READ, WRITE)
+    return _finalize(cls, chip % channels, (chip // channels) % ways,
+                     channels, ways)
+
+
+def _pages(nbytes: int, page_bytes: int) -> int:
+    return max(1, -(-int(nbytes) // page_bytes))
+
+
+def _bucket(n: int, max_ops: int) -> int:
+    """Round a window length up to a power of two (bounded by max_ops) so
+    byte-extrapolated estimates reuse jit cache entries across sizes."""
+    return min(max_ops, 1 << (n - 1).bit_length())
+
+
+def checkpoint_trace(nbytes: int, cfg: SSDConfig,
+                     max_ops: int = 4096) -> OpTrace:
+    """Checkpoint save: a pure write burst, chunk-striped across channels
+    (mirrors ``CheckpointEngine``'s round-robin chunk placement).  Long
+    bursts are truncated to ``max_ops``; callers extrapolate by bytes
+    (the stream is steady-state)."""
+    n = _bucket(_pages(nbytes, nand_chip(cfg.cell).page_data_bytes), max_ops)
+    chan, way = _round_robin(n, cfg.channels, cfg.ways)
+    return _finalize(np.full(n, WRITE), chan, way, cfg.channels, cfg.ways)
+
+
+def datapipe_trace(nbytes: int, cfg: SSDConfig, hedge_fraction: float = 0.0,
+                   seed: int = 0, max_ops: int = 4096) -> OpTrace:
+    """Data-pipeline refill: way-interleaved shard reads; a
+    ``hedge_fraction`` of reads is re-issued on the next channel
+    (straggler hedging duplicates traffic, it does not replace it)."""
+    n = _bucket(_pages(nbytes, nand_chip(cfg.cell).page_data_bytes), max_ops)
+    rng = np.random.default_rng(seed)
+    chan, way = _round_robin(n, cfg.channels, cfg.ways)
+    cls, channel, ways_, payload = [], [], [], []
+    hedged = rng.random(n) < hedge_fraction
+    for i in range(n):
+        cls.append(READ); channel.append(chan[i]); ways_.append(way[i])
+        payload.append(True)
+        if hedged[i]:
+            # duplicate occupies a neighbouring channel but delivers no
+            # *new* payload bytes (first response wins)
+            cls.append(READ)
+            channel.append((chan[i] + 1) % cfg.channels)
+            ways_.append(way[i])
+            payload.append(False)
+    return _finalize(cls, channel, ways_, cfg.channels, cfg.ways,
+                     payload=payload)
+
+
+def kvoffload_trace(read_bytes_per_token: int, cfg: SSDConfig,
+                    n_tokens: int = 8, append_bytes_per_token: int = 0,
+                    max_ops: int = 4096) -> OpTrace:
+    """Long-context decode: per token, a cold-KV read burst with the KV
+    append writes interleaved evenly (write-back caching overlaps the
+    append with the read stream), striped across channels.  Interleaving
+    keeps the read/write mix representative when a huge per-token burst
+    is truncated to the ``max_ops`` simulation window."""
+    page = nand_chip(cfg.cell).page_data_bytes
+    reads = _pages(read_bytes_per_token, page)
+    writes = (_pages(append_bytes_per_token, page)
+              if append_bytes_per_token > 0 else 0)
+    # build only the simulated window: a GiB-scale burst is represented
+    # by a max_ops-sized pattern with the same read/write mix
+    per_tok = reads + writes
+    if per_tok > max_ops:
+        writes = round(writes * max_ops / per_tok) if writes else 0
+        reads = max_ops - writes
+    token = np.full(reads, READ, np.int32)
+    if writes:
+        at = np.linspace(0, reads, writes, endpoint=False).astype(int)
+        token = np.insert(token, np.sort(at), WRITE)
+    reps = min(n_tokens, -(-max_ops // len(token)))
+    cls = np.tile(token, reps)[:max_ops]
+    chan, way = _round_robin(cls.size, cfg.channels, cfg.ways)
+    return _finalize(cls, chan, way, cfg.channels, cfg.ways)
+
+
+# ---------------------------------------------------------------------------
+# Simulation entry points (lax.scan engine)
+# ---------------------------------------------------------------------------
+
+
+def simulate(table: OpClassTable, trace: OpTrace,
+             policy: Policy = "eager") -> float:
+    """Completion time (us) of ``trace`` under ``table`` — scan engine."""
+    end = trace_end_time(
+        jnp.asarray(table.cmd_us), jnp.asarray(table.pre_us),
+        jnp.asarray(table.slot_us), jnp.asarray(table.post_lo_us),
+        jnp.asarray(table.post_hi_us), jnp.asarray(table.ctrl_us),
+        jnp.asarray(table.arb_us),
+        jnp.asarray(trace.cls), jnp.asarray(trace.channel),
+        jnp.asarray(trace.way), jnp.asarray(trace.parity),
+        n_channels=trace.channels,
+        batched=(policy == "batched"),
+    )
+    return float(end)
+
+
+def trace_bandwidth_mb_s(table: OpClassTable, trace: OpTrace,
+                         policy: Policy = "eager") -> float:
+    """Aggregate user-payload bandwidth of the trace, MB/s."""
+    return trace.total_bytes(table) / simulate(table, trace, policy)
+
+
+_WORKLOADS = {
+    "steady_read": lambda cfg, n_pages=512: steady_trace(
+        n_pages, cfg.channels, cfg.ways, READ),
+    "steady_write": lambda cfg, n_pages=512: steady_trace(
+        n_pages, cfg.channels, cfg.ways, WRITE),
+    "mixed": lambda cfg, n_ops=None, read_fraction=0.7, seed=0: mixed_trace(
+        n_ops or 512 * cfg.channels, cfg.channels, cfg.ways,
+        read_fraction, seed),
+    "hot_cold": lambda cfg, n_ops=None, **kw: hot_cold_trace(
+        n_ops or 512 * cfg.channels, cfg.channels, cfg.ways, **kw),
+    "checkpoint": lambda cfg, nbytes, **kw: checkpoint_trace(
+        nbytes, cfg, **kw),
+    "datapipe": lambda cfg, nbytes, **kw: datapipe_trace(nbytes, cfg, **kw),
+    "kvoffload": lambda cfg, read_bytes_per_token, **kw: kvoffload_trace(
+        read_bytes_per_token, cfg, **kw),
+}
+
+
+def workload_trace(kind: str, cfg: SSDConfig, **kw) -> OpTrace:
+    """Named workload registry (benchmarks / examples / sweeps).
+    Unknown kwargs raise TypeError from the underlying builder."""
+    if kind not in _WORKLOADS:
+        raise KeyError(
+            f"unknown workload {kind!r}; one of {sorted(_WORKLOADS)}")
+    return _WORKLOADS[kind](cfg, **kw)

@@ -1,1 +1,4 @@
-from repro.kernels.maxplus.ops import channel_end_time_maxplus, maxplus_fold  # noqa: F401
+from repro.kernels.maxplus.ops import (channel_end_time_maxplus,  # noqa: F401
+                                       maxplus_fold,
+                                       trace_bandwidth_maxplus_mb_s,
+                                       trace_end_time_maxplus)

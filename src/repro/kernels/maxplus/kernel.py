@@ -1,18 +1,29 @@
-"""Blocked (max,+) periodic matrix fold — Pallas TPU kernel.
+"""Blocked (max,+) trace-indexed matrix fold — Pallas TPU kernel.
 
-Evaluates ``s_T = A_{T-1} ⊗ … ⊗ A_1 ⊗ A_0 ⊗ s_0`` for a batch of
-independent design points, where the A_i repeat with period P
-(``repro.core.maxplus_form``).  Layout puts the design-point batch in
-the 128-wide lane dimension:
+Evaluates ``s_T = A_{idx[T-1]} ⊗ … ⊗ A_{idx[1]} ⊗ A_{idx[0]} ⊗ s_0`` for a
+batch of independent design points, where the A_i form a per-op-class
+matrix dictionary and ``idx`` is the op-class index sequence of a
+heterogeneous trace (``repro.core.maxplus_form.trace_combos`` /
+``combo_matrices``).
+A homogeneous stream passes ``idx=None`` and falls back to the periodic
+gather ``idx[t] = t mod M``.  Layout puts the design-point batch in the
+128-wide lane dimension:
 
-    mats: [B, P, N, N]  →  kernel block [P, N, N, BL] (lanes = points)
+    mats: [B, M, N, N]  →  kernel block [M, N, N, BL] (lanes = points)
     s:    [B, N]        →  [N, BL]
+    idx:  [T] int32     →  whole-array block (scalar-gathered per step)
 
 One grid step owns BL=128 design points; the T-step fold runs as a
-``fori_loop`` of VPU max/add ops entirely in VMEM (working set
-P·N²·BL·4B ≈ 5.3 MiB at P=32, N=18).  This replaces the sequential
-event loop of the paper's RTL co-simulation with a data-parallel tensor
-program — the TPU-native form of the paper's contribution.
+``fori_loop`` of VPU max/add ops entirely in VMEM, gathering
+``A[idx[t]]`` each step (working set M·N²·BL·4B ≈ 5.9 MiB at M=32,
+N=19).  This replaces the sequential event loop of the paper's RTL
+co-simulation with a data-parallel tensor program — the TPU-native form
+of the paper's contribution.  The homogeneous path (``idx=None``)
+computes ``t % period`` inline and compiles on TPU; the trace-indexed
+path passes ``idx`` as a plain operand, which lowers only in interpret
+mode (a compiled TPU build needs SMEM scalar prefetch — see
+``repro.kernels.maxplus.ops.maxplus_fold``, which forces interpret for
+that path).
 """
 
 from __future__ import annotations
@@ -23,49 +34,67 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.maxplus_form import N_STATE, PERIOD
+
+def _maxplus_step(mats, i, s):
+    a = jax.lax.dynamic_index_in_dim(mats, i, 0, keepdims=False)
+    # (max,+) matvec: out[r, b] = max_c (a[r, c, b] + s[c, b])
+    return jnp.max(a + s[None, :, :], axis=1)
 
 
-def _kernel(mats_ref, s0_ref, out_ref, *, t_steps: int, period: int):
+def _kernel_periodic(mats_ref, s0_ref, out_ref, *, t_steps: int, period: int):
+    """Homogeneous stream: matrix index is t % period, computed inline —
+    no index operand, so this path compiles on TPU as before."""
     mats = mats_ref[...]          # [P, N, N, BL]
-    s0 = s0_ref[...]              # [N, BL]
+    out_ref[...] = jax.lax.fori_loop(
+        0, t_steps, lambda t, s: _maxplus_step(mats, t % period, s),
+        s0_ref[...])
 
-    def body(t, s):
-        a = jax.lax.dynamic_index_in_dim(mats, t % period, 0, keepdims=False)
-        # (max,+) matvec: out[r, b] = max_c (a[r, c, b] + s[c, b])
-        return jnp.max(a + s[None, :, :], axis=1)
 
-    out_ref[...] = jax.lax.fori_loop(0, t_steps, body, s0)
+def _kernel_indexed(idx_ref, mats_ref, s0_ref, out_ref, *, t_steps: int):
+    """Heterogeneous trace: gather A[idx[t]] per step."""
+    mats = mats_ref[...]          # [M, N, N, BL]
+    out_ref[...] = jax.lax.fori_loop(
+        0, t_steps, lambda t, s: _maxplus_step(mats, idx_ref[t], s),
+        s0_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("t_steps", "block_lanes", "interpret"))
 def maxplus_fold_kernel(
-    mats: jax.Array,     # [B, P, N, N] float32
+    mats: jax.Array,     # [B, M, N, N] float32 matrix dictionary
     s0: jax.Array,       # [B, N] float32
     *,
     t_steps: int,
+    idx: jax.Array | None = None,   # [t_steps] int32 per-op matrix index
     block_lanes: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
-    b, p, n, _ = mats.shape
+    b, m, n, _ = mats.shape
     bl = min(block_lanes, b)
     pad = (-b) % bl
     if pad:
         mats = jnp.pad(mats, ((0, pad), (0, 0), (0, 0), (0, 0)))
         s0 = jnp.pad(s0, ((0, pad), (0, 0)))
     bp = mats.shape[0]
-    mats_l = jnp.moveaxis(mats, 0, -1)   # [P, N, N, B]
+    mats_l = jnp.moveaxis(mats, 0, -1)   # [M, N, N, B]
     s0_l = jnp.moveaxis(s0, 0, -1)       # [N, B]
 
+    mats_spec = pl.BlockSpec((m, n, n, bl), lambda i: (0, 0, 0, i))
+    s0_spec = pl.BlockSpec((n, bl), lambda i: (0, i))
+    if idx is None:                      # periodic: no index operand
+        kernel = functools.partial(_kernel_periodic, t_steps=t_steps,
+                                   period=m)
+        in_specs, operands = [mats_spec, s0_spec], (mats_l, s0_l)
+    else:
+        kernel = functools.partial(_kernel_indexed, t_steps=t_steps)
+        in_specs = [pl.BlockSpec((t_steps,), lambda i: (0,)),
+                    mats_spec, s0_spec]
+        operands = (idx.astype(jnp.int32), mats_l, s0_l)
     out = pl.pallas_call(
-        functools.partial(_kernel, t_steps=t_steps, period=p),
+        kernel,
         grid=(bp // bl,),
-        in_specs=[
-            pl.BlockSpec((p, n, n, bl), lambda i: (0, 0, 0, i)),
-            pl.BlockSpec((n, bl), lambda i: (0, i)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((n, bl), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((n, bp), jnp.float32),
         interpret=interpret,
-    )(mats_l, s0_l)
+    )(*operands)
     return jnp.moveaxis(out, -1, 0)[:b]  # [B, N]

@@ -1,8 +1,13 @@
-"""Public op: SSD-channel completion time via the (max,+) Pallas kernel.
+"""Public ops: SSD completion times via the (max,+) Pallas kernel.
 
-``channel_end_time_maxplus`` is a drop-in alternative engine to
-``repro.core.sim._channel_end_time`` for batches of design points
-(ways must divide MAX_WAYS — the power-of-two sweep grid of the paper).
+Two entry points mirror the two scan-engine paths in ``repro.core``:
+
+* ``channel_end_time_maxplus`` — homogeneous single-channel design-point
+  batches (periodic matrix form; ways must divide MAX_WAYS — the
+  power-of-two sweep grid of the paper);
+* ``trace_end_time_maxplus`` — one heterogeneous ``OpTrace`` evaluated
+  for a batch of design-point ``OpClassTable``s (the matrix-dictionary
+  form; DESIGN.md §2.1).
 """
 
 from __future__ import annotations
@@ -11,20 +16,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.maxplus_form import (N_STATE, end_time_from_state, init_state,
-                                     transition_matrices)
+from repro.core.maxplus_form import (StateLayout, combo_matrices,
+                                     end_time_from_state, init_state,
+                                     trace_combos, transition_matrices)
 from repro.core.sim import PageOpParams
 from repro.kernels.maxplus.kernel import maxplus_fold_kernel
 from repro.kernels.maxplus.ref import maxplus_fold_ref
 
 
-def maxplus_fold(mats, s0, *, t_steps: int, use_kernel: bool = True,
+def maxplus_fold(mats, s0, *, t_steps: int, idx=None, use_kernel: bool = True,
                  interpret: bool | None = None):
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        # the trace-indexed path feeds idx as a plain VMEM operand, which
+        # only lowers in interpret mode (kernel.py: a compiled TPU build
+        # needs SMEM scalar prefetch for the index sequence)
+        interpret = idx is not None or jax.default_backend() != "tpu"
     if use_kernel:
-        return maxplus_fold_kernel(mats, s0, t_steps=t_steps, interpret=interpret)
-    return maxplus_fold_ref(mats, s0, t_steps=t_steps)
+        return maxplus_fold_kernel(mats, s0, t_steps=t_steps, idx=idx,
+                                   interpret=interpret)
+    return maxplus_fold_ref(mats, s0, t_steps=t_steps, idx=idx)
 
 
 def channel_end_time_maxplus(
@@ -36,10 +46,11 @@ def channel_end_time_maxplus(
     use_kernel: bool = True,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Completion times (us) for a batch of design points."""
+    """Completion times (us) for a batch of homogeneous design points."""
     mats = np.stack([transition_matrices(op, w, policy)
                      for op, w in zip(ops, ways)])
-    s0 = np.broadcast_to(init_state(), (mats.shape[0], N_STATE)).copy()
+    s0 = np.broadcast_to(init_state(), (mats.shape[0],
+                                        init_state().shape[0])).copy()
     final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
                          t_steps=n_pages, use_kernel=use_kernel,
                          interpret=interpret)
@@ -51,3 +62,39 @@ def bandwidth_maxplus_mb_s(ops, ways, *, n_pages: int = 512,
     end = channel_end_time_maxplus(ops, ways, n_pages=n_pages, policy=policy, **kw)
     data = np.array([op.data_bytes for op in ops], np.float64)
     return data * n_pages / np.asarray(end)
+
+
+def trace_end_time_maxplus(
+    tables,                    # OpClassTable | list[OpClassTable]
+    trace,                     # OpTrace (shared across the batch)
+    *,
+    policy: str = "eager",
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Completion times (us) of one heterogeneous trace under a batch of
+    design-point timing tables ([B], or scalar for a single table)."""
+    single = not isinstance(tables, (list, tuple))
+    if single:
+        tables = [tables]
+    layout = StateLayout(trace.channels, trace.ways)
+    combos, idx = trace_combos(trace)   # trace-only: shared by the batch
+    mats = np.stack([combo_matrices(table, combos, layout, policy)
+                     for table in tables])
+    s0 = np.broadcast_to(init_state(layout),
+                         (mats.shape[0], layout.n_state)).copy()
+    final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
+                         t_steps=trace.n_ops, idx=jnp.asarray(idx),
+                         use_kernel=use_kernel, interpret=interpret)
+    end = end_time_from_state(np.asarray(final), layout)
+    return end[0] if single else end
+
+
+def trace_bandwidth_maxplus_mb_s(tables, trace, **kw) -> np.ndarray:
+    """Aggregate payload bandwidth (MB/s) of a trace per design point."""
+    single = not isinstance(tables, (list, tuple))
+    end = trace_end_time_maxplus(tables, trace, **kw)
+    if single:
+        return trace.total_bytes(tables) / end
+    data = np.array([trace.total_bytes(t) for t in tables], np.float64)
+    return data / np.asarray(end)

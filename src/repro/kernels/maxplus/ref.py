@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the (max,+) periodic fold."""
+"""Pure-jnp oracle for the (max,+) trace-indexed fold."""
 
 from __future__ import annotations
 
@@ -6,14 +6,20 @@ import jax
 import jax.numpy as jnp
 
 
-def maxplus_fold_ref(mats: jax.Array, s0: jax.Array, *, t_steps: int) -> jax.Array:
-    """mats: [B, P, N, N]; s0: [B, N] -> [B, N] after t_steps ops."""
-    p = mats.shape[1]
+def maxplus_fold_ref(mats: jax.Array, s0: jax.Array, *, t_steps: int,
+                     idx: jax.Array | None = None) -> jax.Array:
+    """mats: [B, M, N, N]; s0: [B, N] -> [B, N] after t_steps ops.
 
-    def step(s, t):
-        a = mats[:, t % p]                                   # [B, N, N]
+    ``idx`` [t_steps] selects the matrix per step; None = periodic."""
+    m = mats.shape[1]
+    if idx is None:
+        idx = jnp.arange(t_steps, dtype=jnp.int32) % m
+    idx = idx.astype(jnp.int32)
+
+    def step(s, i):
+        a = mats[:, i]                                       # [B, N, N]
         s = jnp.max(a + s[:, None, :], axis=-1)
         return s, None
 
-    s, _ = jax.lax.scan(step, s0, jnp.arange(t_steps))
+    s, _ = jax.lax.scan(step, s0, idx[:t_steps])
     return s

@@ -190,6 +190,23 @@ def _call_edges(comps: dict[str, Computation]):
                         yield comp.name, m.group(1), 1, False
 
 
+def _first_operand(ins: Instr) -> str:
+    """Text of operand 0 (up to the first top-level comma / close paren)."""
+    args = ins.line.split(ins.opcode + "(", 1)[-1]
+    depth, buf = 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0:
+                break
+            depth -= 1
+        elif ch == "," and depth == 0:
+            break
+        buf.append(ch)
+    return "".join(buf)
+
+
 def _dot_flops(comp: Computation, ins: Instr) -> float:
     out_elems = 1
     for d in _shape_dims(ins.type_str):
@@ -197,15 +214,18 @@ def _dot_flops(comp: Computation, ins: Instr) -> float:
     mk = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
     if not mk:
         return 2.0 * out_elems  # degenerate
-    # operand 0 name
-    args = ins.line.split(ins.opcode + "(", 1)[1]
-    m0 = re.match(r"\s*%?([\w\.\-]+)", args)
+    # lhs dims: prefer the inline operand type (post-optimization HLO
+    # prints `dot(f32[64,64]{1,0} %name, ...)`); fall back to name lookup
+    arg0 = _first_operand(ins)
+    lhs_dims = _shape_dims(arg0)
+    if not lhs_dims:
+        m0 = re.match(r"\s*%?([\w\.\-]+)", arg0)
+        if m0 and m0.group(1) in comp.instrs:
+            lhs_dims = _shape_dims(comp.instrs[m0.group(1)].type_str)
     contract = 1
-    if m0 and m0.group(1) in comp.instrs:
-        lhs_dims = _shape_dims(comp.instrs[m0.group(1)].type_str)
-        for idx in mk.group(1).split(","):
-            if idx and int(idx) < len(lhs_dims):
-                contract *= lhs_dims[int(idx)]
+    for idx in mk.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
     return 2.0 * out_elems * contract
 
 

@@ -39,7 +39,8 @@ import ml_dtypes
 import numpy as np
 
 from repro.core.sim import SSDConfig
-from repro.storage.ssd_model import estimate_io
+from repro.core.trace import checkpoint_trace
+from repro.storage.ssd_model import estimate_trace
 
 CHUNK_BYTES = 16 << 20
 
@@ -124,9 +125,13 @@ class CheckpointEngine:
         out.rename(final)
         wall = time.time() - t0
         modeled = {}
+        # the save is an op trace (chunk-striped write burst), priced on
+        # the joint multi-channel simulation; the trace depends only on
+        # cell/geometry, not on the interface kind
+        tr = checkpoint_trace(nbytes, self.ssd)
         for kind in ("conv", "sync_only", "proposed"):
             cfg = dataclasses.replace(self.ssd, interface=kind)
-            modeled[kind] = estimate_io(nbytes, cfg, "write").seconds
+            modeled[kind] = estimate_trace(tr, cfg, total_bytes=nbytes).seconds
         self._last = SaveResult(step, nbytes, wall, modeled)
         self._gc()
 

@@ -29,10 +29,32 @@ from typing import Iterator
 
 import numpy as np
 
+from repro.core.sim import MAX_CHANNELS, SSDConfig
+from repro.core.trace import OpTrace, datapipe_trace
+
 
 @dataclasses.dataclass
 class PipeState:
     cursor: int
+
+
+def pipeline_io_trace(pipe, n_batches: int,
+                      ssd: SSDConfig | None = None) -> OpTrace | None:
+    """The SSD op trace behind ``n_batches`` of a pipeline's reads.
+
+    Way-interleaved shard reads, with the pipe's *observed* hedge rate
+    re-issued on the neighbouring channel — the input for
+    ``repro.storage.ssd_model.estimate_trace`` / trace-aware geometry
+    planning.  Synthetic pipelines do no I/O and return None."""
+    if not isinstance(pipe, FileBackedTokens):
+        return None
+    # a store may have more shards than the modeled SSD has channels
+    ssd = ssd or SSDConfig(channels=min(len(pipe.store.maps), MAX_CHANNELS),
+                           ways=pipe.ways)
+    nbytes = n_batches * pipe.batch * (pipe.seq + 1) * 4   # int32 tokens
+    served = max(1, pipe.cursor * pipe.batch)
+    hedge = min(1.0, pipe.hedged_reads / served)
+    return datapipe_trace(nbytes, ssd, hedge_fraction=hedge)
 
 
 class SyntheticTokens:

@@ -5,10 +5,13 @@ a production serving tier pages cold KV blocks to local SSD.  Whether
 that is *feasible* is exactly the paper's question: per decoded token
 the tier must stream ``bytes_per_token`` back under the latency budget,
 so the sustained read bandwidth of the SSD interface bounds tokens/s.
-This module sizes the state per architecture and prices the tier with
-the paper's CONV / SYNC_ONLY / PROPOSED bandwidth model — the DDR
+This module sizes the state per architecture, emits the decode loop's
+actual **op trace** — a cold-KV read burst plus a small KV-append write
+burst per token, striped over the tier's channels — and prices it on the
+joint multi-channel simulation (CONV / SYNC_ONLY / PROPOSED): the DDR
 interface (PROPOSED) roughly doubles the feasible paging rate at equal
-pin count (paper Table 3 read rows).
+pin count (paper Table 3 read rows), and the mixed read/write contention
+of the append stream is now simulated rather than ignored.
 
 For attention-free architectures (xLSTM) the recurrent state is O(1)
 per layer and never needs paging: ``plan.applicable = False``
@@ -21,8 +24,10 @@ import dataclasses
 
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
-from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+from repro.core.sim import SSDConfig
+from repro.core.trace import OpTrace, kvoffload_trace
 from repro.models.transformer import ModelConfig
+from repro.storage.ssd_model import estimate_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +38,7 @@ class KVOffloadPlan:
     cold_bytes_per_seq: int           # pageable to SSD
     read_mb_per_token: float          # SSD traffic per decoded token
     tokens_per_s: dict[str, float]    # interface -> sustainable decode rate
+    trace: OpTrace | None = None      # per-token op trace (window)
     note: str = ""
 
 
@@ -67,13 +73,19 @@ def plan_kv_offload(cfg: ModelConfig, seq_len: int, *,
                  f"O(1)/O(window) per layer; KV offload inapplicable.")
     cold_total = cold_rate * seq_len
     # decode touches the whole cold KV once per token (full-attention read)
+    # and appends one token's KV — a mixed read/write trace per token
     read_mb = cold_total / 1e6
+    per_token_mb = (cold_total + cold_rate) / 1e6   # read burst + KV append
     rates = {}
+    # the trace depends only on geometry/cell, not on the interface kind
+    trace = kvoffload_trace(
+        cold_total, SSDConfig(cell=cell, channels=channels, ways=ways),
+        n_tokens=2, append_bytes_per_token=cold_rate)
     for kind in InterfaceKind:
-        bw = ssd_bandwidth_mb_s(
-            SSDConfig(interface=kind, cell=cell, channels=channels, ways=ways),
-            "read")
-        rates[kind.value] = bw / max(read_mb, 1e-9)
+        ssd = SSDConfig(interface=kind, cell=cell, channels=channels,
+                        ways=ways)
+        est = estimate_trace(trace, ssd)   # sustained rate of the mixed window
+        rates[kind.value] = est.bandwidth_mb_s / per_token_mb
     return KVOffloadPlan(
         applicable=True,
         state_bytes_per_seq=cold_total,
@@ -81,6 +93,7 @@ def plan_kv_offload(cfg: ModelConfig, seq_len: int, *,
         cold_bytes_per_seq=cold_total,
         read_mb_per_token=read_mb,
         tokens_per_s=rates,
+        trace=trace,
         note=f"{cfg.name}: full-attention KV {cold_total/2**30:.1f} GiB/seq at "
              f"S={seq_len}; PROPOSED sustains "
              f"{rates['proposed']:.2f} tok/s vs CONV {rates['conv']:.2f}.")

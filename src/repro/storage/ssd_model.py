@@ -1,23 +1,36 @@
 """SSD cost model: the paper's simulator as a capacity-planning service.
 
 Every storage-tier component (checkpoint engine, data pipeline, KV
-offload) prices its I/O against the paper's SSD model: given an
+offload) prices its I/O against the paper's SSD model — no longer as a
+single scalar bandwidth, but as an **op trace** (``repro.core.trace``)
+simulated jointly across channels against the shared controller: given an
 interface (CONV / SYNC_ONLY / PROPOSED), cell type and channel/way
-geometry, we get sustained read/write bandwidth (Table 3/4 reproduction)
-and controller energy (Table 5).  ``plan_geometry`` inverts the model:
-find the cheapest (channels, ways) meeting a bandwidth target — the
-design-space search runs on the (max,+) engine, i.e. the paper's §5.3.2
-trade-off study automated.
+geometry, ``estimate_trace`` returns wall time, aggregate bandwidth and
+controller energy for arbitrary mixed read/write access patterns.
+``estimate_io`` keeps the legacy bytes+mode interface (a homogeneous
+steady trace).  ``plan_geometry`` inverts the model: find the cheapest
+(channels, ways) meeting a time budget for a *workload* — the paper's
+§5.3.2 trade-off study automated, extended beyond the paper's
+homogeneous streams.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 from repro.core.energy import ControllerEnergyModel
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+from repro.core.trace import OpTrace, READ, op_class_table, simulate
+
+#: Candidate geometries for planning, cheapest first.  Area cost model per
+#: the paper §2.2.1: a channel costs ~4x a way (NAND_IF + ECC block +
+#: pins), so candidates sort by 4*channels + ways.
+_CANDIDATES = sorted(
+    [(c, w) for c in (1, 2, 4, 8) for w in (1, 2, 4, 8, 16)],
+    key=lambda cw: (4 * cw[0] + cw[1], cw[0]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,35 +39,86 @@ class IOEstimate:
     bandwidth_mb_s: float
     energy_joules: float
     config: SSDConfig
+    read_bytes: int = 0
+    write_bytes: int = 0
+    n_ops: int = 0
 
     def describe(self) -> str:
         return (f"{self.config.describe()}: {self.bandwidth_mb_s:.0f} MB/s, "
                 f"{self.seconds:.2f} s, {self.energy_joules * 1e3:.1f} mJ")
 
 
+def estimate_trace(trace: OpTrace, cfg: SSDConfig, *,
+                   total_bytes: int | None = None,
+                   policy: str | None = None) -> IOEstimate:
+    """Price an op trace on a design point (joint multi-channel sim).
+
+    ``total_bytes``: when the trace is a truncated window of a longer
+    steady workload, extrapolate wall time by bytes at the simulated
+    sustained bandwidth."""
+    assert trace.channels == cfg.channels and trace.ways == cfg.ways, \
+        f"trace geometry {trace.channels}x{trace.ways} != config " \
+        f"{cfg.channels}x{cfg.ways}"
+    table = op_class_table(cfg)
+    end_us = simulate(table, trace, policy or cfg.policy)
+    window_bytes = trace.total_bytes(table)
+    bw = min(window_bytes / end_us, cfg.sata_mb_s)     # bytes/us == MB/s
+    nbytes = window_bytes if total_bytes is None else int(total_bytes)
+    seconds = nbytes / (bw * 1e6)
+    energy = ControllerEnergyModel(cfg.interface).energy_joules(nbytes, bw) \
+        * cfg.channels
+    pay = trace.payload_mask()
+    read_mask = (trace.cls == READ) & pay
+    write_mask = (trace.cls != READ) & pay
+    scale = nbytes / window_bytes
+    return IOEstimate(
+        seconds=seconds, bandwidth_mb_s=bw, energy_joules=energy, config=cfg,
+        read_bytes=int(table.data_bytes[trace.cls[read_mask]].sum() * scale),
+        write_bytes=int(table.data_bytes[trace.cls[write_mask]].sum() * scale),
+        n_ops=trace.n_ops)
+
+
 def estimate_io(nbytes: int, cfg: SSDConfig, mode: str) -> IOEstimate:
+    """Legacy bytes+mode estimate — a homogeneous steady trace."""
     bw = ssd_bandwidth_mb_s(cfg, mode)
     seconds = nbytes / (bw * 1e6)
     energy = ControllerEnergyModel(cfg.interface).energy_joules(nbytes, bw) \
         * cfg.channels
-    return IOEstimate(seconds, bw, energy, cfg)
+    return IOEstimate(
+        seconds, bw, energy, cfg,
+        read_bytes=nbytes if mode == "read" else 0,
+        write_bytes=nbytes if mode == "write" else 0)
 
 
 def plan_geometry(nbytes: int, budget_s: float, mode: str,
                   interface: InterfaceKind = InterfaceKind.PROPOSED,
                   cell: CellType = CellType.MLC) -> IOEstimate | None:
-    """Smallest (channels × ways) geometry that meets the time budget.
-
-    Area cost model per the paper §2.2.1: a channel costs ~4× a way
-    (NAND_IF + ECC block + pins), so we sort candidates by
-    4·channels + ways and return the first that fits.
-    """
-    candidates = [(c, w) for c in (1, 2, 4, 8) for w in (1, 2, 4, 8, 16)]
-    candidates.sort(key=lambda cw: (4 * cw[0] + cw[1], cw[0]))
-    for channels, ways in candidates:
+    """Smallest (channels x ways) geometry meeting the time budget for a
+    homogeneous byte stream (see ``plan_geometry_for_trace`` for mixed
+    workloads)."""
+    for channels, ways in _CANDIDATES:
         cfg = SSDConfig(interface=interface, cell=cell,
                         channels=channels, ways=ways)
         est = estimate_io(nbytes, cfg, mode)
+        if est.seconds <= budget_s:
+            return est
+    return None
+
+
+def plan_geometry_for_trace(
+        trace_builder: Callable[[SSDConfig], OpTrace],
+        budget_s: float,
+        interface: InterfaceKind = InterfaceKind.PROPOSED,
+        cell: CellType = CellType.MLC,
+        total_bytes: int | None = None) -> IOEstimate | None:
+    """Trace-aware geometry planning: the workload is re-striped onto
+    each candidate geometry by ``trace_builder(cfg)`` and simulated
+    jointly, so mixed read/write contention and shared-controller
+    arbitration decide the verdict — not a homogeneous proxy stream."""
+    for channels, ways in _CANDIDATES:
+        cfg = SSDConfig(interface=interface, cell=cell,
+                        channels=channels, ways=ways)
+        est = estimate_trace(trace_builder(cfg), cfg, total_bytes=total_bytes)
         if est.seconds <= budget_s:
             return est
     return None
@@ -68,5 +132,19 @@ def compare_interfaces(nbytes: int, mode: str, *, channels: int = 4,
         kind.value: estimate_io(
             nbytes, SSDConfig(interface=kind, cell=cell,
                               channels=channels, ways=ways), mode)
+        for kind in InterfaceKind
+    }
+
+
+def compare_interfaces_trace(trace: OpTrace, *, cell: CellType = CellType.MLC,
+                             total_bytes: int | None = None
+                             ) -> dict[str, IOEstimate]:
+    """Interface comparison on an arbitrary op trace."""
+    return {
+        kind.value: estimate_trace(
+            trace,
+            SSDConfig(interface=kind, cell=cell, channels=trace.channels,
+                      ways=trace.ways),
+            total_bytes=total_bytes)
         for kind in InterfaceKind
     }

@@ -11,7 +11,8 @@ from repro.core.interface import InterfaceKind
 from repro.core.sim import SSDConfig
 from repro.storage.checkpoint import CheckpointEngine
 from repro.storage.datapipe import (FileBackedTokens, PipeState,
-                                    StripedTokenStore, SyntheticTokens)
+                                    StripedTokenStore, SyntheticTokens,
+                                    pipeline_io_trace)
 from repro.storage.kvoffload import plan_kv_offload
 from repro.storage.ssd_model import compare_interfaces, estimate_io, plan_geometry
 
@@ -95,6 +96,25 @@ def test_estimate_energy_scales_with_bytes():
     e2 = estimate_io(2 << 30, cfg, "read")
     assert e2.energy_joules == pytest.approx(2 * e1.energy_joules, rel=1e-6)
     assert e2.seconds == pytest.approx(2 * e1.seconds, rel=1e-6)
+
+
+def test_pipeline_emits_priceable_trace(tmp_path):
+    """The datapipe's access pattern is an SSD op trace the cost model
+    can price directly (reads only; synthetic pipes do no I/O)."""
+    from repro.storage.ssd_model import estimate_trace
+    rng = np.random.default_rng(0)
+    store = StripedTokenStore.write(
+        tmp_path, rng.integers(0, 5000, 40_000, dtype=np.int32), channels=2)
+    pipe = FileBackedTokens(store, batch=4, seq=16, ways=2)
+    it = iter(pipe)
+    next(it)
+    pipe.close()
+    tr = pipeline_io_trace(pipe, n_batches=64)
+    assert tr is not None and tr.channels == 2
+    est = estimate_trace(tr, SSDConfig(channels=2, ways=2),
+                         total_bytes=64 * 4 * 17 * 4)
+    assert est.seconds > 0 and est.write_bytes == 0 and est.read_bytes > 0
+    assert pipeline_io_trace(SyntheticTokens(10, 1, 8), 4) is None
 
 
 def test_kv_offload_planning():

@@ -3,6 +3,9 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property suite needs hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, strategies as st
 
 from repro.core import timing
