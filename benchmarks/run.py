@@ -39,10 +39,14 @@ def main() -> None:
     for r in ok:
         print(f"roofline/{r['cell']},{r['roofline_fraction']},"
               f"dominant={r['dominant']}")
-    out = pathlib.Path(__file__).resolve().parent / "results" / "roofline.md"
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(roofline.markdown_table(rows) + "\n")
-    print(f"# wrote {out}")
+    if rows:     # only write a table when dry-run records exist
+        out = pathlib.Path(__file__).resolve().parent / "results" / "roofline.md"
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(roofline.markdown_table(rows) + "\n")
+        print(f"# wrote {out}")
+    else:
+        print("# no dry-run records under benchmarks/results/dryrun — "
+              "roofline table skipped")
 
 
 if __name__ == "__main__":

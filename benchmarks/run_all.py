@@ -1,0 +1,126 @@
+"""Run every benchmark module and emit a machine-readable BENCH_<n>.json.
+
+    PYTHONPATH=src python benchmarks/run_all.py [--smoke] [--out DIR]
+
+Each run writes ``benchmarks/results/BENCH_<n>.json`` (n = one past the
+highest existing index) holding every benchmark row (name/value/paper),
+per-section wall time, and the environment — so the perf trajectory of
+the engines is tracked across PRs by diffing the JSON files.
+
+``--smoke`` shrinks trace lengths for CI: it still executes every
+engine and **fails on engine disagreement** (the ``assert agree < 1e-3``
+paths inside ``sweep_bench``) and on a log-depth speedup < 1 in a full
+(non-smoke) run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import re
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def _next_index(out_dir: pathlib.Path) -> int:
+    taken = [int(m.group(1))
+             for f in out_dir.glob("BENCH_*.json")
+             if (m := re.fullmatch(r"BENCH_(\d+)\.json", f.name))]
+    return max(taken, default=0) + 1
+
+
+def _section(name, fn):
+    t0 = time.perf_counter()
+    rows = fn()
+    dt = round(time.perf_counter() - t0, 3)
+    print(f"# {name}: {len(rows)} rows in {dt:.1f}s")
+    for r in rows:
+        print(f"{r['name']},{r['value']},{r['paper']}")
+    return {"name": name, "rows": rows, "wall_s": dt}
+
+
+def _check_speedups(sections, smoke: bool) -> None:
+    """The acceptance gate: log-depth engines must beat the O(T) scan
+    per design point at the full T (speedup rows > 1).  Smoke runs at
+    reduced T only warn — short traces are overhead-dominated."""
+    bad = []
+    for sec in sections:
+        for r in sec["rows"]:
+            if r["name"].endswith("_speedup_vs_scan") and r["paper"] == ">1":
+                if float(r["value"]) <= 1.0:
+                    bad.append(f"{r['name']} = {r['value']}")
+    if bad:
+        msg = "log-depth speedup rows not > 1: " + "; ".join(bad)
+        if smoke:
+            print(f"# WARNING (smoke sizes, not gating): {msg}")
+        else:
+            raise AssertionError(msg)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI; still checks engine "
+                         "agreement")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="output dir for BENCH_<n>.json (default: the "
+                         "tracked results dir; smoke runs default to a "
+                         "temp dir so reduced-size datapoints never "
+                         "pollute the cross-PR trajectory)")
+    args = ap.parse_args()
+    if args.out is None:
+        if args.smoke:
+            import tempfile
+            args.out = pathlib.Path(tempfile.mkdtemp(prefix="bench_smoke_"))
+        else:
+            args.out = RESULTS
+
+    import jax
+
+    from benchmarks import freq, roofline, sweep_bench, tables
+
+    t0 = time.perf_counter()
+    sections = [
+        _section("freq", freq.run),
+        _section("table3", tables.run_table3),
+        _section("table4", tables.run_table4),
+        _section("table5", tables.run_table5),
+        _section("sweep", lambda: sweep_bench.run(small=args.smoke)),
+    ]
+    _check_speedups(sections, args.smoke)
+
+    roof = roofline.run()
+    ok = [r for r in roof if r["status"] == "ok"]
+    print(f"# roofline: {len(ok)} ok cells of {len(roof)}")
+    if roof:
+        out = args.out / "roofline.md"
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(roofline.markdown_table(roof) + "\n")
+        print(f"# wrote {out}")
+
+    args.out.mkdir(parents=True, exist_ok=True)
+    n = _next_index(args.out)
+    payload = {
+        "bench_index": n,
+        "smoke": args.smoke,
+        "wall_s_total": round(time.perf_counter() - t0, 3),
+        "env": {"backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "python": platform.python_version(),
+                "machine": platform.machine()},
+        "sections": sections,
+        "roofline_ok_cells": len(ok),
+    }
+    path = args.out / f"BENCH_{n}.json"
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"# wrote {path} ({payload['wall_s_total']}s total)")
+
+
+if __name__ == "__main__":
+    main()

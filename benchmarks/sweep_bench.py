@@ -3,12 +3,15 @@
 The paper evaluates ~60 design points with an RTL co-simulation.  This
 framework's contribution is making that sweep a data-parallel tensor
 program: we time (a) the plain-Python event loop, (b) the jit+vmap
-``lax.scan`` engine, and (c) the (max,+) Pallas kernel in interpret mode
-(CPU; on TPU the same kernel runs compiled) over a
-channels × ways × interface × cell × mode grid — and, beyond the paper,
-over **mixed-workload op traces** (read fraction × geometry grid) that
-exercise the shared-controller contention path on all three engines.
-"""
+``lax.scan`` engine, (c) the (max,+) Pallas kernel (interpret on CPU;
+compiled on TPU — including the scalar-prefetch trace-indexed path),
+and (d) the **log-depth engines** (DESIGN.md §2.3) — periodic matrix
+squaring for the homogeneous grid and the segmented parallel-prefix
+fold for heterogeneous traces — over a channels × ways × interface ×
+cell × mode grid and over mixed-workload op traces.  ``run_logdepth``
+pushes the trace length to T >= 2048, where the O(log T) engines must
+beat the O(T) scan per design point (the speedup rows asserted by
+``benchmarks/run_all.py`` / CI)."""
 
 from __future__ import annotations
 
@@ -26,6 +29,7 @@ from repro.kernels.maxplus.ops import (bandwidth_maxplus_mb_s,
                                        trace_bandwidth_maxplus_mb_s)
 
 N_PAGES = 256
+T_LOGDEPTH = 2048     # acceptance gate: log-depth engines must win here
 
 
 def _grid():
@@ -40,26 +44,30 @@ def _grid():
     return ops, ways
 
 
-def run() -> list[dict]:
+def _sweep_args(ops):
+    return tuple(jnp.array([getattr(o, f) for o in ops], jnp.float32)
+                 for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us",
+                           "post_hi_us", "ctrl_us", "data_bytes"))
+
+
+def run(small: bool = False) -> list[dict]:
+    n_pages = 64 if small else N_PAGES
     ops, ways = _grid()
     n = len(ops)
 
     t0 = time.perf_counter()
-    ref = np.array([bandwidth_ref_mb_s(o, w, N_PAGES) for o, w in zip(ops, ways)])
+    ref = np.array([bandwidth_ref_mb_s(o, w, n_pages) for o, w in zip(ops, ways)])
     t_ref = time.perf_counter() - t0
 
-    args = tuple(jnp.array(x, jnp.float32) for x in (
-        [o.cmd_us for o in ops], [o.pre_us for o in ops],
-        [o.slot_us for o in ops], [o.post_lo_us for o in ops],
-        [o.post_hi_us for o in ops], [o.data_bytes for o in ops]))
+    args = _sweep_args(ops)
     wv = jnp.array(ways, jnp.int32)
-    sweep_bandwidth_mb_s(*args, wv, n_pages=N_PAGES).block_until_ready()  # compile
+    sweep_bandwidth_mb_s(*args, wv, n_pages=n_pages).block_until_ready()  # compile
     t0 = time.perf_counter()
-    vm = np.asarray(sweep_bandwidth_mb_s(*args, wv, n_pages=N_PAGES))
+    vm = np.asarray(sweep_bandwidth_mb_s(*args, wv, n_pages=n_pages))
     t_vm = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    mp = bandwidth_maxplus_mb_s(ops, ways, n_pages=N_PAGES)
+    mp = bandwidth_maxplus_mb_s(ops, ways, n_pages=n_pages)
     t_mp = time.perf_counter() - t0
 
     assert np.allclose(ref, vm, rtol=1e-3)
@@ -74,19 +82,20 @@ def run() -> list[dict]:
          "paper": "(compiled Pallas on TPU)"},
         {"name": "sweep/vmap_speedup_vs_python",
          "value": round(t_ref / max(t_vm, 1e-9), 1), "paper": "-"},
-    ] + run_mixed()
+    ] + run_mixed(small) + run_logdepth(small)
 
 
-def run_mixed() -> list[dict]:
+def run_mixed(small: bool = False) -> list[dict]:
     """Mixed-workload design-point sweep (beyond the paper's §5.3 grid):
     read fraction × (channels, ways), all three engines on one trace per
     geometry, batching interfaces×cells through the (max,+) kernel."""
+    n_pages = 64 if small else N_PAGES
     rows, agree = [], 0.0
     n_points = 0
     t_scan = t_mp = t_ref = 0.0
     for channels, ways in ((1, 8), (2, 4), (4, 8)):
         for read_frac in (1.0, 0.7, 0.5, 0.0):
-            tr = mixed_trace(N_PAGES * channels, channels, ways, read_frac,
+            tr = mixed_trace(n_pages * channels, channels, ways, read_frac,
                              seed=channels * 100 + int(read_frac * 10))
             cfgs = [SSDConfig(interface=k, cell=c, channels=channels,
                               ways=ways)
@@ -122,5 +131,111 @@ def run_mixed() -> list[dict]:
          "value": round(t_mp / n_points * 1e6, 1), "paper": "-"},
         {"name": "mixed/python_oracle_us_per_point",
          "value": round(t_ref / n_points * 1e6, 1), "paper": "-"},
+    ]
+    return rows
+
+
+def run_logdepth(small: bool = False) -> list[dict]:
+    """Old-vs-new engine timings at long horizons (DESIGN.md §2.3).
+
+    Homogeneous: the 60-point paper grid at T pages per point, O(T) scan
+    vs O(log T) periodic squaring.  Heterogeneous: one mixed trace of T
+    ops on a 2ch×8way geometry under interfaces×cells tables, per-point
+    scan vs the segmented parallel-prefix engines.  Both speedup rows
+    must exceed 1 at T >= 2048 and every engine must agree with the
+    python oracle to 1e-3 — ``run_all.py`` (and the CI smoke step)
+    asserts both."""
+    t_pages = 256 if small else T_LOGDEPTH
+    ops, ways = _grid()
+    n = len(ops)
+    args = _sweep_args(ops)
+    wv = jnp.array(ways, jnp.int32)
+
+    def timed(fn, reps=3):
+        out = fn()
+        out.block_until_ready()                      # compile
+        dt = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn().block_until_ready()
+            dt = min(dt, time.perf_counter() - t0)
+        return np.asarray(out), dt
+
+    scan_bw, t_scan = timed(lambda: sweep_bandwidth_mb_s(
+        *args, wv, n_pages=t_pages))
+    sq_bw, t_sq = timed(lambda: sweep_bandwidth_mb_s(
+        *args, wv, n_pages=t_pages, engine="squaring"))
+    agree = float(np.max(np.abs(sq_bw - scan_bw) / scan_bw))
+    # python oracle on a few spot points (full grid at this T is slow)
+    for i in (0, n // 2, n - 1):
+        want = bandwidth_ref_mb_s(ops[i], ways[i], t_pages)
+        agree = max(agree, abs(float(sq_bw[i]) - want) / want)
+    assert agree < 1e-3, f"squaring disagrees by {agree:.2e} at T={t_pages}"
+
+    rows = [
+        {"name": f"logdepth/homog_T{t_pages}/scan_us_per_point",
+         "value": round(t_scan / n * 1e6, 1), "paper": "-"},
+        {"name": f"logdepth/homog_T{t_pages}/squaring_us_per_point",
+         "value": round(t_sq / n * 1e6, 1), "paper": "-"},
+        {"name": f"logdepth/homog_T{t_pages}/squaring_speedup_vs_scan",
+         "value": round(t_scan / max(t_sq, 1e-9), 2), "paper": ">1"},
+        {"name": f"logdepth/homog_T{t_pages}/max_rel_disagreement",
+         "value": f"{agree:.1e}", "paper": "<1e-3"},
+    ]
+
+    # heterogeneous: one long mixed trace, batch of design-point tables
+    channels, ways_h = 2, 8
+    tr = mixed_trace(t_pages, channels, ways_h, 0.7, seed=42)
+    tables = [op_class_table(SSDConfig(interface=k, cell=c,
+                                       channels=channels, ways=ways_h))
+              for k in InterfaceKind for c in CellType]
+    b = len(tables)
+    seg_len = 128
+
+    def timed_np(fn, reps=3):
+        out = fn()                                   # compile
+        dt = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = fn()
+            dt = min(dt, time.perf_counter() - t0)
+        return np.asarray(out), dt
+
+    from repro.core.trace import simulate, simulate_batch
+    scan_us, t_scan_h = timed_np(
+        lambda: np.array([simulate(t, tr) for t in tables]))
+    scanb_us, t_scanb = timed_np(
+        lambda: simulate_batch(tables, tr, engine="scan"))
+    px_us, t_px = timed_np(
+        lambda: simulate_batch(tables, tr, segment_len=seg_len))
+
+    from repro.kernels.maxplus.ops import trace_end_time_maxplus
+    seg_us, t_seg = timed_np(
+        lambda: trace_end_time_maxplus(tables, tr, strategy="segmented"),
+        reps=1)                                      # dense: slow on CPU
+
+    from repro.core.sim_ref import simulate_trace_ref
+    ref_us = np.array([simulate_trace_ref(t, tr) for t in tables])
+    agree_h = max(float(np.max(np.abs(e - ref_us) / ref_us))
+                  for e in (scan_us, scanb_us, px_us, seg_us))
+    assert agree_h < 1e-3, \
+        f"trace engines disagree by {agree_h:.2e} at T={t_pages}"
+
+    rows += [
+        {"name": f"logdepth/mixed_T{t_pages}/scan_us_per_point",
+         "value": round(t_scan_h / b * 1e6, 1), "paper": "-"},
+        {"name": f"logdepth/mixed_T{t_pages}/scan_batch_us_per_point",
+         "value": round(t_scanb / b * 1e6, 1), "paper": "-"},
+        {"name": f"logdepth/mixed_T{t_pages}/prefix_batch_us_per_point",
+         "value": round(t_px / b * 1e6, 1), "paper": "-"},
+        {"name": f"logdepth/mixed_T{t_pages}/dense_segmented_us_per_point",
+         "value": round(t_seg / b * 1e6, 1),
+         "paper": "(MXU-shaped; compiled Pallas batching on TPU)"},
+        {"name": f"logdepth/mixed_T{t_pages}/prefix_speedup_vs_scan",
+         "value": round(t_scan_h / max(t_px, 1e-9), 2), "paper": ">1"},
+        {"name": f"logdepth/mixed_T{t_pages}/prefix_speedup_vs_scan_batch",
+         "value": round(t_scanb / max(t_px, 1e-9), 2), "paper": "-"},
+        {"name": f"logdepth/mixed_T{t_pages}/max_rel_disagreement",
+         "value": f"{agree_h:.1e}", "paper": "<1e-3"},
     ]
     return rows

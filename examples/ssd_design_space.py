@@ -5,10 +5,14 @@ read/write op-trace workloads the paper could not express.
     PYTHONPATH=src python examples/ssd_design_space.py
 """
 
+import time
+
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
-from repro.core.trace import checkpoint_trace, datapipe_trace, workload_trace
+from repro.core.trace import (checkpoint_trace, datapipe_trace,
+                              op_class_table, simulate, simulate_batch,
+                              workload_trace)
 from repro.storage.kvoffload import plan_kv_offload
 from repro.storage.ssd_model import (compare_interfaces,
                                      compare_interfaces_trace, plan_geometry,
@@ -34,6 +38,26 @@ def main():
         ests = compare_interfaces_trace(tr, cell=CellType.MLC)
         row = "  ".join(f"{k}={e.bandwidth_mb_s:6.1f}" for k, e in ests.items())
         print(f"  {channels}ch x {ways:2d}way : {row} MB/s")
+
+    print("\n== log-depth engines: 2048-op mixed sweep (DESIGN.md §2.3) ==")
+    print("   (same recurrence, O(segment+log T) depth instead of O(T))")
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=8)
+    tr2k = workload_trace("mixed", cfg, n_ops=2048, read_fraction=0.7, seed=3)
+    tables = [op_class_table(SSDConfig(interface=k, cell=c,
+                                       channels=2, ways=8))
+              for k in InterfaceKind for c in CellType]
+    scan_us = [simulate(t, tr2k) for t in tables]        # compile + run
+    px_us = simulate_batch(tables, tr2k, segment_len=128)
+    t0 = time.perf_counter()
+    scan_us = [simulate(t, tr2k) for t in tables]
+    t_scan = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    px_us = simulate_batch(tables, tr2k, segment_len=128)
+    t_px = time.perf_counter() - t0
+    worst = max(abs(a - b) / b for a, b in zip(px_us, scan_us))
+    print(f"  scan engine   : {t_scan * 1e3:6.1f} ms for {len(tables)} design points")
+    print(f"  prefix engine : {t_px * 1e3:6.1f} ms  (segmented, batched; "
+          f"max rel dev {worst:.1e})")
 
     print("\n== checkpoint-stall planning: 2.7B params (minicpm), bf16+opt ==")
     print("   (MLC tier first; fall back to an SLC tier when contention-")

@@ -27,6 +27,25 @@ parity) and idx[t] = t mod 2·ways.  ``repro.kernels.maxplus`` evaluates
 the fold for thousands of design points in parallel, gathering
 ``A[idx[t]]`` inside its ``fori_loop``.
 
+Because ⊗ is associative, the fold need not be evaluated sequentially
+(DESIGN.md §2.3).  This module also provides the **log-depth
+evaluation strategies**:
+
+* ``structured_segment_products`` — chunk the trace into S segments and
+  fold every segment's matrix product **concurrently**.  One op matrix
+  is the identity plus ≤ 4 rewritten rows, so ``A_t ⊗ P`` only rewrites
+  those rows of P: the segment fold is the *scan recurrence itself with
+  each scalar resource time replaced by an N-row of the evolving
+  product* (initialised to identity basis rows) — O(T·N) work instead
+  of the O(T·N³) of dense matmuls, with sequential depth L = T/S;
+* ``maxplus_fold_segmented`` — the dense twin over a matrix dictionary
+  (blocked (max,+) matmuls; the MXU-shaped form for TPUs), with
+  ``segment_len=None`` dispatching to ``maxplus_fold_assoc``, the pure
+  O(log T)-depth ``associative_scan`` fold;
+* ``maxplus_matrix_power`` / ``periodic_fold_squaring`` — a homogeneous
+  periodic stream folds one period into ``A_period`` and reaches
+  ``n_pages`` ops via repeated squaring: O(log n_pages) matmuls total.
+
 ``StateLayout`` fixes (channels, ways) per batch so design points with
 different geometries stay batchable; unused rows are (max,+) identity.
 """
@@ -35,6 +54,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sim import MAX_WAYS, PageOpParams
@@ -154,6 +175,232 @@ def combo_matrices(table, combos, layout: StateLayout,
         for k, c, w, par in combos])
 
 
+
+
+# ---------------------------------------------------------------------------
+# Log-depth evaluation: (max,+) matmul algebra (DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+
+
+def maxplus_eye(n: int) -> np.ndarray:
+    """(max,+) identity: 0 on the diagonal, -inf (NEG) elsewhere."""
+    return np.where(np.eye(n, dtype=bool), 0.0, NEG).astype(np.float32)
+
+
+def maxplus_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(max,+) matrix product C[..., r, c] = max_k (a[..., r, k] + b[..., k, c]).
+
+    Saturates at NEG so identity rows stay exactly NEG under repeated
+    squaring instead of drifting towards float -inf/overflow."""
+    c = jnp.max(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+    return jnp.maximum(c, NEG)
+
+
+def maxplus_matvec(a: jax.Array, s: jax.Array) -> jax.Array:
+    """(A ⊗ s)[..., r] = max_c (a[..., r, c] + s[..., c])."""
+    return jnp.max(a + s[..., None, :], axis=-1)
+
+
+def maxplus_matrix_power(a: jax.Array, n: int) -> jax.Array:
+    """a^⊗n by binary exponentiation — O(log n) (max,+) matmuls.
+
+    ``n`` is static (python int >= 0); n == 0 returns the identity."""
+    assert n >= 0
+    dim = a.shape[-1]
+    result = jnp.broadcast_to(jnp.asarray(maxplus_eye(dim)), a.shape)
+    while n:
+        if n & 1:
+            result = maxplus_matmul(a, result)
+        n >>= 1
+        if n:
+            a = maxplus_matmul(a, a)
+    return result
+
+
+def _chain_product(g: jax.Array) -> jax.Array:
+    """Sequential fold P = g[-1] ⊗ … ⊗ g[0] over leading axis (small T)."""
+
+    def step(p, a):
+        return maxplus_matmul(a, p), None
+
+    eye = jnp.broadcast_to(jnp.asarray(maxplus_eye(g.shape[-1])),
+                           g.shape[1:])
+    p, _ = jax.lax.scan(step, eye, g)
+    return p
+
+
+def maxplus_fold_assoc(g: jax.Array, s0: jax.Array) -> jax.Array:
+    """Pure log-depth fold: s_T = g[T-1] ⊗ … ⊗ g[0] ⊗ s0.
+
+    ``g`` [T, ..., N, N] per-op matrices (already gathered), ``s0``
+    [..., N].  ``associative_scan`` evaluates all T prefixes in O(log T)
+    depth; we keep only the total product.  O(T·N³) work — the form to
+    use when the accelerator has FLOPs to burn (TPU MXU)."""
+    pref = jax.lax.associative_scan(
+        lambda x, y: maxplus_matmul(y, x), g, axis=0)
+    return maxplus_matvec(pref[-1], s0)
+
+
+def maxplus_fold_segmented(
+    mats: jax.Array,         # [..., M, N, N] matrix dictionary
+    idx: jax.Array,          # [T] int32 per-op matrix index (shared)
+    s0: jax.Array,           # [..., N]
+    *,
+    segment_len: int | None = 64,
+) -> jax.Array:
+    """Segmented parallel-prefix fold of a trace-indexed matrix product.
+
+    The [T] trace is chunked into S = ceil(T/L) segments of length
+    L = ``segment_len``; all S segment products fold concurrently (one
+    ``lax.scan`` over L steps carrying [..., S, N, N]), then the S
+    products combine with ``associative_scan`` — O(L + log S) depth vs
+    the O(T) sequential matvec fold.  The tail pads with the (max,+)
+    identity (index M), which is a no-op on the product.  This is the
+    dense (MXU-shaped) strategy over a matrix dictionary; the O(T·N)
+    structured twin is ``structured_segment_products``.
+    ``segment_len=None`` gathers all T matrices and runs the pure
+    O(log T)-depth ``maxplus_fold_assoc``."""
+    mats = jnp.asarray(mats)
+    idx = jnp.asarray(idx, jnp.int32)
+    if segment_len is None:
+        g = jnp.moveaxis(jnp.take(mats, idx, axis=-3), -3, 0)
+        return maxplus_fold_assoc(g, s0)
+    n = mats.shape[-1]
+    t_steps = idx.shape[0]
+    seg = max(1, min(segment_len, t_steps))
+    n_seg = -(-t_steps // seg)
+    eye = jnp.asarray(maxplus_eye(n))
+    # index M = identity padding for the ragged tail
+    mats_ext = jnp.concatenate(
+        [mats, jnp.broadcast_to(eye, mats.shape[:-3] + (1, n, n))], axis=-3)
+    pad = n_seg * seg - t_steps
+    idx_ext = jnp.pad(idx, (0, pad), constant_values=mats.shape[-3])
+    idx_cols = idx_ext.reshape(n_seg, seg).T          # [L, S]
+
+    def step(p, cols):
+        # gather this step's matrix for every segment: [..., S, N, N]
+        a = jnp.take(mats_ext, cols, axis=-3)
+        return maxplus_matmul(a, p), None
+
+    p0 = jnp.broadcast_to(eye, mats.shape[:-3] + (n_seg, n, n))
+    prods, _ = jax.lax.scan(step, p0, idx_cols)
+    # combine segment products in log depth; segment axis is -3
+    prods = jnp.moveaxis(prods, -3, 0)                # [S, ..., N, N]
+    pref = jax.lax.associative_scan(
+        lambda x, y: maxplus_matmul(y, x), prods, axis=0)
+    return maxplus_matvec(pref[-1], s0)
+
+
+def structured_segment_products(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    cls: jax.Array,          # [T] int32
+    channel: jax.Array,      # [T] int32
+    way: jax.Array,          # [T] int32
+    parity: jax.Array,       # [T] int32
+    *,
+    channels: int,
+    ways: int,
+    batched: bool,
+    segment_len: int,
+) -> jax.Array:
+    """[S, N, N] (max,+) products of the trace's S = ceil(T/L) segments.
+
+    Exploits the structure of the step matrices: one op rewrites only
+    the bus/ctrl/chip (and round-start) rows, each a max of ≤ 3 source
+    rows plus offsets — so ``A_t ⊗ P`` is the scan-engine recurrence
+    applied to *N-row-valued* resource times.  Every segment runs that
+    recurrence from identity basis rows, all segments advancing in one
+    vectorised scan step: O(T·N) work, sequential depth L, versus
+    O(T·N³) / depth T for the dense fold."""
+    layout = StateLayout(channels, ways)
+    n = layout.n_state
+    t_steps = cls.shape[0]
+    seg = max(1, min(segment_len, t_steps))
+    n_seg = -(-t_steps // seg)
+    pad = n_seg * seg - t_steps
+
+    def cols(x, fill=0):
+        x = jnp.pad(jnp.asarray(x), (0, pad), constant_values=fill)
+        return x.reshape(n_seg, seg).T                 # [L, S]
+
+    # hoist every per-op quantity out of the scan: class-table gathers,
+    # parity-resolved post times, and the row indices each op touches.
+    # Padding ops in the ragged tail get out-of-range indices and write
+    # with mode="drop" (a zero-timing op is *not* the identity map, so
+    # padding must skip, not no-op).  The step body then touches only
+    # the O(S·N) rows an op actually rewrites — gathers/scatters, never
+    # a full pass over the [S, C·W, N] chip block.
+    k = cols(jnp.asarray(cls, jnp.int32))
+    c = cols(jnp.asarray(channel, jnp.int32))
+    w = cols(jnp.asarray(way, jnp.int32))
+    par = cols(jnp.asarray(parity, jnp.int32))
+    valid = cols(jnp.ones((t_steps,), bool), fill=False)
+    ready_off = ((w + 1).astype(jnp.float32) * cmd_us[k] if batched
+                 else cmd_us[k]) + pre_us[k]
+    xs = (c, c * ways + w,
+          jnp.where(valid, c, channels),               # drop-sentinels
+          jnp.where(valid, c * ways + w, channels * ways),
+          (w == 0) & valid, valid, ready_off,
+          slot_us[k], ctrl_us[k], arb_us[k],
+          jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k]))
+
+    basis = jnp.asarray(maxplus_eye(n))                # basis rows
+    init = tuple(jnp.broadcast_to(x, (n_seg,) + x.shape) for x in (
+        basis[:channels],                              # bus  [S,C,N]
+        basis[channels:channels * (1 + ways)],         # chip [S,C·W,N]
+        basis[layout.ctrl],                            # ctrl [S,N]
+        basis[layout.ctrl + 1:]))                      # rs   [S,C,N]
+    lane = jnp.arange(n_seg)
+
+    def step(state, op):
+        bus, chip, ctl, rs = state
+        c, cw, ci, cwi, first, ok, rd, slot, ctru, arb, post = op
+        bus_c = jnp.take_along_axis(bus, c[:, None, None], axis=1)[:, 0]
+        if batched:
+            rs_c = jnp.take_along_axis(rs, c[:, None, None], axis=1)[:, 0]
+            rs_row = jnp.where(first[:, None], bus_c, rs_c)
+            rs = rs.at[lane, jnp.where(first, ci, channels)].set(
+                bus_c, mode="drop")
+            ready = rs_row + rd[:, None]
+        else:                          # rs rows stay identity
+            chip_cw = jnp.take_along_axis(
+                chip, cw[:, None, None], axis=1)[:, 0]
+            ready = chip_cw + rd[:, None]
+        start = jnp.maximum(jnp.maximum(bus_c, ready), ctl) + arb[:, None]
+        new_bus = start + slot[:, None]
+        bus = bus.at[lane, ci].set(new_bus, mode="drop")
+        chip = chip.at[lane, cwi].set(new_bus + post[:, None], mode="drop")
+        ctl = jnp.where(ok[:, None], start + ctru[:, None], ctl)
+        return (bus, chip, ctl, rs), None
+
+    (bus, chip, ctl, rs), _ = jax.lax.scan(step, init, xs)
+    return jnp.concatenate([bus, chip, ctl[:, None, :], rs], axis=1)
+
+
+def periodic_fold_squaring(period_mats: jax.Array, s0: jax.Array,
+                           n_steps: int) -> jax.Array:
+    """Homogeneous stream: fold one period, then square to ``n_steps``.
+
+    ``period_mats`` [..., P, N, N] (op order along axis -3); the fold
+        s_T = R ⊗ A_period^q ⊗ s0,  n_steps = q·P + r,
+    needs the P-step period product, ~log2(q) squarings and an r-step
+    remainder prefix — O(P + log n_steps) matmuls vs O(n_steps) matvecs.
+    ``n_steps`` is static."""
+    period_mats = jnp.asarray(period_mats)
+    p = period_mats.shape[-3]
+    q, r = divmod(int(n_steps), p)
+    lead = jnp.moveaxis(period_mats, -3, 0)           # [P, ..., N, N]
+    a_period = _chain_product(lead)
+    total = maxplus_matrix_power(a_period, q)
+    if r:
+        total = maxplus_matmul(_chain_product(lead[:r]), total)
+    return maxplus_matvec(total, s0)
 
 
 def init_state(layout: StateLayout = DEFAULT_LAYOUT) -> np.ndarray:

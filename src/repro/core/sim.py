@@ -14,14 +14,22 @@ and the per-op update is a (max, +) expression over that state.  Each op in
 a trace carries (op-class, channel, way, page-parity); the per-op timing is
 a gather from a small op-class table (``repro.core.trace.OpClassTable``),
 so a single engine handles heterogeneous mixed read/write traffic across
-all channels jointly.  Three interchangeable engines evaluate the
-recurrence (DESIGN.md §2):
+all channels jointly.  Interchangeable engines evaluate the recurrence
+(DESIGN.md §2):
 
 * ``trace_end_time`` / ``channel_bandwidth_mb_s`` — ``jax.lax.scan`` over
-  trace ops (jit/vmap-able);
+  trace ops (jit/vmap-able, O(T) depth);
+* ``trace_end_time_prefix`` — the log-depth engine: per-op (max,+) step
+  matrices built in-trace (``repro.core.maxplus_form.op_matrices_jnp``)
+  and folded with a segmented parallel prefix, O(L + log T) depth
+  (DESIGN.md §2.3);
+* ``engine="squaring"`` on ``channel_bandwidth_mb_s`` /
+  ``sweep_bandwidth_mb_s`` — homogeneous streams fold one period and
+  reach ``n_pages`` by repeated (max,+) matrix squaring, O(log n_pages);
 * ``repro.kernels.maxplus`` — the same recurrence as a blocked (max,+)
   matrix fold in Pallas, gathering the per-op-class matrix ``A[idx[t]]``
-  per step (TPU-native, batched across design points);
+  per step (TPU-native, batched across design points; also exposes the
+  segmented and squaring strategies);
 * ``repro.core.sim_ref`` — plain-Python trace oracle for tests.
 
 Model structure (C channels, W ways each, round-robin page striping)
@@ -99,6 +107,8 @@ CTRL_ARB_SCAN_FRAC = 0.1
 
 Policy = Literal["eager", "batched"]
 Mode = Literal["read", "write"]
+# evaluation strategy for the (identical) recurrence — see module docstring
+Engine = Literal["scan", "prefix", "squaring"]
 
 
 def controller_arb_us(ctrl_us: float, channels: int) -> float:
@@ -234,6 +244,199 @@ def trace_end_time(
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
 
 
+# ---------------------------------------------------------------------------
+# Log-depth engines (DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+
+
+def _trace_end_time_prefix_impl(
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
+        cls, channel, way, parity, n_channels, n_ways, batched,
+        segment_len, combine):
+    from repro.core import maxplus_form as mf  # deferred: mf imports us
+
+    prods = mf.structured_segment_products(
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
+        cls, channel, way, parity,
+        channels=n_channels, ways=n_ways, batched=batched,
+        segment_len=segment_len if segment_len is not None else 1)
+    layout = mf.StateLayout(n_channels, n_ways)
+    s0 = jnp.zeros((layout.n_state,), jnp.float32)
+    if combine == "assoc":        # log-depth dense combine (TPU-shaped)
+        pref = jax.lax.associative_scan(
+            lambda x, y: mf.maxplus_matmul(y, x), prods, axis=0)
+        final = mf.maxplus_matvec(pref[-1], s0)
+    elif combine == "chain":      # O(S) matvec chain: no dense matmuls,
+        final, _ = jax.lax.scan(  # the CPU-fast combine
+            lambda s, p: (mf.maxplus_matvec(p, s), None), s0, prods)
+    else:
+        raise ValueError(f"unknown combine {combine!r} "
+                         "(one of 'chain', 'assoc')")
+    return jnp.max(final[: layout.n_completion_rows])
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "n_ways",
+                                             "batched", "segment_len",
+                                             "combine"))
+def trace_end_time_prefix(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    cls: jax.Array,          # [T]
+    channel: jax.Array,      # [T]
+    way: jax.Array,          # [T]
+    parity: jax.Array,       # [T]
+    n_channels: int,
+    n_ways: int,
+    batched: bool,
+    segment_len: int | None = 64,
+    combine: str = "chain",
+) -> jax.Array:
+    """Same recurrence as ``trace_end_time``, evaluated in O(L + S)
+    depth (S = ceil(T/L)): the trace's S segment products are computed
+    concurrently by the structured row fold of
+    ``repro.core.maxplus_form.structured_segment_products`` (the scan
+    recurrence on N-row-valued resource times — O(T·N) work, depth L),
+    then combined across segments.  ``combine="chain"`` folds the S
+    products into the initial state with O(S) cheap (max,+) matvecs
+    (fastest on CPU); ``combine="assoc"`` combines them with a
+    log-depth ``associative_scan`` of dense matmuls — O(L + log S)
+    total depth, the shape that pays on TPU.  Compiles end to end from
+    the raw table/trace arrays with no Python pass over the trace.
+
+    ``n_ways`` bounds the way indices in the trace and sets the state
+    layout (smaller than the scan engine's fixed MAX_WAYS block, so the
+    combine matrices stay compact).  ``segment_len=None`` folds each op
+    as its own segment — with ``combine="assoc"`` the pure O(log T)-
+    depth dense form."""
+    return _trace_end_time_prefix_impl(
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
+        cls, channel, way, parity, n_channels, n_ways, batched,
+        segment_len, combine)
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "n_ways",
+                                             "batched", "segment_len",
+                                             "combine"))
+def trace_end_time_prefix_batch(
+    cmd_us: jax.Array,       # [B, K] stacked op-class timing tables
+    pre_us: jax.Array,       # [B, K]
+    slot_us: jax.Array,      # [B, K]
+    post_lo_us: jax.Array,   # [B, K]
+    post_hi_us: jax.Array,   # [B, K]
+    ctrl_us: jax.Array,      # [B, K]
+    arb_us: jax.Array,       # [B, K]
+    cls: jax.Array,          # [T] one trace shared by the batch
+    channel: jax.Array,      # [T]
+    way: jax.Array,          # [T]
+    parity: jax.Array,       # [T]
+    n_channels: int,
+    n_ways: int,
+    batched: bool,
+    segment_len: int | None = 64,
+    combine: str = "chain",
+) -> jax.Array:
+    """[B] completion times: one trace under a batch of design-point
+    timing tables.  The structured segment fold vectorises over B×S
+    lanes in one pass — the sweep-scaling form of the prefix engine
+    (trace-only mask/pattern precomputation is shared across the
+    batch)."""
+    return jax.vmap(
+        lambda *t: _trace_end_time_prefix_impl(
+            *t, cls, channel, way, parity, n_channels, n_ways, batched,
+            segment_len, combine)
+    )(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pages", "batched"))
+def _squaring_end_time(
+    cmd_us: jax.Array,       # scalars (or [B] under vmap) — one op class
+    pre_us: jax.Array,
+    slot_us: jax.Array,
+    post_lo_us: jax.Array,
+    post_hi_us: jax.Array,
+    ctrl_us: jax.Array,
+    ways: jax.Array,
+    n_pages: int,
+    batched: bool,
+) -> jax.Array:
+    """Homogeneous single-channel completion time via periodic matrix
+    squaring: fold one 2·MAX_WAYS-op period block with the structured
+    row fold, then square to ``n_pages`` — O(log n_pages) dense (max,+)
+    matmuls plus one structured remainder fold (DESIGN.md §2.3).
+    Requires ways | MAX_WAYS so the block is a whole number of true
+    periods (the paper's power-of-two sweep grid)."""
+    from repro.core import maxplus_form as mf  # deferred: mf imports us
+
+    period = 2 * MAX_WAYS
+    table = tuple(jnp.reshape(x, (1,)) for x in (
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, 0.0))
+
+    def block_product(n_ops: int) -> jax.Array:
+        i = jnp.arange(n_ops)
+        return mf.structured_segment_products(
+            *table, jnp.zeros((n_ops,), jnp.int32),
+            jnp.zeros((n_ops,), jnp.int32), (i % ways).astype(jnp.int32),
+            ((i // ways) % 2).astype(jnp.int32),
+            channels=1, ways=MAX_WAYS, batched=batched,
+            segment_len=n_ops)[0]
+
+    q, r = divmod(int(n_pages), period)
+    if q:
+        total = mf.maxplus_matrix_power(block_product(period), q)
+        if r:
+            total = mf.maxplus_matmul(block_product(r), total)
+    else:
+        total = block_product(r)
+    s0 = jnp.zeros((mf.N_STATE,), jnp.float32)
+    final = mf.maxplus_matvec(total, s0)
+    return jnp.max(final[: mf.DEFAULT_LAYOUT.n_completion_rows])
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_end_time_batch(
+    cmd_us: jax.Array,       # [B, K] stacked tables (see trace_end_time)
+    pre_us: jax.Array,
+    slot_us: jax.Array,
+    post_lo_us: jax.Array,
+    post_hi_us: jax.Array,
+    ctrl_us: jax.Array,
+    arb_us: jax.Array,
+    cls: jax.Array,          # [T] one trace shared by the batch
+    channel: jax.Array,
+    way: jax.Array,
+    parity: jax.Array,
+    n_channels: int,
+    batched: bool,
+) -> jax.Array:
+    """[B] completion times — the scan engine vmapped over tables."""
+    return jax.vmap(
+        lambda *t: trace_end_time(
+            *t, cls, channel, way, parity, n_channels=n_channels,
+            batched=batched)
+    )(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us)
+
+
+def _validate_squaring_ways(ways) -> None:
+    """engine="squaring" folds a 2·MAX_WAYS-op period block, which only
+    tiles the stream when ways | MAX_WAYS (the paper's power-of-two
+    grid) — reject anything else loudly rather than silently misalign.
+    Traced values can't be inspected; the precondition then stands as
+    documented."""
+    try:
+        arr = np.asarray(ways)
+    except Exception:                  # jax tracer: defer to the docs
+        return
+    if np.any(arr < 1) or np.any(MAX_WAYS % np.maximum(arr, 1) != 0):
+        raise ValueError(
+            f"engine='squaring' requires ways dividing {MAX_WAYS}, got "
+            f"{arr.tolist()}")
+
+
 def _steady_pattern(n_pages, ways):
     """way/parity index pattern of a single-channel round-robin stream."""
     i = jnp.arange(n_pages)
@@ -245,22 +448,37 @@ def channel_bandwidth_mb_s(
     ways: int | jax.Array,
     policy: Policy = "eager",
     n_pages: int = 512,
+    engine: Engine = "scan",
 ) -> jax.Array:
-    """Steady-stream bandwidth of a single channel, MB/s."""
+    """Steady-stream bandwidth of a single channel, MB/s.
+
+    ``engine`` selects the evaluation strategy: the O(T) ``lax.scan``
+    fold, the segmented parallel-prefix fold, or O(log T) periodic
+    matrix squaring (squaring requires ways | MAX_WAYS) — all evaluate
+    the identical recurrence."""
+    if engine not in ("scan", "prefix", "squaring"):
+        raise ValueError(f"unknown engine {engine!r}")
+    scalars = tuple(
+        jnp.asarray(x, jnp.float32)
+        for x in (op.cmd_us, op.pre_us, op.slot_us, op.post_lo_us,
+                  op.post_hi_us, op.ctrl_us))
+    if engine == "squaring":
+        _validate_squaring_ways(ways)
+        end = _squaring_end_time(
+            *scalars, jnp.asarray(ways, jnp.int32), n_pages=n_pages,
+            batched=(policy == "batched"))
+        return (n_pages * op.data_bytes) / end
     way, parity = _steady_pattern(n_pages, jnp.asarray(ways, jnp.int32))
     zeros = jnp.zeros((n_pages,), jnp.int32)
-    end = trace_end_time(
-        jnp.asarray([op.cmd_us], jnp.float32),
-        jnp.asarray([op.pre_us], jnp.float32),
-        jnp.asarray([op.slot_us], jnp.float32),
-        jnp.asarray([op.post_lo_us], jnp.float32),
-        jnp.asarray([op.post_hi_us], jnp.float32),
-        jnp.asarray([op.ctrl_us], jnp.float32),
-        jnp.asarray([0.0], jnp.float32),
-        zeros, zeros, way, parity,
-        n_channels=1,
-        batched=(policy == "batched"),
-    )
+    table = tuple(x[None] for x in scalars) + (jnp.zeros((1,), jnp.float32),)
+    if engine == "prefix":
+        end = trace_end_time_prefix(
+            *table, zeros, zeros, way, parity,
+            n_channels=1, n_ways=MAX_WAYS, batched=(policy == "batched"))
+    else:
+        end = trace_end_time(
+            *table, zeros, zeros, way, parity,
+            n_channels=1, batched=(policy == "batched"))
     return (n_pages * op.data_bytes) / end  # bytes/us == MB/s
 
 
@@ -320,30 +538,60 @@ def saturation_ways(op: PageOpParams) -> int:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("n_pages", "batched"))
 def sweep_bandwidth_mb_s(
     cmd_us: jax.Array,
     pre_us: jax.Array,
     slot_us: jax.Array,
     post_lo_us: jax.Array,
     post_hi_us: jax.Array,
+    ctrl_us: jax.Array,
     data_bytes: jax.Array,
     ways: jax.Array,
     n_pages: int = 512,
     batched: bool = False,
+    engine: Engine = "scan",
 ) -> jax.Array:
-    """Vectorised single-channel bandwidth over design points (arrays [N])."""
+    """Vectorised single-channel bandwidth over design points (arrays [N]).
 
+    Charges the shared-controller occupancy ``ctrl_us`` exactly like
+    ``channel_bandwidth_mb_s`` (the two paths are regression-pinned
+    equal); ``engine="squaring"`` evaluates each point in O(log n_pages)
+    matmuls instead of the O(n_pages) scan (and requires every entry of
+    ``ways`` to divide MAX_WAYS)."""
+    if engine not in ("scan", "squaring"):
+        raise ValueError(f"unknown sweep engine {engine!r} "
+                         "(one of 'scan', 'squaring')")
+    if engine == "squaring":
+        _validate_squaring_ways(ways)
+    return _sweep_bandwidth_jit(
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
+        data_bytes, ways, n_pages=n_pages, batched=batched, engine=engine)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pages", "batched", "engine"))
+def _sweep_bandwidth_jit(
+    cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
+    data_bytes, ways, n_pages: int, batched: bool, engine: Engine,
+) -> jax.Array:
     zeros_i = jnp.zeros((n_pages,), jnp.int32)
     zero_k = jnp.zeros((1,), jnp.float32)
 
-    def one(cmd, pre, slot, lo, hi, nbytes, w):
+    if engine == "squaring":
+        def one_sq(cmd, pre, slot, lo, hi, ctrl, nbytes, w):
+            end = _squaring_end_time(cmd, pre, slot, lo, hi, ctrl, w,
+                                     n_pages=n_pages, batched=batched)
+            return (n_pages * nbytes) / end
+
+        return jax.vmap(one_sq)(cmd_us, pre_us, slot_us, post_lo_us,
+                                post_hi_us, ctrl_us, data_bytes, ways)
+
+    def one(cmd, pre, slot, lo, hi, ctrl, nbytes, w):
         way, parity = _steady_pattern(n_pages, w)
         end = trace_end_time(
             cmd[None], pre[None], slot[None], lo[None], hi[None],
-            zero_k, zero_k, zeros_i, zeros_i, way, parity,
+            ctrl[None], zero_k, zeros_i, zeros_i, way, parity,
             n_channels=1, batched=batched)
         return (n_pages * nbytes) / end
 
     return jax.vmap(one)(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
-                         data_bytes, ways)
+                         ctrl_us, data_bytes, ways)

@@ -10,9 +10,15 @@ shared-controller occupancy row and the firmware arbitration charge
 (DESIGN.md §2-3).  ``simulate_channel_ref`` is the original
 single-channel homogeneous-stream loop, kept verbatim as an independent
 cross-check that the trace machinery did not drift.
+``simulate_trace_matfold_ref`` is the oracle for the log-depth engines
+(DESIGN.md §2.3): it evaluates the same trace through explicit numpy
+(max,+) segment products combined pairwise — the combine math of the
+segmented parallel-prefix fold, with none of its jax machinery.
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 from repro.core.sim import MAX_WAYS, PageOpParams
 
@@ -46,6 +52,43 @@ def simulate_trace_ref(table, trace, policy: str = "eager") -> float:
 
 def trace_bandwidth_ref_mb_s(table, trace, policy: str = "eager") -> float:
     return trace.total_bytes(table) / simulate_trace_ref(table, trace, policy)
+
+
+def maxplus_matmul_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """(max,+) matrix product in plain numpy (oracle building block)."""
+    return np.max(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+
+def simulate_trace_matfold_ref(table, trace, policy: str = "eager",
+                               segment_len: int = 64) -> float:
+    """Completion time (us) of an OpTrace via explicit (max,+) segment
+    products — the oracle for the segmented parallel-prefix engines.
+
+    Each length-``segment_len`` chunk of the trace folds into one step
+    matrix with sequential numpy matmuls; the chunk products then
+    combine in a pairwise tree (the log-depth combine), and the total
+    product applies to the all-free initial state."""
+    from repro.core.maxplus_form import (StateLayout, combo_matrices,
+                                         end_time_from_state, init_state,
+                                         maxplus_eye, trace_combos)
+
+    layout = StateLayout(trace.channels, trace.ways)
+    combos, idx = trace_combos(trace)
+    mats = combo_matrices(table, combos, layout, policy)
+    prods = []
+    for lo in range(0, trace.n_ops, segment_len):
+        p = maxplus_eye(layout.n_state).astype(np.float64)
+        for t in idx[lo:lo + segment_len]:
+            p = maxplus_matmul_np(mats[int(t)].astype(np.float64), p)
+        prods.append(p)
+    while len(prods) > 1:          # pairwise tree: prods[i+1] is later
+        nxt = [maxplus_matmul_np(prods[i + 1], prods[i])
+               for i in range(0, len(prods) - 1, 2)]
+        if len(prods) % 2:
+            nxt.append(prods[-1])
+        prods = nxt
+    state = np.max(prods[0] + init_state(layout)[None, :], axis=-1)
+    return float(end_time_from_state(state, layout))
 
 
 def simulate_channel_ref(

@@ -23,9 +23,11 @@ import numpy as np
 
 from repro.core.interface import make_interface
 from repro.core.nand import chip as nand_chip
-from repro.core.sim import (MAX_CHANNELS, MAX_WAYS, Policy, SSDConfig,
-                            controller_arb_us, page_op_params,
-                            trace_end_time)
+from repro.core.sim import (MAX_CHANNELS, MAX_WAYS, Engine, Policy,
+                            SSDConfig, controller_arb_us, page_op_params,
+                            trace_end_time, trace_end_time_batch,
+                            trace_end_time_prefix,
+                            trace_end_time_prefix_batch)
 
 READ, WRITE = 0, 1
 
@@ -255,26 +257,72 @@ def kvoffload_trace(read_bytes_per_token: int, cfg: SSDConfig,
 # ---------------------------------------------------------------------------
 
 
-def simulate(table: OpClassTable, trace: OpTrace,
-             policy: Policy = "eager") -> float:
-    """Completion time (us) of ``trace`` under ``table`` — scan engine."""
-    end = trace_end_time(
+def simulate(table: OpClassTable, trace: OpTrace, policy: Policy = "eager",
+             engine: Engine = "scan", segment_len: int | None = 64) -> float:
+    """Completion time (us) of ``trace`` under ``table``.
+
+    ``engine="scan"`` is the O(T) ``lax.scan`` fold; ``engine="prefix"``
+    evaluates the same recurrence as a segmented parallel-prefix (max,+)
+    matrix fold in O(segment_len + log T) depth (DESIGN.md §2.3)."""
+    args = (
         jnp.asarray(table.cmd_us), jnp.asarray(table.pre_us),
         jnp.asarray(table.slot_us), jnp.asarray(table.post_lo_us),
         jnp.asarray(table.post_hi_us), jnp.asarray(table.ctrl_us),
         jnp.asarray(table.arb_us),
         jnp.asarray(trace.cls), jnp.asarray(trace.channel),
         jnp.asarray(trace.way), jnp.asarray(trace.parity),
-        n_channels=trace.channels,
-        batched=(policy == "batched"),
     )
+    if engine == "prefix":
+        end = trace_end_time_prefix(
+            *args, n_channels=trace.channels, n_ways=trace.ways,
+            batched=(policy == "batched"), segment_len=segment_len)
+    elif engine == "scan":
+        end = trace_end_time(
+            *args, n_channels=trace.channels,
+            batched=(policy == "batched"))
+    else:   # "squaring" is homogeneous-only; reject rather than fall back
+        raise ValueError(f"unknown trace engine {engine!r} "
+                         "(one of 'scan', 'prefix')")
     return float(end)
 
 
+def simulate_batch(tables: list[OpClassTable], trace: OpTrace,
+                   policy: Policy = "eager", engine: Engine = "prefix",
+                   segment_len: int | None = 64,
+                   combine: str = "chain") -> np.ndarray:
+    """[B] completion times (us) of one trace under a batch of tables.
+
+    This is the design-space sweep form: the trace-dependent work (op
+    pattern, segment masks) is shared across the batch and the fold
+    vectorises over B design points — where the log-depth prefix engine
+    pays off (DESIGN.md §2.3)."""
+    targs = tuple(
+        jnp.asarray(np.stack([getattr(t, f) for t in tables]))
+        for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us",
+                  "post_hi_us", "ctrl_us", "arb_us"))
+    trargs = (jnp.asarray(trace.cls), jnp.asarray(trace.channel),
+              jnp.asarray(trace.way), jnp.asarray(trace.parity))
+    if engine == "prefix":
+        end = trace_end_time_prefix_batch(
+            *targs, *trargs, n_channels=trace.channels, n_ways=trace.ways,
+            batched=(policy == "batched"), segment_len=segment_len,
+            combine=combine)
+    elif engine == "scan":
+        end = trace_end_time_batch(
+            *targs, *trargs, n_channels=trace.channels,
+            batched=(policy == "batched"))
+    else:   # "squaring" is homogeneous-only; reject rather than fall back
+        raise ValueError(f"unknown trace engine {engine!r} "
+                         "(one of 'scan', 'prefix')")
+    return np.asarray(end)
+
+
 def trace_bandwidth_mb_s(table: OpClassTable, trace: OpTrace,
-                         policy: Policy = "eager") -> float:
+                         policy: Policy = "eager",
+                         engine: Engine = "scan") -> float:
     """Aggregate user-payload bandwidth of the trace, MB/s."""
-    return trace.total_bytes(table) / simulate(table, trace, policy)
+    return trace.total_bytes(table) / simulate(table, trace, policy,
+                                               engine=engine)
 
 
 _WORKLOADS = {

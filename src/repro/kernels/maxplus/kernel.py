@@ -11,7 +11,7 @@ gather ``idx[t] = t mod M``.  Layout puts the design-point batch in the
 
     mats: [B, M, N, N]  →  kernel block [M, N, N, BL] (lanes = points)
     s:    [B, N]        →  [N, BL]
-    idx:  [T] int32     →  whole-array block (scalar-gathered per step)
+    idx:  [T] int32     →  SMEM scalar-prefetch operand (whole sequence)
 
 One grid step owns BL=128 design points; the T-step fold runs as a
 ``fori_loop`` of VPU max/add ops entirely in VMEM, gathering
@@ -19,11 +19,11 @@ One grid step owns BL=128 design points; the T-step fold runs as a
 N=19).  This replaces the sequential event loop of the paper's RTL
 co-simulation with a data-parallel tensor program — the TPU-native form
 of the paper's contribution.  The homogeneous path (``idx=None``)
-computes ``t % period`` inline and compiles on TPU; the trace-indexed
-path passes ``idx`` as a plain operand, which lowers only in interpret
-mode (a compiled TPU build needs SMEM scalar prefetch — see
-``repro.kernels.maxplus.ops.maxplus_fold``, which forces interpret for
-that path).
+computes ``t % period`` inline; the trace-indexed path hands ``idx`` to
+the grid as a ``pltpu.PrefetchScalarGridSpec`` scalar-prefetch operand,
+so the per-step matrix index is read from SMEM and **both paths compile
+on TPU** (the previous build fed ``idx`` as a plain VMEM operand, which
+lowered only in interpret mode).
 """
 
 from __future__ import annotations
@@ -33,6 +33,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _maxplus_step(mats, i, s):
@@ -42,8 +43,7 @@ def _maxplus_step(mats, i, s):
 
 
 def _kernel_periodic(mats_ref, s0_ref, out_ref, *, t_steps: int, period: int):
-    """Homogeneous stream: matrix index is t % period, computed inline —
-    no index operand, so this path compiles on TPU as before."""
+    """Homogeneous stream: matrix index is t % period, computed inline."""
     mats = mats_ref[...]          # [P, N, N, BL]
     out_ref[...] = jax.lax.fori_loop(
         0, t_steps, lambda t, s: _maxplus_step(mats, t % period, s),
@@ -51,7 +51,9 @@ def _kernel_periodic(mats_ref, s0_ref, out_ref, *, t_steps: int, period: int):
 
 
 def _kernel_indexed(idx_ref, mats_ref, s0_ref, out_ref, *, t_steps: int):
-    """Heterogeneous trace: gather A[idx[t]] per step."""
+    """Heterogeneous trace: gather A[idx[t]] per step.  ``idx_ref`` is the
+    scalar-prefetch operand — it lives in SMEM and is available before
+    the body runs, so the dynamic gather index is a scalar load."""
     mats = mats_ref[...]          # [M, N, N, BL]
     out_ref[...] = jax.lax.fori_loop(
         0, t_steps, lambda t, s: _maxplus_step(mats, idx_ref[t], s),
@@ -78,23 +80,33 @@ def maxplus_fold_kernel(
     mats_l = jnp.moveaxis(mats, 0, -1)   # [M, N, N, B]
     s0_l = jnp.moveaxis(s0, 0, -1)       # [N, B]
 
-    mats_spec = pl.BlockSpec((m, n, n, bl), lambda i: (0, 0, 0, i))
-    s0_spec = pl.BlockSpec((n, bl), lambda i: (0, i))
+    out_shape = jax.ShapeDtypeStruct((n, bp), jnp.float32)
     if idx is None:                      # periodic: no index operand
         kernel = functools.partial(_kernel_periodic, t_steps=t_steps,
                                    period=m)
-        in_specs, operands = [mats_spec, s0_spec], (mats_l, s0_l)
-    else:
+        out = pl.pallas_call(
+            kernel,
+            grid=(bp // bl,),
+            in_specs=[pl.BlockSpec((m, n, n, bl), lambda i: (0, 0, 0, i)),
+                      pl.BlockSpec((n, bl), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((n, bl), lambda i: (0, i)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(mats_l, s0_l)
+    else:                                # trace-indexed: idx via SMEM
         kernel = functools.partial(_kernel_indexed, t_steps=t_steps)
-        in_specs = [pl.BlockSpec((t_steps,), lambda i: (0,)),
-                    mats_spec, s0_spec]
-        operands = (idx.astype(jnp.int32), mats_l, s0_l)
-    out = pl.pallas_call(
-        kernel,
-        grid=(bp // bl,),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((n, bl), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, bp), jnp.float32),
-        interpret=interpret,
-    )(*operands)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(bp // bl,),
+            in_specs=[pl.BlockSpec((m, n, n, bl),
+                                   lambda i, idx_ref: (0, 0, 0, i)),
+                      pl.BlockSpec((n, bl), lambda i, idx_ref: (0, i))],
+            out_specs=pl.BlockSpec((n, bl), lambda i, idx_ref: (0, i)),
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(idx.astype(jnp.int32), mats_l, s0_l)
     return jnp.moveaxis(out, -1, 0)[:b]  # [B, N]

@@ -8,6 +8,16 @@ Two entry points mirror the two scan-engine paths in ``repro.core``:
 * ``trace_end_time_maxplus`` — one heterogeneous ``OpTrace`` evaluated
   for a batch of design-point ``OpClassTable``s (the matrix-dictionary
   form; DESIGN.md §2.1).
+
+Both take a ``strategy`` (DESIGN.md §2.3):
+
+* ``"sequential"`` — the O(T) Pallas ``fori_loop`` matvec fold
+  (``repro.kernels.maxplus.kernel``; compiles on TPU for both the
+  periodic and the scalar-prefetch trace-indexed path);
+* ``"segmented"`` — the segmented parallel-prefix matmul fold,
+  O(segment_len + log T) depth;
+* ``"squaring"`` (homogeneous only) — periodic matrix squaring,
+  O(log n_pages) matmuls.
 """
 
 from __future__ import annotations
@@ -18,19 +28,37 @@ import numpy as np
 
 from repro.core.maxplus_form import (StateLayout, combo_matrices,
                                      end_time_from_state, init_state,
-                                     trace_combos, transition_matrices)
+                                     maxplus_fold_segmented,
+                                     periodic_fold_squaring, trace_combos,
+                                     transition_matrices)
 from repro.core.sim import PageOpParams
 from repro.kernels.maxplus.kernel import maxplus_fold_kernel
 from repro.kernels.maxplus.ref import maxplus_fold_ref
 
 
 def maxplus_fold(mats, s0, *, t_steps: int, idx=None, use_kernel: bool = True,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, strategy: str = "sequential",
+                 segment_len: int = 64):
+    """Fold dispatch: ``strategy`` picks the evaluation shape (see module
+    docstring); ``use_kernel=False`` runs the jnp sequential reference."""
+    if strategy == "segmented":
+        if idx is None:
+            idx = jnp.arange(t_steps, dtype=jnp.int32) % mats.shape[-3]
+        return maxplus_fold_segmented(mats, idx[:t_steps], s0,
+                                      segment_len=segment_len)
+    if strategy == "squaring":
+        if idx is not None:
+            raise ValueError(
+                "strategy='squaring' needs a periodic (homogeneous) "
+                "stream — got an explicit idx sequence")
+        return periodic_fold_squaring(mats, s0, t_steps)
+    if strategy != "sequential":
+        raise ValueError(f"unknown strategy {strategy!r} (one of "
+                         "'sequential', 'segmented', 'squaring')")
     if interpret is None:
-        # the trace-indexed path feeds idx as a plain VMEM operand, which
-        # only lowers in interpret mode (kernel.py: a compiled TPU build
-        # needs SMEM scalar prefetch for the index sequence)
-        interpret = idx is not None or jax.default_backend() != "tpu"
+        # both kernel paths compile on TPU (the trace-indexed one via
+        # SMEM scalar prefetch); interpret only off-TPU
+        interpret = jax.default_backend() != "tpu"
     if use_kernel:
         return maxplus_fold_kernel(mats, s0, t_steps=t_steps, idx=idx,
                                    interpret=interpret)
@@ -45,6 +73,7 @@ def channel_end_time_maxplus(
     policy: str = "eager",
     use_kernel: bool = True,
     interpret: bool | None = None,
+    strategy: str = "sequential",
 ) -> jax.Array:
     """Completion times (us) for a batch of homogeneous design points."""
     mats = np.stack([transition_matrices(op, w, policy)
@@ -53,7 +82,7 @@ def channel_end_time_maxplus(
                                         init_state().shape[0])).copy()
     final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
                          t_steps=n_pages, use_kernel=use_kernel,
-                         interpret=interpret)
+                         interpret=interpret, strategy=strategy)
     return end_time_from_state(np.asarray(final))
 
 
@@ -71,6 +100,8 @@ def trace_end_time_maxplus(
     policy: str = "eager",
     use_kernel: bool = True,
     interpret: bool | None = None,
+    strategy: str = "sequential",
+    segment_len: int = 64,
 ) -> np.ndarray:
     """Completion times (us) of one heterogeneous trace under a batch of
     design-point timing tables ([B], or scalar for a single table)."""
@@ -85,7 +116,8 @@ def trace_end_time_maxplus(
                          (mats.shape[0], layout.n_state)).copy()
     final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
                          t_steps=trace.n_ops, idx=jnp.asarray(idx),
-                         use_kernel=use_kernel, interpret=interpret)
+                         use_kernel=use_kernel, interpret=interpret,
+                         strategy=strategy, segment_len=segment_len)
     end = end_time_from_state(np.asarray(final), layout)
     return end[0] if single else end
 

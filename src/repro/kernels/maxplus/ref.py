@@ -23,3 +23,24 @@ def maxplus_fold_ref(mats: jax.Array, s0: jax.Array, *, t_steps: int,
 
     s, _ = jax.lax.scan(step, s0, idx[:t_steps])
     return s
+
+
+def maxplus_product_ref(mats: jax.Array, idx: jax.Array) -> jax.Array:
+    """Sequential (max,+) *matrix* fold P = A_{idx[-1]} ⊗ … ⊗ A_{idx[0]}.
+
+    mats: [B, M, N, N] -> [B, N, N].  Independent reference for the
+    segmented/squaring engines' matmul algebra: the product is computed
+    one matmul at a time with no chunking or squaring tricks."""
+    from repro.core.maxplus_form import NEG   # shared -inf sentinel
+
+    b, _, n, _ = mats.shape
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, NEG).astype(mats.dtype)
+
+    def step(p, i):
+        a = mats[:, i]                                       # [B, N, N]
+        p = jnp.max(a[:, :, :, None] + p[:, None, :, :], axis=-2)
+        return p, None
+
+    p0 = jnp.broadcast_to(eye, (b, n, n))
+    p, _ = jax.lax.scan(step, p0, idx.astype(jnp.int32))
+    return p

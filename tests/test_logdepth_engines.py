@@ -1,0 +1,256 @@
+"""Log-depth (max,+) engines (DESIGN.md §2.3): segmented parallel-prefix
+trace folds, periodic matrix squaring, the scalar-prefetch Pallas path,
+and the sweep/channel ctrl_us regression pin."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.interface import InterfaceKind, make_interface
+from repro.core.nand import CellType, chip as nand_chip
+from repro.core import maxplus_form as mf
+from repro.core import trace as tr
+from repro.core.sim import (SSDConfig, channel_bandwidth_mb_s,
+                            page_op_params, sweep_bandwidth_mb_s)
+from repro.core.sim_ref import (simulate_channel_ref,
+                                simulate_trace_matfold_ref,
+                                simulate_trace_ref)
+from repro.kernels.maxplus.ops import (channel_end_time_maxplus,
+                                       trace_end_time_maxplus)
+from repro.kernels.maxplus.ref import maxplus_fold_ref, maxplus_product_ref
+
+
+def _tol(ref_us, n_ops):
+    # <= 1e-3 us/op plus the float32 ulp floor at the end-time magnitude
+    return 1e-3 * n_ops + 1e-5 * ref_us
+
+
+# --- deterministic cross-engine equivalence ---------------------------------
+
+
+@pytest.mark.parametrize("channels,ways", [(1, 1), (1, 16), (2, 4), (4, 8)])
+@pytest.mark.parametrize("policy", ["eager", "batched"])
+def test_prefix_engines_match_oracle(channels, ways, policy):
+    """Segmented-prefix scan engine, segmented (max,+) fold, and the
+    numpy matfold oracle all agree with the event-loop oracle on mixed
+    MLC traffic (parity alternation exercised)."""
+    cfg = SSDConfig(cell=CellType.MLC, channels=channels, ways=ways)
+    table = tr.op_class_table(cfg)
+    trace = tr.mixed_trace(192, channels, ways, read_fraction=0.6,
+                           seed=channels * 7 + ways)
+    ref = simulate_trace_ref(table, trace, policy)
+    tol = _tol(ref, trace.n_ops)
+    for seg in (1, 17, 64, 4096, None):
+        got = tr.simulate(table, trace, policy, engine="prefix",
+                          segment_len=seg)
+        assert abs(got - ref) <= tol, (seg,)
+    seg_mp = float(trace_end_time_maxplus(table, trace, policy=policy,
+                                          strategy="segmented"))
+    assert abs(seg_mp - ref) <= tol
+    mat = simulate_trace_matfold_ref(table, trace, policy, segment_len=48)
+    assert abs(mat - ref) <= tol
+
+
+@pytest.mark.parametrize("ways", [1, 2, 4, 8, 16])
+@pytest.mark.parametrize("policy", ["eager", "batched"])
+def test_squaring_matches_scan_and_oracle(ways, policy):
+    """O(log T) squaring == O(T) scan == python loop, including ragged
+    n_pages (remainder-prefix path) and MLC write asymmetry."""
+    op = page_op_params(make_interface(InterfaceKind.PROPOSED),
+                       nand_chip(CellType.MLC), "write", ways)
+    for n_pages in (1, 31, 96, 512):
+        ref = simulate_channel_ref(op, ways, n_pages,
+                                   batched=(policy == "batched"))
+        want = n_pages * op.data_bytes / ref
+        scan = float(channel_bandwidth_mb_s(op, ways, policy, n_pages))
+        sq = float(channel_bandwidth_mb_s(op, ways, policy, n_pages,
+                                          engine="squaring"))
+        assert scan == pytest.approx(want, rel=1e-3)
+        assert sq == pytest.approx(want, rel=1e-3), n_pages
+        end = channel_end_time_maxplus([op], [ways], n_pages=n_pages,
+                                       policy=policy, strategy="squaring")
+        assert float(end[0]) == pytest.approx(ref, rel=1e-3)
+
+
+def test_scalar_prefetch_kernel_path():
+    """The trace-indexed Pallas path (SMEM scalar prefetch) agrees with
+    the jnp sequential reference on a batched heterogeneous fold."""
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    trace = tr.mixed_trace(160, 2, 4, read_fraction=0.5, seed=5)
+    tables = [tr.op_class_table(SSDConfig(interface=k, cell=c,
+                                          channels=2, ways=4))
+              for k in InterfaceKind for c in CellType]
+    kern = trace_end_time_maxplus(tables, trace)
+    ref = trace_end_time_maxplus(tables, trace, use_kernel=False)
+    np.testing.assert_allclose(kern, ref, rtol=1e-5)
+    for t, k in zip(tables, kern):
+        want = simulate_trace_ref(t, trace)
+        assert float(k) == pytest.approx(want, rel=1e-4)
+
+
+def test_sweep_charges_ctrl_us_like_channel_path():
+    """Regression pin for the silent zero-ctrl bug: the batched sweep and
+    the per-point channel path must charge identical shared-controller
+    occupancy (they were diverging via a zero_k placeholder)."""
+    ops, ways = [], []
+    for kind in InterfaceKind:
+        for cell in CellType:
+            for mode in ("read", "write"):
+                for w in (1, 4, 16):
+                    ops.append(page_op_params(make_interface(kind),
+                                              nand_chip(cell), mode, w))
+                    ways.append(w)
+    args = tuple(
+        jnp.asarray([getattr(o, f) for o in ops], jnp.float32)
+        for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us", "post_hi_us",
+                  "ctrl_us", "data_bytes"))
+    wv = jnp.asarray(ways, jnp.int32)
+    for engine in ("scan", "squaring"):
+        bw = np.asarray(sweep_bandwidth_mb_s(*args, wv, n_pages=128,
+                                             engine=engine))
+        want = np.asarray([
+            float(channel_bandwidth_mb_s(o, w, n_pages=128))
+            for o, w in zip(ops, ways)])
+        np.testing.assert_allclose(bw, want, rtol=1e-3, err_msg=engine)
+
+
+def test_engine_dispatch_is_validated():
+    """Unknown engines and squaring's ways|MAX_WAYS precondition raise
+    instead of silently falling back to the scan engine."""
+    op = page_op_params(make_interface(InterfaceKind.PROPOSED),
+                       nand_chip(CellType.SLC), "read", 4)
+    with pytest.raises(ValueError):
+        channel_bandwidth_mb_s(op, 6, n_pages=64, engine="squaring")
+    with pytest.raises(ValueError):
+        channel_bandwidth_mb_s(op, 4, n_pages=64, engine="sqaring")
+    args = tuple(
+        jnp.asarray([getattr(op, f)], jnp.float32)
+        for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us", "post_hi_us",
+                  "ctrl_us", "data_bytes"))
+    with pytest.raises(ValueError):
+        sweep_bandwidth_mb_s(*args, jnp.asarray([12], jnp.int32),
+                             n_pages=64, engine="squaring")
+    with pytest.raises(ValueError):
+        sweep_bandwidth_mb_s(*args, jnp.asarray([4], jnp.int32),
+                             n_pages=64, engine="prefix")
+    cfg = SSDConfig(cell=CellType.SLC, channels=1, ways=2)
+    table = tr.op_class_table(cfg)
+    trace = tr.steady_trace(16, 1, 2)
+    with pytest.raises(ValueError):
+        tr.simulate(table, trace, engine="squaring")
+    with pytest.raises(ValueError):
+        tr.simulate_batch([table], trace, engine="squaring")
+
+
+# --- algebra invariants -----------------------------------------------------
+
+
+def test_neg_identity_rows_survive_squaring():
+    """NEG (= -inf) identity rows are idempotent under repeated squaring:
+    no drift, no float overflow — unused layout rows stay exact."""
+    eye = jnp.asarray(mf.maxplus_eye(8))
+    p = mf.maxplus_matrix_power(eye, 1 << 20)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(eye))
+
+    # a real op matrix with identity (unused-way) rows: high powers keep
+    # those rows exactly at the identity and everything finite
+    layout = mf.StateLayout(1, 4)
+    a = mf.op_matrix(layout, cmd_us=0.1, pre_us=5.0, slot_us=20.0,
+                     ctrl_us=2.0, arb_us=0.0, post_us=100.0,
+                     channel=0, way=1)
+    p = np.asarray(mf.maxplus_matrix_power(jnp.asarray(a), 4096))
+    assert np.all(np.isfinite(p))
+    unused_chip = layout.chip(0, 3)       # way 3 never touched by the op
+    row = p[unused_chip]
+    assert row[unused_chip] == 0.0
+    assert np.all(row[np.arange(layout.n_state) != unused_chip] <= mf.NEG)
+
+
+def test_matrix_power_matches_sequential_product():
+    rng = np.random.default_rng(0)
+    mats = (rng.random((2, 3, 6, 6)).astype(np.float32) * 5)
+    for q in (0, 1, 2, 7, 33):
+        idx = jnp.tile(jnp.arange(3, dtype=jnp.int32), q)[: 3 * q]
+        want = np.asarray(maxplus_product_ref(jnp.asarray(mats), idx))
+        # periodic_fold_squaring over q periods == sequential product
+        got_state = np.asarray(mf.periodic_fold_squaring(
+            jnp.asarray(mats), jnp.zeros((2, 6), jnp.float32), 3 * q))
+        want_state = np.max(want + np.zeros((2, 1, 6)), axis=-1)
+        np.testing.assert_allclose(got_state, want_state, rtol=1e-4,
+                                   atol=1e-3)
+
+
+# --- property suite (hypothesis when available, deterministic grid
+# fallback otherwise — the deterministic tests above always run) -------------
+
+
+def _check_segmented_property(channels, ways, read_fraction, batched,
+                              segment_len, seed):
+    """Random heterogeneous traces: the segmented-prefix engines equal
+    the scan engine and the python oracle to 1e-3 (per-op) tolerance."""
+    policy = "batched" if batched else "eager"
+    cfg = SSDConfig(cell=CellType.MLC, channels=channels, ways=ways)
+    table = tr.op_class_table(cfg)
+    trace = tr.mixed_trace(128, channels, ways, read_fraction, seed=seed)
+    ref = simulate_trace_ref(table, trace, policy)
+    tol = _tol(ref, trace.n_ops)
+    px = tr.simulate(table, trace, policy, engine="prefix",
+                     segment_len=segment_len)
+    assert abs(px - ref) <= tol
+    mp = float(trace_end_time_maxplus(
+        table, trace, policy=policy, strategy="segmented",
+        segment_len=segment_len or 64))
+    assert abs(mp - ref) <= tol
+
+
+def _check_squaring_property(ways, batched, n_pages, kind, cell, mode):
+    """Random homogeneous design points: squaring == python loop to 1e-3
+    rtol at arbitrary (ragged) trace lengths."""
+    op = page_op_params(make_interface(kind), nand_chip(cell), mode, ways)
+    ref = simulate_channel_ref(op, ways, n_pages, batched=batched)
+    policy = "batched" if batched else "eager"
+    sq = float(channel_bandwidth_mb_s(op, ways, policy, n_pages,
+                                      engine="squaring"))
+    assert sq == pytest.approx(n_pages * op.data_bytes / ref, rel=1e-3)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    @pytest.mark.parametrize("channels,ways", [(1, 5), (2, 16), (3, 3),
+                                               (4, 9)])
+    @pytest.mark.parametrize("batched", [False, True])
+    def test_property_segmented_prefix_matches_oracle(channels, ways,
+                                                      batched):
+        for seg in (1, 64, None):
+            _check_segmented_property(channels, ways, 0.55, batched, seg,
+                                      seed=channels * 131 + ways)
+
+    @pytest.mark.parametrize("ways", [1, 2, 4, 8, 16])
+    @pytest.mark.parametrize("batched", [False, True])
+    def test_property_squaring_matches_oracle(ways, batched):
+        for n_pages in (1, 53, 200):
+            _check_squaring_property(ways, batched, n_pages,
+                                     InterfaceKind.PROPOSED, CellType.MLC,
+                                     "write")
+else:
+    @settings(deadline=None, max_examples=20)
+    @given(channels=st.integers(1, 4), ways=st.integers(1, 16),
+           read_fraction=st.floats(0.0, 1.0), batched=st.booleans(),
+           segment_len=st.sampled_from([1, 8, 64, 512, None]),
+           seed=st.integers(0, 1 << 16))
+    def test_property_segmented_prefix_matches_oracle(
+            channels, ways, read_fraction, batched, segment_len, seed):
+        _check_segmented_property(channels, ways, read_fraction, batched,
+                                  segment_len, seed)
+
+    @settings(deadline=None, max_examples=20)
+    @given(ways=st.sampled_from([1, 2, 4, 8, 16]), batched=st.booleans(),
+           n_pages=st.integers(1, 300),
+           kind=st.sampled_from(list(InterfaceKind)),
+           cell=st.sampled_from(list(CellType)),
+           mode=st.sampled_from(["read", "write"]))
+    def test_property_squaring_matches_oracle(ways, batched, n_pages, kind,
+                                              cell, mode):
+        _check_squaring_property(ways, batched, n_pages, kind, cell, mode)

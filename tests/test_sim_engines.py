@@ -91,14 +91,11 @@ def test_vmapped_sweep_consistency():
     import jax.numpy as jnp
     ops = [page_op_params(make_interface(k), chip(c), m, 4)
            for k in InterfaceKind for c in CellType for m in ("read", "write")]
-    bw = sweep_bandwidth_mb_s(
-        jnp.array([o.cmd_us for o in ops], jnp.float32),
-        jnp.array([o.pre_us for o in ops], jnp.float32),
-        jnp.array([o.slot_us for o in ops], jnp.float32),
-        jnp.array([o.post_lo_us for o in ops], jnp.float32),
-        jnp.array([o.post_hi_us for o in ops], jnp.float32),
-        jnp.array([o.data_bytes for o in ops], jnp.float32),
-        jnp.array([4] * len(ops), jnp.int32))
+    args = tuple(
+        jnp.array([getattr(o, f) for o in ops], jnp.float32)
+        for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us", "post_hi_us",
+                  "ctrl_us", "data_bytes"))
+    bw = sweep_bandwidth_mb_s(*args, jnp.array([4] * len(ops), jnp.int32))
     for i, op in enumerate(ops):
         assert float(bw[i]) == pytest.approx(
             bandwidth_ref_mb_s(op, 4, 512), rel=1e-4)
