@@ -8,9 +8,11 @@ per-section wall time, and the environment — so the perf trajectory of
 the engines is tracked across PRs by diffing the JSON files.
 
 ``--smoke`` shrinks trace lengths for CI: it still executes every
-engine and **fails on engine disagreement** (the ``assert agree < 1e-3``
-paths inside ``sweep_bench``) and on a log-depth speedup < 1 in a full
-(non-smoke) run.
+engine and **fails on engine disagreement** — on end times (the
+``assert agree < 1e-3`` paths inside ``sweep_bench``) and on the
+phase-resolved Table 5 / mixed-trace energy totals (the matching
+asserts in ``tables.run_table5`` and ``sweep_bench.run_mixed``) — and
+on a log-depth speedup < 1 in a full (non-smoke) run.
 """
 
 from __future__ import annotations
@@ -90,7 +92,10 @@ def main() -> None:
         _section("freq", freq.run),
         _section("table3", tables.run_table3),
         _section("table4", tables.run_table4),
-        _section("table5", tables.run_table5),
+        # trace-level phase-resolved energy; asserts < 1e-3 cross-engine
+        # agreement on every cell (the energy half of the smoke gate)
+        _section("table5", lambda: tables.run_table5(small=args.smoke)),
+        _section("table5_closed_form", tables.run_table5_closed_form),
         _section("sweep", lambda: sweep_bench.run(small=args.smoke)),
     ]
     _check_speedups(sections, args.smoke)

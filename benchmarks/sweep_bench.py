@@ -20,11 +20,15 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.energy import breakdown_from_sums
 from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import CellType, chip
 from repro.core.sim import SSDConfig, page_op_params, sweep_bandwidth_mb_s
-from repro.core.sim_ref import bandwidth_ref_mb_s, trace_bandwidth_ref_mb_s
-from repro.core.trace import mixed_trace, op_class_table, trace_bandwidth_mb_s
+from repro.core.sim_ref import (bandwidth_ref_mb_s,
+                                simulate_trace_energy_ref,
+                                trace_bandwidth_ref_mb_s)
+from repro.core.trace import (mixed_trace, op_class_table, simulate_energy,
+                              trace_bandwidth_mb_s)
 from repro.kernels.maxplus.ops import (bandwidth_maxplus_mb_s,
                                        trace_bandwidth_maxplus_mb_s)
 
@@ -88,9 +92,12 @@ def run(small: bool = False) -> list[dict]:
 def run_mixed(small: bool = False) -> list[dict]:
     """Mixed-workload design-point sweep (beyond the paper's §5.3 grid):
     read fraction × (channels, ways), all three engines on one trace per
-    geometry, batching interfaces×cells through the (max,+) kernel."""
+    geometry, batching interfaces×cells through the (max,+) kernel.
+    Each point also carries its phase-resolved controller energy
+    (DESIGN.md §2.4), gated on cross-engine agreement like the
+    bandwidths."""
     n_pages = 64 if small else N_PAGES
-    rows, agree = [], 0.0
+    rows, agree, agree_e = [], 0.0, 0.0
     n_points = 0
     t_scan = t_mp = t_ref = 0.0
     for channels, ways in ((1, 8), (2, 4), (4, 8)):
@@ -115,16 +122,37 @@ def run_mixed(small: bool = False) -> list[dict]:
                         float(np.max(np.abs(scan_bw - ref_bw) / ref_bw)),
                         float(np.max(np.abs(mp_bw - ref_bw) / ref_bw)))
             n_points += len(tables)
-            rows.append({
-                "name": (f"mixed/{channels}ch{ways}way/"
-                         f"read{int(read_frac * 100)}"
-                         "/proposed_mlc_mb_s"),
-                "value": round(float(scan_bw[-1]), 1),
-                "paper": "-"})
+            # phase-resolved energy of the PROPOSED/MLC point, all three
+            # engines vs the event-loop oracle (heterogeneous-trace half
+            # of the energy smoke gate; Table 5 covers the steady half)
+            kind = InterfaceKind.PROPOSED
+            bds = {eng: simulate_energy(tables[-1], tr, kind, engine=eng)
+                   for eng in ("scan", "prefix", "pallas")}
+            end_e, sums_e = simulate_trace_energy_ref(tables[-1], tr, kind)
+            ref_bd = breakdown_from_sums(sums_e, end_e,
+                                         tr.total_bytes(tables[-1]), kind,
+                                         channels=channels)
+            agree_e = max(agree_e, *(
+                abs(bd.controller_j - ref_bd.controller_j)
+                / ref_bd.controller_j for bd in bds.values()))
+            name = (f"mixed/{channels}ch{ways}way/"
+                    f"read{int(read_frac * 100)}")
+            rows.append({"name": f"{name}/proposed_mlc_mb_s",
+                         "value": round(float(scan_bw[-1]), 1),
+                         "paper": "-"})
+            rows.append({"name": f"{name}/proposed_mlc_nj_per_byte",
+                         "value": round(bds["scan"].nj_per_byte, 3),
+                         "paper": "-",
+                         "idle_frac": round(bds["scan"].idle_j
+                                            / bds["scan"].controller_j, 4)})
     assert agree < 1e-3, f"engines disagree by {agree:.2e} on mixed traces"
+    assert agree_e < 1e-3, \
+        f"energy engines disagree by {agree_e:.2e} on mixed traces"
     rows += [
         {"name": "mixed/engine_max_rel_disagreement", "value": f"{agree:.1e}",
          "paper": "<1e-3"},
+        {"name": "mixed/energy_engine_max_rel_disagreement",
+         "value": f"{agree_e:.1e}", "paper": "<1e-3"},
         {"name": "mixed/scan_us_per_point",
          "value": round(t_scan / n_points * 1e6, 1), "paper": "-"},
         {"name": "mixed/maxplus_interpret_us_per_point",

@@ -32,12 +32,20 @@ def main():
         print(f"  {channels}ch x {ways:2d}way : " + "  ".join(row) + " MB/s")
 
     print("\n== mixed-workload design points (beyond paper §5.3: 70/30 r/w) ==")
+    print("   (bandwidth + phase-resolved controller energy, DESIGN.md §2.4)")
+    bd = None
     for channels, ways in ((1, 16), (2, 8), (4, 4)):
         tr = workload_trace("mixed", SSDConfig(channels=channels, ways=ways),
                             read_fraction=0.7, seed=7)
         ests = compare_interfaces_trace(tr, cell=CellType.MLC)
         row = "  ".join(f"{k}={e.bandwidth_mb_s:6.1f}" for k, e in ests.items())
+        nj = "  ".join(f"{k}={e.energy.nj_per_byte:5.2f}"
+                       for k, e in ests.items())
         print(f"  {channels}ch x {ways:2d}way : {row} MB/s")
+        print(f"  {'':14s}  {nj} nJ/B")
+        if (channels, ways) == (2, 8):
+            bd = ests["proposed"].energy
+    print(f"  phase split (proposed, 2ch x 8way): {bd.describe()}")
 
     print("\n== log-depth engines: 2048-op mixed sweep (DESIGN.md §2.3) ==")
     print("   (same recurrence, O(segment+log T) depth instead of O(T))")
@@ -80,8 +88,12 @@ def main():
         lambda cfg: datapipe_trace(ten_gib, cfg, hedge_fraction=0.05),
         budget_s=60.0, total_bytes=ten_gib)
     b_plan = plan_geometry(ten_gib, budget_s=60.0, mode="read")
+    e_plan = plan_geometry_for_trace(
+        lambda cfg: datapipe_trace(ten_gib, cfg, hedge_fraction=0.05),
+        budget_s=60.0, total_bytes=ten_gib, objective="energy")
     print("  trace (5% hedged):", t_plan.describe() if t_plan else "none")
     print("  bytes (pure read):", b_plan.describe() if b_plan else "none")
+    print("  min-energy fit   :", e_plan.describe() if e_plan else "none")
     for name, est in compare_interfaces(ten_gib, "read").items():
         print(f"  {name:10s}: {est.seconds:6.1f} s  {est.energy_joules*1e3:7.1f} mJ")
 

@@ -383,6 +383,33 @@ def structured_segment_products(
     return jnp.concatenate([bus, chip, ctl[:, None, :], rs], axis=1)
 
 
+def structured_segment_energy(
+    e_op_uj: jax.Array,      # [K, 2, P] per-op phase energies (parity axis)
+    cls: jax.Array,          # [T] int32
+    parity: jax.Array,       # [T] int32
+    *,
+    segment_len: int,
+) -> jax.Array:
+    """[S, P] per-segment phase-energy sums (uJ) of the trace's
+    S = ceil(T/L) segments — the energy twin of
+    ``structured_segment_products`` (DESIGN.md §2.4).
+
+    Energy is (+, +)-linear in the ops, so where the end time needs a
+    (max,+) matrix product per segment, the phase accumulator needs only
+    a segment *sum* over the same chunking: gather each op's [P] phase
+    vector (parity-resolved for the MLC array phase), pad the ragged
+    tail with zeros (a true no-op for +, unlike the end-time fold where
+    padding must scatter-drop), and reduce per segment."""
+    t_steps = cls.shape[0]
+    seg = max(1, min(segment_len, t_steps))
+    n_seg = -(-t_steps // seg)
+    pad = n_seg * seg - t_steps
+    e = e_op_uj[jnp.asarray(cls, jnp.int32),
+                jnp.asarray(parity, jnp.int32) % 2]        # [T, P]
+    e = jnp.pad(e, ((0, pad), (0, 0)))
+    return jnp.sum(e.reshape(n_seg, seg, e.shape[-1]), axis=1)
+
+
 def periodic_fold_squaring(period_mats: jax.Array, s0: jax.Array,
                            n_steps: int) -> jax.Array:
     """Homogeneous stream: fold one period, then square to ``n_steps``.

@@ -32,6 +32,11 @@ all channels jointly.  Interchangeable engines evaluate the recurrence
   segmented and squaring strategies);
 * ``repro.core.sim_ref`` — plain-Python trace oracle for tests.
 
+Every engine can also carry the phase-resolved energy accumulator of
+``repro.core.energy`` alongside the end-time recurrence
+(``trace_end_time_energy`` / ``trace_end_time_prefix_energy`` here, the
+kernel fold in ``repro.kernels.maxplus``; DESIGN.md §2.4).
+
 Model structure (C channels, W ways each, round-robin page striping)
 --------------------------------------------------------------------
 READ  page:  pre = t_CMD + t_R   (off-bus: command latch + array fetch)
@@ -159,6 +164,7 @@ class PageOpParams:
     post_hi_us: float    # odd-numbered page on a chip (MLC upper page)
     data_bytes: int      # user payload per op
     ctrl_us: float = 0.0  # FTL/firmware share of slot_us (shared controller)
+    io_us: float = 0.0   # bus data-burst share of slot_us (energy phase split)
 
     def post_mean_us(self) -> float:
         return 0.5 * (self.post_lo_us + self.post_hi_us)
@@ -167,33 +173,75 @@ class PageOpParams:
 def page_op_params(
     iface: InterfaceParams, nand: NandChipParams, mode: Mode, ways: int
 ) -> PageOpParams:
+    io_us = iface.data_us(nand.page_total_bytes)
     if mode == "read":
         return PageOpParams(
             cmd_us=iface.cmd_us,
             pre_us=nand.t_r_us,
-            slot_us=iface.data_us(nand.page_total_bytes) + iface.ecc_us(nand.cell),
+            slot_us=io_us + iface.ecc_us(nand.cell),
             post_lo_us=0.0,
             post_hi_us=0.0,
             data_bytes=nand.page_data_bytes,
             ctrl_us=iface.ecc_fixed_us(nand.cell),
+            io_us=io_us,
         )
     poll_us = (ways * nand.t_poll_cycles * iface.cycle_ns * 1e-3
                + WRITE_POLL_FIXED_US)
     return PageOpParams(
         cmd_us=iface.cmd_us,
         pre_us=0.0,
-        slot_us=(iface.data_us(nand.page_total_bytes)
-                 + iface.ecc_us(nand.cell) + poll_us),
+        slot_us=io_us + iface.ecc_us(nand.cell) + poll_us,
         post_lo_us=nand.t_prog_lo_us,
         post_hi_us=nand.t_prog_hi_us,
         data_bytes=nand.page_data_bytes,
         ctrl_us=iface.ecc_fixed_us(nand.cell) + poll_us,
+        io_us=io_us,
     )
 
 
 # ---------------------------------------------------------------------------
 # lax.scan trace engine
 # ---------------------------------------------------------------------------
+
+
+def _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                   ctrl_us, arb_us, batched):
+    """Single per-op state update — the one recurrence every scan-engine
+    entry point (plain and energy-carrying) folds."""
+
+    def step(state, op):
+        bus_free, chip_free, ctrl_free, round_start = state
+        k, c, w, par = op
+        cmd = cmd_us[k]
+        round_start = jnp.where(
+            w == 0, round_start.at[c].set(bus_free[c]), round_start)
+        if batched:
+            ready = round_start[c] + (w + 1).astype(jnp.float32) * cmd + pre_us[k]
+        else:
+            ready = chip_free[c, w] + cmd + pre_us[k]
+        start = (jnp.maximum(jnp.maximum(bus_free[c], ready), ctrl_free)
+                 + arb_us[k])
+        new_bus = start + slot_us[k]
+        post = jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k])
+        bus_free = bus_free.at[c].set(new_bus)
+        chip_free = chip_free.at[c, w].set(new_bus + post)
+        return (bus_free, chip_free, start + ctrl_us[k], round_start)
+
+    return step
+
+
+def _trace_scan_init(n_channels):
+    return (
+        jnp.zeros((n_channels,), jnp.float32),
+        jnp.zeros((n_channels, MAX_WAYS), jnp.float32),
+        jnp.asarray(0.0, jnp.float32),
+        jnp.zeros((n_channels,), jnp.float32),
+    )
+
+
+def _trace_ops(cls, channel, way, parity):
+    return (cls.astype(jnp.int32), channel.astype(jnp.int32),
+            way.astype(jnp.int32), parity.astype(jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
@@ -213,35 +261,47 @@ def trace_end_time(
     batched: bool,
 ) -> jax.Array:
     """Completion time (us) of a heterogeneous op trace on C channels."""
-
-    def step(state, op):
-        bus_free, chip_free, ctrl_free, round_start = state
-        k, c, w, par = op
-        cmd = cmd_us[k]
-        round_start = jnp.where(
-            w == 0, round_start.at[c].set(bus_free[c]), round_start)
-        if batched:
-            ready = round_start[c] + (w + 1).astype(jnp.float32) * cmd + pre_us[k]
-        else:
-            ready = chip_free[c, w] + cmd + pre_us[k]
-        start = (jnp.maximum(jnp.maximum(bus_free[c], ready), ctrl_free)
-                 + arb_us[k])
-        new_bus = start + slot_us[k]
-        post = jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k])
-        bus_free = bus_free.at[c].set(new_bus)
-        chip_free = chip_free.at[c, w].set(new_bus + post)
-        return (bus_free, chip_free, start + ctrl_us[k], round_start), None
-
-    init = (
-        jnp.zeros((n_channels,), jnp.float32),
-        jnp.zeros((n_channels, MAX_WAYS), jnp.float32),
-        jnp.asarray(0.0, jnp.float32),
-        jnp.zeros((n_channels,), jnp.float32),
-    )
-    ops = (cls.astype(jnp.int32), channel.astype(jnp.int32),
-           way.astype(jnp.int32), parity.astype(jnp.int32))
-    (bus_free, chip_free, _, _), _ = jax.lax.scan(step, init, ops)
+    upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                         ctrl_us, arb_us, batched)
+    (bus_free, chip_free, _, _), _ = jax.lax.scan(
+        lambda s, op: (upd(s, op), None), _trace_scan_init(n_channels),
+        _trace_ops(cls, channel, way, parity))
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_end_time_energy(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    e_op_uj: jax.Array,      # [K, 2, P] per-op phase energies (parity axis)
+    cls: jax.Array,          # [T]
+    channel: jax.Array,      # [T]
+    way: jax.Array,          # [T]
+    parity: jax.Array,       # [T]
+    n_channels: int,
+    batched: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """(end_us, [P] phase-energy sums in uJ): the same recurrence as
+    ``trace_end_time`` carrying a phase-energy accumulator per op
+    (DESIGN.md §2.4) — one fused scan, no second pass over the trace."""
+    upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                         ctrl_us, arb_us, batched)
+
+    def step(carry, op):
+        state, acc = carry
+        k, c, w, par = op
+        return (upd(state, op), acc + e_op_uj[k, par % 2]), None
+
+    init = (_trace_scan_init(n_channels),
+            jnp.zeros((e_op_uj.shape[-1],), jnp.float32))
+    ((bus_free, chip_free, _, _), acc), _ = jax.lax.scan(
+        step, init, _trace_ops(cls, channel, way, parity))
+    return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), acc
 
 
 # ---------------------------------------------------------------------------
@@ -317,6 +377,44 @@ def trace_end_time_prefix(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
         cls, channel, way, parity, n_channels, n_ways, batched,
         segment_len, combine)
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "n_ways",
+                                             "batched", "segment_len",
+                                             "combine"))
+def trace_end_time_prefix_energy(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    e_op_uj: jax.Array,      # [K, 2, P] per-op phase energies
+    cls: jax.Array,          # [T]
+    channel: jax.Array,      # [T]
+    way: jax.Array,          # [T]
+    parity: jax.Array,       # [T]
+    n_channels: int,
+    n_ways: int,
+    batched: bool,
+    segment_len: int | None = 64,
+    combine: str = "chain",
+) -> tuple[jax.Array, jax.Array]:
+    """(end_us, [P] phase-energy sums in uJ) via the segmented prefix
+    engine: energy is (+, +)-linear in the ops, so it rides the same
+    segment chunking as ``structured_segment_products`` as a plain
+    per-segment sum combined across segments (DESIGN.md §2.4)."""
+    from repro.core import maxplus_form as mf  # deferred: mf imports us
+
+    end = _trace_end_time_prefix_impl(
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
+        cls, channel, way, parity, n_channels, n_ways, batched,
+        segment_len, combine)
+    seg = mf.structured_segment_energy(
+        e_op_uj, cls, parity,
+        segment_len=segment_len if segment_len is not None else 1)
+    return end, jnp.sum(seg, axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "n_ways",

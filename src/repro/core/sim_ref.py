@@ -23,8 +23,9 @@ import numpy as np
 from repro.core.sim import MAX_WAYS, PageOpParams
 
 
-def simulate_trace_ref(table, trace, policy: str = "eager") -> float:
-    """Completion time (us) of an OpTrace on C channels (trace oracle)."""
+def _trace_event_loop(table, trace, policy, per_op=None) -> float:
+    """The one explicit event loop behind both trace oracles.  Calls
+    ``per_op(k, parity)`` after each op's state update when given."""
     batched = policy == "batched"
     c_count, w_count = trace.channels, trace.ways
     bus_free = [0.0] * c_count
@@ -47,11 +48,36 @@ def simulate_trace_ref(table, trace, policy: str = "eager") -> float:
         ctrl_free = start + table.ctrl_us[k]
         post = table.post_lo_us[k] if par % 2 == 0 else table.post_hi_us[k]
         chip_free[c][w] = bus_free[c] + post
+        if per_op is not None:
+            per_op(k, par)
     return float(max(max(bus_free), max(max(row) for row in chip_free)))
+
+
+def simulate_trace_ref(table, trace, policy: str = "eager") -> float:
+    """Completion time (us) of an OpTrace on C channels (trace oracle)."""
+    return _trace_event_loop(table, trace, policy)
 
 
 def trace_bandwidth_ref_mb_s(table, trace, policy: str = "eager") -> float:
     return trace.total_bytes(table) / simulate_trace_ref(table, trace, policy)
+
+
+def simulate_trace_energy_ref(table, trace, kind,
+                              policy: str = "eager"
+                              ) -> tuple[float, np.ndarray]:
+    """(end_us, [N_OP_PHASES] phase-energy sums in uJ): the event-loop
+    oracle accumulating each op's phase energies alongside the recurrence
+    (DESIGN.md §2.4).  Pure python floats, no vectorisation."""
+    from repro.core.energy import N_OP_PHASES, op_phase_energy_uj
+
+    e_op = np.asarray(op_phase_energy_uj(table, kind), np.float64)
+    acc = np.zeros((N_OP_PHASES,), np.float64)
+
+    def per_op(k, par):
+        acc[:] += e_op[k, par % 2]
+
+    end = _trace_event_loop(table, trace, policy, per_op)
+    return end, acc
 
 
 def maxplus_matmul_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:

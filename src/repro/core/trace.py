@@ -21,13 +21,14 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import make_interface
+from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import chip as nand_chip
 from repro.core.sim import (MAX_CHANNELS, MAX_WAYS, Engine, Policy,
                             SSDConfig, controller_arb_us, page_op_params,
                             trace_end_time, trace_end_time_batch,
-                            trace_end_time_prefix,
-                            trace_end_time_prefix_batch)
+                            trace_end_time_energy, trace_end_time_prefix,
+                            trace_end_time_prefix_batch,
+                            trace_end_time_prefix_energy)
 
 READ, WRITE = 0, 1
 
@@ -44,6 +45,8 @@ class OpClassTable:
     ctrl_us: np.ndarray       # shared-controller (FTL/firmware) share of slot
     arb_us: np.ndarray        # per-op firmware arbitration charge
     data_bytes: np.ndarray
+    io_us: np.ndarray | None = None  # bus data-burst share of slot
+                                     # (phase-resolved energy accounting)
     labels: tuple[str, ...] = ()
 
     @property
@@ -79,7 +82,12 @@ class OpTrace:
         return int(table.data_bytes[self.cls[self.payload_mask()]].sum())
 
     def read_fraction(self) -> float:
-        return float(np.mean(self.cls == READ))
+        """Fraction of *payload* ops that are reads — hedged duplicates
+        are excluded, matching the byte accounting of ``total_bytes``."""
+        mask = self.payload_mask()
+        if not mask.any():
+            return 0.0
+        return float(np.mean(self.cls[mask] == READ))
 
     def describe(self) -> str:
         return (f"{self.n_ops} ops, {self.channels}ch x {self.ways}way, "
@@ -103,6 +111,7 @@ def op_class_table(cfg: SSDConfig) -> OpClassTable:
             [controller_arb_us(o.ctrl_us, cfg.channels) for o in ops],
             np.float32),
         data_bytes=np.array([o.data_bytes for o in ops], np.int64),
+        io_us=np.array([o.io_us for o in ops], np.float32),
         labels=("read", "write"),
     )
 
@@ -317,12 +326,66 @@ def simulate_batch(tables: list[OpClassTable], trace: OpTrace,
     return np.asarray(end)
 
 
+def simulate_energy(table: OpClassTable, trace: OpTrace,
+                    kind: InterfaceKind | str, policy: Policy = "eager",
+                    engine: str = "scan", segment_len: int | None = 64):
+    """Phase-resolved ``EnergyBreakdown`` of ``trace`` under ``table``
+    (DESIGN.md §2.4), computed alongside the end-time recurrence.
+
+    ``engine`` selects where the per-op accumulator rides: the
+    ``lax.scan`` carry (``"scan"``), the segment sums of the parallel-
+    prefix fold (``"prefix"``), or the Pallas ``E[idx[t]]`` gather
+    (``"pallas"``).  ``segment_len`` is the prefix engine's chunk size;
+    the sequential scan/pallas folds have no segment notion and ignore
+    it.  All engines agree to < 1e-3 (CI-gated)."""
+    from repro.core.energy import breakdown_from_sums, op_phase_energy_uj
+
+    if trace.n_ops == 0:
+        raise ValueError("empty trace: no ops to simulate")
+    kind = InterfaceKind(kind)
+    if engine == "pallas":
+        from repro.kernels.maxplus.ops import trace_energy_maxplus
+        end, sums = trace_energy_maxplus(table, trace, kind, policy=policy)
+    elif engine in ("scan", "prefix"):
+        e_op = jnp.asarray(op_phase_energy_uj(table, kind))
+        args = (
+            jnp.asarray(table.cmd_us), jnp.asarray(table.pre_us),
+            jnp.asarray(table.slot_us), jnp.asarray(table.post_lo_us),
+            jnp.asarray(table.post_hi_us), jnp.asarray(table.ctrl_us),
+            jnp.asarray(table.arb_us), e_op,
+            jnp.asarray(trace.cls), jnp.asarray(trace.channel),
+            jnp.asarray(trace.way), jnp.asarray(trace.parity),
+        )
+        if engine == "scan":
+            end, sums = trace_end_time_energy(
+                *args, n_channels=trace.channels,
+                batched=(policy == "batched"))
+        else:
+            end, sums = trace_end_time_prefix_energy(
+                *args, n_channels=trace.channels, n_ways=trace.ways,
+                batched=(policy == "batched"), segment_len=segment_len)
+    else:
+        raise ValueError(f"unknown energy engine {engine!r} "
+                         "(one of 'scan', 'prefix', 'pallas')")
+    return breakdown_from_sums(
+        np.asarray(sums, np.float64), end_us=float(end),
+        payload_bytes=trace.total_bytes(table), kind=kind,
+        channels=trace.channels)
+
+
 def trace_bandwidth_mb_s(table: OpClassTable, trace: OpTrace,
                          policy: Policy = "eager",
                          engine: Engine = "scan") -> float:
-    """Aggregate user-payload bandwidth of the trace, MB/s."""
-    return trace.total_bytes(table) / simulate(table, trace, policy,
-                                               engine=engine)
+    """Aggregate user-payload bandwidth of the trace, MB/s.
+
+    Rejects empty or payload-free traces (nothing meaningful to price;
+    silently returning 0 or dividing by zero hid real bugs upstream)."""
+    if trace.n_ops == 0:
+        raise ValueError("empty trace: no ops to simulate")
+    nbytes = trace.total_bytes(table)
+    if nbytes <= 0:
+        raise ValueError("trace delivers no payload bytes")
+    return nbytes / simulate(table, trace, policy, engine=engine)
 
 
 _WORKLOADS = {

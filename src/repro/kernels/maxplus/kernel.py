@@ -60,6 +60,40 @@ def _kernel_indexed(idx_ref, mats_ref, s0_ref, out_ref, *, t_steps: int):
         s0_ref[...])
 
 
+def _energy_step(energy, i, acc):
+    e = jax.lax.dynamic_index_in_dim(energy, i, 0, keepdims=False)
+    return acc + e                # [P, BL] phase accumulator, plain (+)
+
+
+def _kernel_periodic_energy(mats_ref, e_ref, s0_ref, out_ref, acc_ref, *,
+                            t_steps: int, period: int):
+    """Periodic fold carrying the phase-energy accumulator per step."""
+    mats = mats_ref[...]          # [P, N, N, BL]
+    energy = e_ref[...]           # [P, NP, BL]
+    s, acc = jax.lax.fori_loop(
+        0, t_steps,
+        lambda t, c: (_maxplus_step(mats, t % period, c[0]),
+                      _energy_step(energy, t % period, c[1])),
+        (s0_ref[...], jnp.zeros(acc_ref.shape, acc_ref.dtype)))
+    out_ref[...] = s
+    acc_ref[...] = acc
+
+
+def _kernel_indexed_energy(idx_ref, mats_ref, e_ref, s0_ref, out_ref,
+                           acc_ref, *, t_steps: int):
+    """Trace-indexed fold accumulating ``E[idx[t]]`` next to the (max,+)
+    matvec — both gathers share the same SMEM scalar index."""
+    mats = mats_ref[...]          # [M, N, N, BL]
+    energy = e_ref[...]           # [M, NP, BL]
+    s, acc = jax.lax.fori_loop(
+        0, t_steps,
+        lambda t, c: (_maxplus_step(mats, idx_ref[t], c[0]),
+                      _energy_step(energy, idx_ref[t], c[1])),
+        (s0_ref[...], jnp.zeros(acc_ref.shape, acc_ref.dtype)))
+    out_ref[...] = s
+    acc_ref[...] = acc
+
+
 @functools.partial(jax.jit, static_argnames=("t_steps", "block_lanes", "interpret"))
 def maxplus_fold_kernel(
     mats: jax.Array,     # [B, M, N, N] float32 matrix dictionary
@@ -67,46 +101,74 @@ def maxplus_fold_kernel(
     *,
     t_steps: int,
     idx: jax.Array | None = None,   # [t_steps] int32 per-op matrix index
+    energy: jax.Array | None = None,  # [B, M, P] per-op phase energies (uJ)
     block_lanes: int = 128,
     interpret: bool = True,
-) -> jax.Array:
+) -> jax.Array | tuple[jax.Array, jax.Array]:
+    """Returns the folded state [B, N]; with ``energy`` given, also the
+    [B, P] phase-energy accumulator ``sum_t energy[idx[t]]`` computed in
+    the same ``fori_loop`` (the per-step matrix gather index doubles as
+    the energy gather index — DESIGN.md §2.4)."""
     b, m, n, _ = mats.shape
     bl = min(block_lanes, b)
     pad = (-b) % bl
     if pad:
         mats = jnp.pad(mats, ((0, pad), (0, 0), (0, 0), (0, 0)))
         s0 = jnp.pad(s0, ((0, pad), (0, 0)))
+        if energy is not None:
+            energy = jnp.pad(energy, ((0, pad), (0, 0), (0, 0)))
     bp = mats.shape[0]
     mats_l = jnp.moveaxis(mats, 0, -1)   # [M, N, N, B]
     s0_l = jnp.moveaxis(s0, 0, -1)       # [N, B]
+    e_l = None if energy is None else jnp.moveaxis(energy, 0, -1)  # [M, P, B]
+    np_ = None if energy is None else e_l.shape[1]
 
-    out_shape = jax.ShapeDtypeStruct((n, bp), jnp.float32)
+    # one spec/operand list per path; the energy operand (and its [P, BL]
+    # accumulator output) slot in conditionally so each path is a single
+    # pallas_call
     if idx is None:                      # periodic: no index operand
-        kernel = functools.partial(_kernel_periodic, t_steps=t_steps,
-                                   period=m)
-        out = pl.pallas_call(
-            kernel,
-            grid=(bp // bl,),
-            in_specs=[pl.BlockSpec((m, n, n, bl), lambda i: (0, 0, 0, i)),
-                      pl.BlockSpec((n, bl), lambda i: (0, i))],
-            out_specs=pl.BlockSpec((n, bl), lambda i: (0, i)),
-            out_shape=out_shape,
-            interpret=interpret,
-        )(mats_l, s0_l)
+        def spec(block):
+            return pl.BlockSpec(block, lambda i: (0,) * (len(block) - 1) + (i,))
+        scalar_args = ()
     else:                                # trace-indexed: idx via SMEM
-        kernel = functools.partial(_kernel_indexed, t_steps=t_steps)
+        def spec(block):
+            return pl.BlockSpec(
+                block, lambda i, idx_ref: (0,) * (len(block) - 1) + (i,))
+        scalar_args = (idx.astype(jnp.int32),)
+
+    in_specs = [spec((m, n, n, bl))]
+    operands = [mats_l]
+    if energy is not None:
+        in_specs.append(spec((m, np_, bl)))
+        operands.append(e_l)
+    in_specs.append(spec((n, bl)))
+    operands.append(s0_l)
+    out_specs = spec((n, bl))
+    out_shape = jax.ShapeDtypeStruct((n, bp), jnp.float32)
+    if energy is not None:
+        out_specs = [out_specs, spec((np_, bl))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((np_, bp), jnp.float32)]
+
+    body = {(True, False): _kernel_periodic,
+            (True, True): _kernel_periodic_energy,
+            (False, False): _kernel_indexed,
+            (False, True): _kernel_indexed_energy}[
+                (idx is None, energy is not None)]
+    kw = {"period": m} if idx is None else {}
+    kernel = functools.partial(body, t_steps=t_steps, **kw)
+    if idx is None:
+        call = pl.pallas_call(kernel, grid=(bp // bl,), in_specs=in_specs,
+                              out_specs=out_specs, out_shape=out_shape,
+                              interpret=interpret)
+    else:
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(bp // bl,),
-            in_specs=[pl.BlockSpec((m, n, n, bl),
-                                   lambda i, idx_ref: (0, 0, 0, i)),
-                      pl.BlockSpec((n, bl), lambda i, idx_ref: (0, i))],
-            out_specs=pl.BlockSpec((n, bl), lambda i, idx_ref: (0, i)),
-        )
-        out = pl.pallas_call(
-            kernel,
-            grid_spec=grid_spec,
-            out_shape=out_shape,
-            interpret=interpret,
-        )(idx.astype(jnp.int32), mats_l, s0_l)
-    return jnp.moveaxis(out, -1, 0)[:b]  # [B, N]
+            num_scalar_prefetch=1, grid=(bp // bl,), in_specs=in_specs,
+            out_specs=out_specs)
+        call = pl.pallas_call(kernel, grid_spec=grid_spec,
+                              out_shape=out_shape, interpret=interpret)
+    res = call(*scalar_args, *operands)
+    if energy is None:
+        return jnp.moveaxis(res, -1, 0)[:b]  # [B, N]
+    out, acc = res
+    return (jnp.moveaxis(out, -1, 0)[:b],
+            jnp.moveaxis(acc, -1, 0)[:b])    # [B, N], [B, P]

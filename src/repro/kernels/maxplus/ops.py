@@ -18,6 +18,9 @@ Both take a ``strategy`` (DESIGN.md §2.3):
   O(segment_len + log T) depth;
 * ``"squaring"`` (homogeneous only) — periodic matrix squaring,
   O(log n_pages) matmuls.
+
+``trace_energy_maxplus`` additionally accumulates the phase-resolved
+per-op energies ``E[idx[t]]`` inside the kernel's fold (DESIGN.md §2.4).
 """
 
 from __future__ import annotations
@@ -93,6 +96,18 @@ def bandwidth_maxplus_mb_s(ops, ways, *, n_pages: int = 512,
     return data * n_pages / np.asarray(end)
 
 
+def _combo_setup(tables, trace, policy):
+    """(layout, combos, idx, mats [B,M,N,N], s0 [B,N]) shared by the
+    trace-indexed end-time and energy entry points."""
+    layout = StateLayout(trace.channels, trace.ways)
+    combos, idx = trace_combos(trace)   # trace-only: shared by the batch
+    mats = np.stack([combo_matrices(table, combos, layout, policy)
+                     for table in tables])
+    s0 = np.broadcast_to(init_state(layout),
+                         (mats.shape[0], layout.n_state)).copy()
+    return layout, combos, idx, mats, s0
+
+
 def trace_end_time_maxplus(
     tables,                    # OpClassTable | list[OpClassTable]
     trace,                     # OpTrace (shared across the batch)
@@ -108,18 +123,75 @@ def trace_end_time_maxplus(
     single = not isinstance(tables, (list, tuple))
     if single:
         tables = [tables]
-    layout = StateLayout(trace.channels, trace.ways)
-    combos, idx = trace_combos(trace)   # trace-only: shared by the batch
-    mats = np.stack([combo_matrices(table, combos, layout, policy)
-                     for table in tables])
-    s0 = np.broadcast_to(init_state(layout),
-                         (mats.shape[0], layout.n_state)).copy()
+    layout, _, idx, mats, s0 = _combo_setup(tables, trace, policy)
     final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
                          t_steps=trace.n_ops, idx=jnp.asarray(idx),
                          use_kernel=use_kernel, interpret=interpret,
                          strategy=strategy, segment_len=segment_len)
     end = end_time_from_state(np.asarray(final), layout)
     return end[0] if single else end
+
+
+def combo_energy_uj(table, combos, kind) -> np.ndarray:
+    """[M, P] phase-energy vector per (class, channel, way, parity) combo
+    — the energy twin of ``combo_matrices`` (parity resolved here, so the
+    kernel's per-step gather index serves both)."""
+    from repro.core.energy import op_phase_energy_uj
+
+    e = op_phase_energy_uj(table, kind)            # [K, 2, P]
+    return np.stack([e[k, par] for k, _c, _w, par in combos])
+
+
+def trace_energy_maxplus(
+    tables,                    # OpClassTable | list[OpClassTable]
+    trace,                     # OpTrace (shared across the batch)
+    kinds,                     # InterfaceKind | list[InterfaceKind]
+    *,
+    policy: str = "eager",
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+    strategy: str = "sequential",
+    segment_len: int = 64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(end_us, phase-energy sums in uJ) of one trace under a batch of
+    design points ([B] / [B, P], or scalar / [P] for a single table).
+
+    ``strategy="sequential"`` accumulates ``E[idx[t]]`` inside the Pallas
+    ``fori_loop`` next to the (max,+) matvec (DESIGN.md §2.4); the
+    segmented strategy folds the end time as usual and reduces the
+    energy as the plain segment sum it is."""
+    single = not isinstance(tables, (list, tuple))
+    if single:
+        tables, kinds = [tables], [kinds]
+    if len(kinds) != len(tables):
+        raise ValueError("need one interface kind per op-class table")
+    layout, combos, idx, mats, s0 = _combo_setup(tables, trace, policy)
+    e = np.stack([combo_energy_uj(table, combos, kind)
+                  for table, kind in zip(tables, kinds)])
+    if strategy == "sequential":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        if use_kernel:
+            final, acc = maxplus_fold_kernel(
+                jnp.asarray(mats), jnp.asarray(s0), t_steps=trace.n_ops,
+                idx=jnp.asarray(idx), energy=jnp.asarray(e),
+                interpret=interpret)
+        else:
+            final = maxplus_fold_ref(jnp.asarray(mats), jnp.asarray(s0),
+                                     t_steps=trace.n_ops,
+                                     idx=jnp.asarray(idx))
+            acc = jnp.sum(jnp.asarray(e)[:, idx, :], axis=1)
+    elif strategy == "segmented":
+        final = maxplus_fold_segmented(
+            jnp.asarray(mats), jnp.asarray(idx), jnp.asarray(s0),
+            segment_len=segment_len)
+        acc = jnp.sum(jnp.asarray(e)[:, idx, :], axis=1)
+    else:
+        raise ValueError(f"unknown trace energy strategy {strategy!r} "
+                         "(one of 'sequential', 'segmented')")
+    end = end_time_from_state(np.asarray(final), layout)
+    acc = np.asarray(acc)
+    return (end[0], acc[0]) if single else (end, acc)
 
 
 def trace_bandwidth_maxplus_mb_s(tables, trace, **kw) -> np.ndarray:

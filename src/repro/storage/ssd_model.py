@@ -19,11 +19,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
-from repro.core.energy import ControllerEnergyModel
+from repro.core.energy import ControllerEnergyModel, EnergyBreakdown
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
-from repro.core.trace import OpTrace, READ, op_class_table, simulate
+from repro.core.trace import (OpTrace, READ, op_class_table, simulate,
+                              simulate_energy)
 
 #: Candidate geometries for planning, cheapest first.  Area cost model per
 #: the paper §2.2.1: a channel costs ~4x a way (NAND_IF + ECC block +
@@ -42,6 +43,7 @@ class IOEstimate:
     read_bytes: int = 0
     write_bytes: int = 0
     n_ops: int = 0
+    energy: EnergyBreakdown | None = None  # phase-resolved (trace paths)
 
     def describe(self) -> str:
         return (f"{self.config.describe()}: {self.bandwidth_mb_s:.0f} MB/s, "
@@ -55,27 +57,39 @@ def estimate_trace(trace: OpTrace, cfg: SSDConfig, *,
 
     ``total_bytes``: when the trace is a truncated window of a longer
     steady workload, extrapolate wall time by bytes at the simulated
-    sustained bandwidth."""
+    sustained bandwidth.  The returned ``energy`` is the phase-resolved
+    trace-level breakdown (DESIGN.md §2.4); ``energy_joules`` is its
+    controller total — the paper's constant-power quantity."""
     assert trace.channels == cfg.channels and trace.ways == cfg.ways, \
         f"trace geometry {trace.channels}x{trace.ways} != config " \
         f"{cfg.channels}x{cfg.ways}"
+    if trace.n_ops == 0:
+        raise ValueError("empty trace: no ops to estimate")
     table = op_class_table(cfg)
-    end_us = simulate(table, trace, policy or cfg.policy)
     window_bytes = trace.total_bytes(table)
+    if window_bytes <= 0:
+        raise ValueError("trace delivers no payload bytes (every op is "
+                         "payload-masked); nothing to price")
+    breakdown = simulate_energy(table, trace, cfg.interface,
+                                policy=policy or cfg.policy)
+    end_us = breakdown.end_us
     bw = min(window_bytes / end_us, cfg.sata_mb_s)     # bytes/us == MB/s
     nbytes = window_bytes if total_bytes is None else int(total_bytes)
     seconds = nbytes / (bw * 1e6)
-    energy = ControllerEnergyModel(cfg.interface).energy_joules(nbytes, bw) \
-        * cfg.channels
+    scale = nbytes / window_bytes
+    # per-op phases scale with the op count; idle re-derives from the
+    # extrapolated wall time (a SATA-capped stream turns the extra
+    # wall-clock into idle energy, not op energy)
+    breakdown = breakdown.extrapolated(scale, end_us=seconds * 1e6)
     pay = trace.payload_mask()
     read_mask = (trace.cls == READ) & pay
     write_mask = (trace.cls != READ) & pay
-    scale = nbytes / window_bytes
     return IOEstimate(
-        seconds=seconds, bandwidth_mb_s=bw, energy_joules=energy, config=cfg,
+        seconds=seconds, bandwidth_mb_s=bw,
+        energy_joules=breakdown.controller_j, config=cfg,
         read_bytes=int(table.data_bytes[trace.cls[read_mask]].sum() * scale),
         write_bytes=int(table.data_bytes[trace.cls[write_mask]].sum() * scale),
-        n_ops=trace.n_ops)
+        n_ops=trace.n_ops, energy=breakdown)
 
 
 def estimate_io(nbytes: int, cfg: SSDConfig, mode: str) -> IOEstimate:
@@ -90,19 +104,43 @@ def estimate_io(nbytes: int, cfg: SSDConfig, mode: str) -> IOEstimate:
         write_bytes=nbytes if mode == "write" else 0)
 
 
-def plan_geometry(nbytes: int, budget_s: float, mode: str,
-                  interface: InterfaceKind = InterfaceKind.PROPOSED,
-                  cell: CellType = CellType.MLC) -> IOEstimate | None:
-    """Smallest (channels x ways) geometry meeting the time budget for a
-    homogeneous byte stream (see ``plan_geometry_for_trace`` for mixed
-    workloads)."""
+def _plan(estimator: Callable[[SSDConfig], IOEstimate], budget_s: float,
+          interface: InterfaceKind, cell: CellType,
+          objective: str) -> IOEstimate | None:
+    """Shared planning loop: ``objective="area"`` returns the cheapest
+    candidate (by the §2.2.1 area order) meeting the time budget;
+    ``objective="energy"`` searches every candidate meeting the budget
+    and returns the one with the lowest controller energy — the Fig. 10
+    trade-off: more ways finish sooner, and with constant controller
+    power sooner is cheaper, until SATA/controller saturation turns the
+    extra geometry into idle burn."""
+    if objective not in ("area", "energy"):
+        raise ValueError(f"unknown objective {objective!r} "
+                         "(one of 'area', 'energy')")
+    fits = []
     for channels, ways in _CANDIDATES:
         cfg = SSDConfig(interface=interface, cell=cell,
                         channels=channels, ways=ways)
-        est = estimate_io(nbytes, cfg, mode)
+        est = estimator(cfg)
         if est.seconds <= budget_s:
-            return est
+            if objective == "area":
+                return est
+            fits.append(est)
+    if fits:
+        return min(fits, key=lambda e: e.energy_joules)
     return None
+
+
+def plan_geometry(nbytes: int, budget_s: float, mode: str,
+                  interface: InterfaceKind = InterfaceKind.PROPOSED,
+                  cell: CellType = CellType.MLC,
+                  objective: str = "area") -> IOEstimate | None:
+    """Best (channels x ways) geometry meeting the time budget for a
+    homogeneous byte stream — smallest area, or lowest controller energy
+    with ``objective="energy"`` (see ``plan_geometry_for_trace`` for
+    mixed workloads)."""
+    return _plan(lambda cfg: estimate_io(nbytes, cfg, mode), budget_s,
+                 interface, cell, objective)
 
 
 def plan_geometry_for_trace(
@@ -110,18 +148,19 @@ def plan_geometry_for_trace(
         budget_s: float,
         interface: InterfaceKind = InterfaceKind.PROPOSED,
         cell: CellType = CellType.MLC,
-        total_bytes: int | None = None) -> IOEstimate | None:
+        total_bytes: int | None = None,
+        objective: str = "area") -> IOEstimate | None:
     """Trace-aware geometry planning: the workload is re-striped onto
     each candidate geometry by ``trace_builder(cfg)`` and simulated
     jointly, so mixed read/write contention and shared-controller
-    arbitration decide the verdict — not a homogeneous proxy stream."""
-    for channels, ways in _CANDIDATES:
-        cfg = SSDConfig(interface=interface, cell=cell,
-                        channels=channels, ways=ways)
-        est = estimate_trace(trace_builder(cfg), cfg, total_bytes=total_bytes)
-        if est.seconds <= budget_s:
-            return est
-    return None
+    arbitration decide the verdict — not a homogeneous proxy stream.
+    ``objective="energy"`` picks the budget-feasible geometry with the
+    lowest phase-resolved controller energy instead of the smallest
+    area."""
+    return _plan(
+        lambda cfg: estimate_trace(trace_builder(cfg), cfg,
+                                   total_bytes=total_bytes),
+        budget_s, interface, cell, objective)
 
 
 def compare_interfaces(nbytes: int, mode: str, *, channels: int = 4,
