@@ -1,0 +1,107 @@
+"""Benchmark: the ``repro.api.Simulator`` session serving path.
+
+Three things are measured and gated (DESIGN.md §2.5):
+
+* **repeated-query cache** — a fresh session's first query pays trace
+  conversion + jit compilation; the second *identical* query must be
+  served from the session's closure cache (and jax's compile cache
+  behind it) at least 5x faster.  The geometry (3ch x 5way) and the
+  length bucket are chosen so no other benchmark section has warmed the
+  same compiled shape — the speedup is a genuine cold-vs-warm number.
+* **run_many packing** — heterogeneous trace lengths bucket into
+  padded vmapped groups; results must equal per-trace ``run`` exactly
+  (masked padding is a state no-op).
+* **all five registered engines** answer through the same ``Simulator``
+  surface and agree with the event-loop oracle to < 1e-3 on end time
+  *and* controller energy (squaring on its homogeneous single-channel
+  domain, the heterogeneous engines on a mixed trace).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import SSDConfig, Simulator, engine_capabilities
+from repro.core.energy import breakdown_from_sums
+from repro.core.nand import CellType
+from repro.core.sim_ref import simulate_trace_energy_ref
+from repro.core.trace import READ, mixed_trace, steady_trace
+
+T_QUERY = 1536        # buckets to 2048 — a shape only this section uses
+
+
+def _rel(a: float, b: float) -> float:
+    return abs(a - b) / abs(b)
+
+
+def run(small: bool = False) -> list[dict]:
+    t_ops = 384 if small else T_QUERY
+    cfg = SSDConfig(cell=CellType.MLC, channels=3, ways=5)
+    trace = mixed_trace(t_ops, 3, 5, read_fraction=0.6, seed=11)
+
+    sim = Simulator(cfg)                       # fresh session: cold cache
+    t0 = time.perf_counter()
+    first = sim.run(trace)
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    second = sim.run(trace)
+    t_second = time.perf_counter() - t0
+    assert first.end_us == second.end_us
+    info = sim.cache_info()
+    assert info.misses == 1 and info.hits >= 1, info
+
+    # run_many: mixed lengths pack into buckets; results equal per-trace
+    lengths = (130, 40, 130, 450) if small else (700, 90, 700, 1800)
+    traces = [mixed_trace(n, 3, 5, read_fraction=0.5, seed=i)
+              for i, n in enumerate(lengths)]
+    many = sim.run_many(traces)                # warms the bucket closures
+    t0 = time.perf_counter()
+    many = sim.run_many(traces)
+    t_many = time.perf_counter() - t0
+    for t, r in zip(traces, many):
+        assert r.end_us == sim.run(t).end_us, "run_many != run"
+
+    # every registered engine answers through the same session surface
+    caps = engine_capabilities()
+    agree = 0.0
+    hetero = mixed_trace(192, 3, 5, read_fraction=0.6, seed=7)
+    end_ref, sums_ref = simulate_trace_energy_ref(sim.table, hetero,
+                                                  cfg.interface)
+    ref_bd = breakdown_from_sums(sums_ref, end_ref,
+                                 hetero.total_bytes(sim.table),
+                                 cfg.interface, channels=3)
+    for name, cap in caps.items():
+        if not cap.heterogeneous:
+            continue
+        res = sim.run(hetero, engine=name, objective="all")
+        agree = max(agree, _rel(res.end_us, end_ref),
+                    _rel(res.energy.controller_j, ref_bd.controller_j))
+    # squaring: its homogeneous single-channel domain, same surface
+    cfg1 = SSDConfig(cell=CellType.MLC, channels=1, ways=4)
+    sim1 = Simulator.for_config(cfg1)
+    st = steady_trace(128, 1, 4, READ)
+    end1, sums1 = simulate_trace_energy_ref(sim1.table, st, cfg1.interface)
+    bd1 = breakdown_from_sums(sums1, end1, st.total_bytes(sim1.table),
+                              cfg1.interface)
+    sq = sim1.run(st, engine="squaring", objective="all")
+    agree = max(agree, _rel(sq.end_us, end1),
+                _rel(sq.energy.controller_j, bd1.controller_j))
+    assert agree < 1e-3, \
+        f"engines disagree by {agree:.2e} through the Simulator surface"
+
+    return [
+        {"name": f"api/repeat_query_T{t_ops}/first_ms",
+         "value": round(t_first * 1e3, 2), "paper": "-"},
+        {"name": f"api/repeat_query_T{t_ops}/second_ms",
+         "value": round(t_second * 1e3, 3), "paper": "-"},
+        {"name": f"api/repeat_query_T{t_ops}/cache_speedup",
+         "value": round(t_first / max(t_second, 1e-9), 1), "paper": ">=5"},
+        {"name": "api/session_cache_entries",
+         "value": sim.cache_info().entries, "paper": "-"},
+        {"name": "api/run_many_us_per_trace",
+         "value": round(t_many / len(traces) * 1e6, 1), "paper": "-"},
+        {"name": "api/engine_max_rel_disagreement",
+         "value": f"{agree:.1e}", "paper": "<1e-3"},
+    ]

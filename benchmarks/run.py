@@ -19,10 +19,12 @@ def _emit(rows):
 
 
 def main() -> None:
-    from benchmarks import freq, roofline, sweep_bench, tables
+    from benchmarks import api_bench, freq, roofline, sweep_bench, tables
 
     print("# freq (paper §5.2)")
     _emit(freq.run())
+    print("# api (Simulator session: cache + run_many + engine agreement)")
+    _emit(api_bench.run())
     print("# table3 (paper Table 3 / Fig 8)")
     _emit(tables.run_table3())
     print("# table4 (paper Table 4 / Fig 9)")

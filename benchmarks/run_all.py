@@ -24,6 +24,7 @@ import platform
 import re
 import sys
 import time
+import warnings
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
@@ -48,24 +49,37 @@ def _section(name, fn):
 
 
 def _check_speedups(sections, smoke: bool) -> None:
-    """The acceptance gate: log-depth engines must beat the O(T) scan
-    per design point at the full T (speedup rows > 1).  Smoke runs at
-    reduced T only warn — short traces are overhead-dominated."""
-    bad = []
+    """The acceptance gates: log-depth engines must beat the O(T) scan
+    per design point at the full T (speedup rows > 1; smoke runs at
+    reduced T only warn — short traces are overhead-dominated), and the
+    ``Simulator`` session cache must serve a repeated identical query
+    >= 5x faster than the cold first query (gated even under --smoke:
+    cold-vs-warm is compile-dominated, so the ratio is size-robust)."""
+    bad, bad_smoke = [], []
     for sec in sections:
         for r in sec["rows"]:
             if r["name"].endswith("_speedup_vs_scan") and r["paper"] == ">1":
                 if float(r["value"]) <= 1.0:
-                    bad.append(f"{r['name']} = {r['value']}")
-    if bad:
-        msg = "log-depth speedup rows not > 1: " + "; ".join(bad)
+                    bad_smoke.append(f"{r['name']} = {r['value']} (want > 1)")
+            if r["paper"] == ">=5" and float(r["value"]) < 5.0:
+                bad.append(f"{r['name']} = {r['value']} (want >= 5)")
+    if bad_smoke:
+        msg = "speedup gate rows failed: " + "; ".join(bad_smoke)
         if smoke:
             print(f"# WARNING (smoke sizes, not gating): {msg}")
         else:
-            raise AssertionError(msg)
+            bad += bad_smoke
+    if bad:
+        raise AssertionError("speedup gate rows failed: " + "; ".join(bad))
 
 
 def main() -> None:
+    # repro-internal code may never reach its own deprecated query shims
+    # (DESIGN.md §2.5); the module field keys on the *calling* module.
+    # Programmatic because `python -W` re.escapes the module field into
+    # an exact match (pytest gets the same rule from pytest.ini).
+    warnings.filterwarnings("error", category=DeprecationWarning,
+                            module=r"repro\.")
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes for CI; still checks engine "
@@ -75,6 +89,10 @@ def main() -> None:
                          "tracked results dir; smoke runs default to a "
                          "temp dir so reduced-size datapoints never "
                          "pollute the cross-PR trajectory)")
+    ap.add_argument("--index", type=int, default=None,
+                    help="force the BENCH_<n>.json index (default: one "
+                         "past the highest existing; use to align the "
+                         "committed file with the PR number)")
     args = ap.parse_args()
     if args.out is None:
         if args.smoke:
@@ -85,11 +103,15 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import freq, roofline, sweep_bench, tables
+    from benchmarks import api_bench, freq, roofline, sweep_bench, tables
 
     t0 = time.perf_counter()
     sections = [
         _section("freq", freq.run),
+        # Simulator session serving path: repeated-query cache speedup,
+        # run_many bucket packing, all-five-engine agreement through the
+        # unified surface (runs first so its compile shapes are cold)
+        _section("api", lambda: api_bench.run(small=args.smoke)),
         _section("table3", tables.run_table3),
         _section("table4", tables.run_table4),
         # trace-level phase-resolved energy; asserts < 1e-3 cross-engine
@@ -110,7 +132,7 @@ def main() -> None:
         print(f"# wrote {out}")
 
     args.out.mkdir(parents=True, exist_ok=True)
-    n = _next_index(args.out)
+    n = args.index if args.index is not None else _next_index(args.out)
     payload = {
         "bench_index": n,
         "smoke": args.smoke,

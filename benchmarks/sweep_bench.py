@@ -11,7 +11,10 @@ fold for heterogeneous traces — over a channels × ways × interface ×
 cell × mode grid and over mixed-workload op traces.  ``run_logdepth``
 pushes the trace length to T >= 2048, where the O(log T) engines must
 beat the O(T) scan per design point (the speedup rows asserted by
-``benchmarks/run_all.py`` / CI)."""
+``benchmarks/run_all.py`` / CI).  Every query dispatches through the
+``repro.api`` registry/``Simulator`` sessions, so the engine-agreement
+gate exercises the unified serving surface (the repeated-query cache
+benchmark itself lives in ``benchmarks/api_bench.py``)."""
 
 from __future__ import annotations
 
@@ -20,15 +23,15 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Simulator, sweep_steady_bandwidth_mb_s, sweep_tables
 from repro.core.energy import breakdown_from_sums
 from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import CellType, chip
-from repro.core.sim import SSDConfig, page_op_params, sweep_bandwidth_mb_s
+from repro.core.sim import SSDConfig, page_op_params
 from repro.core.sim_ref import (bandwidth_ref_mb_s,
                                 simulate_trace_energy_ref,
                                 trace_bandwidth_ref_mb_s)
-from repro.core.trace import (mixed_trace, op_class_table, simulate_energy,
-                              trace_bandwidth_mb_s)
+from repro.core.trace import mixed_trace
 from repro.kernels.maxplus.ops import (bandwidth_maxplus_mb_s,
                                        trace_bandwidth_maxplus_mb_s)
 
@@ -65,9 +68,10 @@ def run(small: bool = False) -> list[dict]:
 
     args = _sweep_args(ops)
     wv = jnp.array(ways, jnp.int32)
-    sweep_bandwidth_mb_s(*args, wv, n_pages=n_pages).block_until_ready()  # compile
+    sweep_steady_bandwidth_mb_s(
+        *args, wv, n_pages=n_pages).block_until_ready()           # compile
     t0 = time.perf_counter()
-    vm = np.asarray(sweep_bandwidth_mb_s(*args, wv, n_pages=n_pages))
+    vm = np.asarray(sweep_steady_bandwidth_mb_s(*args, wv, n_pages=n_pages))
     t_vm = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -107,9 +111,11 @@ def run_mixed(small: bool = False) -> list[dict]:
             cfgs = [SSDConfig(interface=k, cell=c, channels=channels,
                               ways=ways)
                     for k in InterfaceKind for c in CellType]
-            tables = [op_class_table(cfg) for cfg in cfgs]
+            sims = [Simulator.for_config(cfg) for cfg in cfgs]
+            tables = [s.table for s in sims]
             t0 = time.perf_counter()
-            scan_bw = np.array([trace_bandwidth_mb_s(t, tr) for t in tables])
+            scan_bw = np.array([s.run(tr, objective="bandwidth").mb_s
+                                for s in sims])
             t_scan += time.perf_counter() - t0
             t0 = time.perf_counter()
             mp_bw = trace_bandwidth_maxplus_mb_s(tables, tr)
@@ -126,7 +132,8 @@ def run_mixed(small: bool = False) -> list[dict]:
             # engines vs the event-loop oracle (heterogeneous-trace half
             # of the energy smoke gate; Table 5 covers the steady half)
             kind = InterfaceKind.PROPOSED
-            bds = {eng: simulate_energy(tables[-1], tr, kind, engine=eng)
+            bds = {eng: sims[-1].run(tr, objective="energy",
+                                     engine=eng).energy
                    for eng in ("scan", "prefix", "pallas")}
             end_e, sums_e = simulate_trace_energy_ref(tables[-1], tr, kind)
             ref_bd = breakdown_from_sums(sums_e, end_e,
@@ -189,9 +196,9 @@ def run_logdepth(small: bool = False) -> list[dict]:
             dt = min(dt, time.perf_counter() - t0)
         return np.asarray(out), dt
 
-    scan_bw, t_scan = timed(lambda: sweep_bandwidth_mb_s(
+    scan_bw, t_scan = timed(lambda: sweep_steady_bandwidth_mb_s(
         *args, wv, n_pages=t_pages))
-    sq_bw, t_sq = timed(lambda: sweep_bandwidth_mb_s(
+    sq_bw, t_sq = timed(lambda: sweep_steady_bandwidth_mb_s(
         *args, wv, n_pages=t_pages, engine="squaring"))
     agree = float(np.max(np.abs(sq_bw - scan_bw) / scan_bw))
     # python oracle on a few spot points (full grid at this T is slow)
@@ -214,9 +221,10 @@ def run_logdepth(small: bool = False) -> list[dict]:
     # heterogeneous: one long mixed trace, batch of design-point tables
     channels, ways_h = 2, 8
     tr = mixed_trace(t_pages, channels, ways_h, 0.7, seed=42)
-    tables = [op_class_table(SSDConfig(interface=k, cell=c,
-                                       channels=channels, ways=ways_h))
-              for k in InterfaceKind for c in CellType]
+    sims = [Simulator.for_config(SSDConfig(interface=k, cell=c,
+                                           channels=channels, ways=ways_h))
+            for k in InterfaceKind for c in CellType]
+    tables = [s.table for s in sims]
     b = len(tables)
     seg_len = 128
 
@@ -229,13 +237,13 @@ def run_logdepth(small: bool = False) -> list[dict]:
             dt = min(dt, time.perf_counter() - t0)
         return np.asarray(out), dt
 
-    from repro.core.trace import simulate, simulate_batch
     scan_us, t_scan_h = timed_np(
-        lambda: np.array([simulate(t, tr) for t in tables]))
+        lambda: np.array([s.run(tr).end_us for s in sims]))
     scanb_us, t_scanb = timed_np(
-        lambda: simulate_batch(tables, tr, engine="scan"))
+        lambda: sweep_tables(tables, tr, engine="scan"))
     px_us, t_px = timed_np(
-        lambda: simulate_batch(tables, tr, segment_len=seg_len))
+        lambda: sweep_tables(tables, tr, engine="prefix",
+                             segment_len=seg_len))
 
     from repro.kernels.maxplus.ops import trace_end_time_maxplus
     seg_us, t_seg = timed_np(

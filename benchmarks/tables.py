@@ -1,6 +1,8 @@
 """Benchmarks: paper Tables 3 / 4 / 5 reproduction (one per paper table).
 
-Table 5 runs through the **trace-level phase-resolved energy path**
+All queries go through the ``repro.api.Simulator`` session (DESIGN.md
+§2.5), so the CI smoke gate exercises the unified serving path.  Table 5
+runs through the **trace-level phase-resolved energy path**
 (DESIGN.md §2.4): each cell simulates a steady SLC stream through the
 scan, segmented-prefix and Pallas engines plus the numpy oracle, asserts
 all four agree on the controller energy to < 1e-3 (the CI smoke gate),
@@ -9,18 +11,18 @@ and reports the trace-derived nJ/B against the paper — the closed-form
 
 from __future__ import annotations
 
+from repro.api import Simulator, steady_bandwidth_mb_s
 from repro.core.energy import breakdown_from_sums
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.paper_tables import INTERFACE_ORDER, TABLE3, TABLE4, TABLE5
-from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+from repro.core.sim import SSDConfig
 from repro.core.sim_ref import simulate_trace_energy_ref
-from repro.core.trace import (READ, WRITE, op_class_table, simulate_energy,
-                              steady_trace)
+from repro.core.trace import READ, WRITE, steady_trace
 
 
 def _sim(cell, mode, ways, kind, channels=1):
-    return ssd_bandwidth_mb_s(
+    return steady_bandwidth_mb_s(
         SSDConfig(interface=InterfaceKind(kind), cell=CellType(cell),
                   channels=channels, ways=ways), mode)
 
@@ -63,14 +65,15 @@ def run_table5(small: bool = False) -> list[dict]:
             for kind, paper in zip(INTERFACE_ORDER, row):
                 cfg = SSDConfig(interface=InterfaceKind(kind),
                                 cell=CellType.SLC, channels=1, ways=ways)
-                table = op_class_table(cfg)
+                sim = Simulator.for_config(cfg)
                 trace = steady_trace(n_pages, 1, ways,
                                      READ if mode == "read" else WRITE)
-                bds = {eng: simulate_energy(table, trace, kind, engine=eng)
+                bds = {eng: sim.run(trace, objective="energy",
+                                    engine=eng).energy
                        for eng in ("scan", "prefix", "pallas")}
-                end, sums = simulate_trace_energy_ref(table, trace, kind)
+                end, sums = simulate_trace_energy_ref(sim.table, trace, kind)
                 ref = breakdown_from_sums(sums, end,
-                                          trace.total_bytes(table), kind)
+                                          trace.total_bytes(sim.table), kind)
                 agree = max(agree, *(
                     abs(bd.controller_j - ref.controller_j)
                     / ref.controller_j for bd in bds.values()))

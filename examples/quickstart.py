@@ -5,10 +5,10 @@
 
 import jax
 
+from repro.api import SSDConfig, steady_bandwidth_mb_s
 from repro.core import timing
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
-from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
 from repro.configs import get_arch, smoke_batch
 from repro.models.transformer import init_params, loss_fn
 
@@ -23,7 +23,7 @@ def main():
     for kind in InterfaceKind:
         cfg = SSDConfig(interface=kind, cell=CellType.SLC, ways=16)
         print(f"  {kind.value:10s} 16-way SLC read : "
-              f"{ssd_bandwidth_mb_s(cfg, 'read'):7.1f} MB/s")
+              f"{steady_bandwidth_mb_s(cfg, 'read'):7.1f} MB/s")
 
     # 2) one forward/backward through a zoo architecture (reduced config)
     arch = get_arch("qwen2-0.5b")

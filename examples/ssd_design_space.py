@@ -7,12 +7,11 @@ read/write op-trace workloads the paper could not express.
 
 import time
 
+from repro.api import Simulator, steady_bandwidth_mb_s, sweep_tables
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
-from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
-from repro.core.trace import (checkpoint_trace, datapipe_trace,
-                              op_class_table, simulate, simulate_batch,
-                              workload_trace)
+from repro.core.sim import SSDConfig
+from repro.core.trace import checkpoint_trace, datapipe_trace, workload_trace
 from repro.storage.kvoffload import plan_kv_offload
 from repro.storage.ssd_model import (compare_interfaces,
                                      compare_interfaces_trace, plan_geometry,
@@ -28,7 +27,7 @@ def main():
         for kind in InterfaceKind:
             cfg = SSDConfig(interface=kind, cell=CellType.SLC,
                             channels=channels, ways=ways)
-            row.append(f"{kind.value}={ssd_bandwidth_mb_s(cfg, 'read'):6.1f}")
+            row.append(f"{kind.value}={steady_bandwidth_mb_s(cfg, 'read'):6.1f}")
         print(f"  {channels}ch x {ways:2d}way : " + "  ".join(row) + " MB/s")
 
     print("\n== mixed-workload design points (beyond paper §5.3: 70/30 r/w) ==")
@@ -48,19 +47,21 @@ def main():
     print(f"  phase split (proposed, 2ch x 8way): {bd.describe()}")
 
     print("\n== log-depth engines: 2048-op mixed sweep (DESIGN.md §2.3) ==")
-    print("   (same recurrence, O(segment+log T) depth instead of O(T))")
+    print("   (one Simulator session per design point; same recurrence,")
+    print("    O(segment+log T) depth instead of O(T))")
     cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=8)
     tr2k = workload_trace("mixed", cfg, n_ops=2048, read_fraction=0.7, seed=3)
-    tables = [op_class_table(SSDConfig(interface=k, cell=c,
-                                       channels=2, ways=8))
-              for k in InterfaceKind for c in CellType]
-    scan_us = [simulate(t, tr2k) for t in tables]        # compile + run
-    px_us = simulate_batch(tables, tr2k, segment_len=128)
+    sims = [Simulator.for_config(SSDConfig(interface=k, cell=c,
+                                           channels=2, ways=8))
+            for k in InterfaceKind for c in CellType]
+    tables = [s.table for s in sims]
+    scan_us = [s.run(tr2k).end_us for s in sims]         # compile + run
+    px_us = sweep_tables(tables, tr2k, segment_len=128)
     t0 = time.perf_counter()
-    scan_us = [simulate(t, tr2k) for t in tables]
+    scan_us = [s.run(tr2k).end_us for s in sims]
     t_scan = time.perf_counter() - t0
     t0 = time.perf_counter()
-    px_us = simulate_batch(tables, tr2k, segment_len=128)
+    px_us = sweep_tables(tables, tr2k, segment_len=128)
     t_px = time.perf_counter() - t0
     worst = max(abs(a - b) / b for a, b in zip(px_us, scan_us))
     print(f"  scan engine   : {t_scan * 1e3:6.1f} ms for {len(tables)} design points")

@@ -1,0 +1,44 @@
+"""``repro.api`` — the unified simulation surface (re-export of
+``repro.core.api`` plus the types a query needs).
+
+Quickstart::
+
+    from repro.api import Simulator, SSDConfig, workload_trace
+
+    cfg = SSDConfig(channels=4, ways=8)
+    sim = Simulator.for_config(cfg)             # shared, jit-cached session
+    res = sim.run(workload_trace("mixed", cfg, read_fraction=0.7),
+                  objective="all")
+    print(res.describe(), res.energy.nj_per_byte)
+
+See DESIGN.md §2.5 for the request/response model, the engine registry
+and the cache keying.
+"""
+
+from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
+                            OBJECTIVES, Objective, Policy, SimRequest,
+                            SimResult, Simulator, engine_capabilities,
+                            get_engine, register_engine, registered_engines,
+                            simulator_for, steady_bandwidth_mb_s,
+                            steady_channel_bandwidth_mb_s,
+                            sweep_steady_bandwidth_mb_s, sweep_tables)
+from repro.core.energy import EnergyBreakdown
+from repro.core.interface import InterfaceKind
+from repro.core.nand import CellType
+from repro.core.sim import PageOpParams, SSDConfig
+from repro.core.trace import (OpClassTable, OpTrace, READ, WRITE,
+                              op_class_table, workload_trace)
+
+__all__ = [
+    # the session API proper
+    "CacheInfo", "CapabilityError", "Engine", "EngineCaps", "OBJECTIVES",
+    "Objective", "Policy", "SimRequest", "SimResult", "Simulator",
+    "engine_capabilities", "get_engine", "register_engine",
+    "registered_engines", "simulator_for", "steady_bandwidth_mb_s",
+    "steady_channel_bandwidth_mb_s", "sweep_steady_bandwidth_mb_s",
+    "sweep_tables",
+    # the types a request/result is made of
+    "CellType", "EnergyBreakdown", "InterfaceKind", "OpClassTable",
+    "OpTrace", "PageOpParams", "READ", "SSDConfig", "WRITE",
+    "op_class_table", "workload_trace",
+]

@@ -1,0 +1,795 @@
+"""Unified ``Simulator`` session API: one request/response surface over
+every simulation engine (DESIGN.md §2.5).
+
+After the engine work of PRs 1-3 the query surface had fragmented into
+seven entry points with incompatible knobs (``engine=`` on
+``trace.simulate``, ``strategy=`` on the Pallas ops, ``combine=`` on the
+prefix folds, ``engine="squaring"`` only on the homogeneous sweeps) and
+incompatible result types (bare floats, arrays, ``EnergyBreakdown``,
+``IOEstimate``).  This module absorbs that dispatch into three pieces:
+
+* an **engine registry** — every evaluation strategy registers once
+  under a name (``scan`` / ``prefix`` / ``squaring`` / ``pallas`` /
+  ``oracle``) with a declared :class:`EngineCaps` capability row
+  (heterogeneous traces?  batched design-point tables?  energy?
+  jit-able?).  Unknown names raise one ``ValueError`` listing the
+  registered engines; a registered engine asked for something outside
+  its capability row raises :class:`CapabilityError` (a ``ValueError``)
+  naming the engines that can serve it.  This is the FMMU argument
+  (Woo & Min 2017) in software: a uniform request interface in front of
+  heterogeneous engines is what makes the pool schedulable.
+
+* a **session object** — :class:`Simulator` binds an ``SSDConfig`` /
+  ``OpClassTable`` once, converts the timing table to device arrays
+  once, and caches jitted engine closures keyed on
+  ``(engine, table geometry, trace-length bucket, policy, ...)`` so
+  repeated queries never re-trace or re-convert.  The scan engine runs
+  through a masked fold padded to power-of-two length buckets —
+  identical results (masked ops are bitwise no-ops on the carried
+  state), one compile per bucket instead of one per trace length.
+  :meth:`Simulator.run_many` packs heterogeneous traces into those
+  buckets and evaluates each bucket group in a single vmapped call —
+  the serving path for sweep traffic.  ``Simulator.for_config`` memoises
+  sessions per design point so the storage tier and the planners share
+  compiled closures process-wide.
+
+* one **request/response pair** — :class:`SimRequest` (trace, policy,
+  objective ∈ {end_time, bandwidth, energy, all}, optional engine
+  override) in, :class:`SimResult` (end_us, per-channel bus occupancy,
+  MB/s, optional ``EnergyBreakdown``) out, for every engine and every
+  entry point.  The ``Policy`` literal is validated once, here, in the
+  request layer — a typo like ``"bathced"`` raises instead of silently
+  simulating ``"eager"``.
+
+The legacy functions (``trace.simulate[_batch]``, ``simulate_energy``,
+``trace_bandwidth_mb_s``, ``sim.channel_bandwidth_mb_s`` /
+``sweep_bandwidth_mb_s`` / ``ssd_bandwidth_mb_s``) survive as thin
+shims that emit ``DeprecationWarning`` and delegate here; a
+``filterwarnings = error::DeprecationWarning:repro\\.`` rule in
+pytest.ini (and the same programmatic filter in ``benchmarks/run_all``)
+turns shim calls *from repro-internal modules* into errors, so internal
+code can never call its own deprecated surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sim as _sim
+from repro.core import trace as _trace
+from repro.core.energy import (EnergyBreakdown, breakdown_from_sums,
+                               op_phase_energy_uj)
+from repro.core.interface import InterfaceKind
+from repro.core.sim import (MAX_WAYS, PageOpParams, Policy, SSDConfig,
+                            policy_is_batched)
+from repro.core.trace import OpClassTable, OpTrace, op_class_table
+
+Objective = Literal["end_time", "bandwidth", "energy", "all"]
+OBJECTIVES: tuple[str, ...] = ("end_time", "bandwidth", "energy", "all")
+
+#: Op-class table columns, in the positional order the jitted engines take.
+_TABLE_FIELDS = ("cmd_us", "pre_us", "slot_us", "post_lo_us", "post_hi_us",
+                 "ctrl_us", "arb_us")
+
+
+class CapabilityError(ValueError):
+    """A *registered* engine was asked for a query outside its declared
+    capability row (vs plain ``ValueError`` for unknown engine names)."""
+
+
+# ---------------------------------------------------------------------------
+# Engine protocol + registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCaps:
+    """Declared capability row of one registered engine."""
+
+    name: str
+    heterogeneous: bool   # arbitrary OpTrace (vs homogeneous periodic only)
+    batched_tables: bool  # one trace x stacked design-point tables
+    energy: bool          # phase-resolved energy accumulation
+    jittable: bool        # pure-jax: Simulator caches jitted closures
+
+    def describe(self) -> str:
+        flags = [k for k in ("heterogeneous", "batched_tables", "energy",
+                             "jittable") if getattr(self, k)]
+        return f"{self.name}: {', '.join(flags) or 'none'}"
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What a registered engine must answer.  ``sim`` is the session —
+    it supplies the bound table, device-array conversions and the
+    jit-closure cache; engines that declare ``jittable`` use it to keep
+    repeated queries compile-free.  Optional capabilities
+    (``end_time_batch``, ``steady_channel_end``, ``sweep_steady``) raise
+    :class:`CapabilityError` on the base class."""
+
+    caps: EngineCaps
+
+    def end_time(self, sim: "Simulator", trace: OpTrace, *, batched: bool,
+                 segment_len: int | None) -> float: ...
+
+    def energy_sums(self, sim: "Simulator", trace: OpTrace,
+                    kind: InterfaceKind, *, batched: bool,
+                    segment_len: int | None) -> tuple[float, np.ndarray]: ...
+
+
+_REGISTRY: dict[str, Engine] = {}
+
+
+def register_engine(name: str, *, heterogeneous: bool, batched_tables: bool,
+                    energy: bool, jittable: bool):
+    """Class decorator: instantiate and register an engine under ``name``
+    with its declared capability row.  Names are unique."""
+
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"engine {name!r} is already registered")
+        inst = cls()
+        inst.caps = EngineCaps(name=name, heterogeneous=heterogeneous,
+                               batched_tables=batched_tables, energy=energy,
+                               jittable=jittable)
+        _REGISTRY[name] = inst
+        return cls
+
+    return deco
+
+
+def registered_engines() -> tuple[str, ...]:
+    """Sorted names of every registered engine."""
+    return tuple(sorted(_REGISTRY))
+
+
+def engine_capabilities() -> dict[str, EngineCaps]:
+    """The full declared capability table, by engine name."""
+    return {name: _REGISTRY[name].caps for name in registered_engines()}
+
+
+def get_engine(name: str) -> Engine:
+    """Look up a registered engine; unknown names raise the one shared
+    ``ValueError`` every entry point now emits."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r} (registered engines: "
+            f"{', '.join(registered_engines())})") from None
+
+
+def _policy_name(batched: bool) -> str:
+    return "batched" if batched else "eager"
+
+
+def _bucket_len(n: int, floor: int = 64) -> int:
+    """Trace lengths round up to power-of-two buckets so jitted closures
+    (and compiles) are shared across nearby lengths."""
+    return max(floor, 1 << max(0, (n - 1).bit_length()))
+
+
+def _trace_args(trace: OpTrace):
+    return (jnp.asarray(trace.cls), jnp.asarray(trace.channel),
+            jnp.asarray(trace.way), jnp.asarray(trace.parity))
+
+
+def _pad_trace_np(trace: OpTrace, t_bucket: int):
+    """Zero-pad the per-op arrays to ``t_bucket`` plus the validity mask
+    consumed by the masked scan folds (padding ops are state no-ops) —
+    the one padding contract ``run`` and ``run_many`` share."""
+    pad = t_bucket - trace.n_ops
+    valid = np.zeros(t_bucket, bool)
+    valid[: trace.n_ops] = True
+    return (np.pad(np.asarray(trace.cls), (0, pad)),
+            np.pad(np.asarray(trace.channel), (0, pad)),
+            np.pad(np.asarray(trace.way), (0, pad)),
+            np.pad(np.asarray(trace.parity), (0, pad)),
+            valid)
+
+
+def _padded_trace_args(trace: OpTrace, t_bucket: int):
+    return tuple(jnp.asarray(x) for x in _pad_trace_np(trace, t_bucket))
+
+
+def _steady_channel_args(op: PageOpParams, ways, n_pages: int):
+    """(table columns, cls zeros, way, parity) of a single-channel
+    round-robin stream over one op class — shared by every engine with
+    the homogeneous-pattern capability."""
+    scalars = _op_scalars(op)
+    way, parity = _sim._steady_pattern(n_pages, jnp.asarray(ways, jnp.int32))
+    zeros = jnp.zeros((n_pages,), jnp.int32)
+    table = tuple(x[None] for x in scalars) + (jnp.zeros((1,), jnp.float32),)
+    return table, zeros, way, parity
+
+
+def _stacked_table_args(tables: list[OpClassTable]):
+    return tuple(jnp.asarray(np.stack([getattr(t, f) for t in tables]))
+                 for f in _TABLE_FIELDS)
+
+
+class _EngineBase:
+    """Shared defaults: optional capabilities raise ``CapabilityError``
+    naming the registered engines that *do* implement them (derived
+    from the registry, so new engines appear automatically)."""
+
+    caps: EngineCaps
+
+    def _unsupported(self, what: str, method: str):
+        base = getattr(_EngineBase, method)
+        supported = sorted(
+            name for name, eng in _REGISTRY.items()
+            if getattr(type(eng), method, base) is not base)
+        raise CapabilityError(
+            f"engine {self.caps.name!r} does not support {what} "
+            f"(engines that do: {', '.join(supported)})")
+
+    def end_time_batch(self, tables, trace, *, batched, segment_len,
+                       combine="chain") -> np.ndarray:
+        self._unsupported("batched design-point tables", "end_time_batch")
+
+    def steady_channel_end(self, op: PageOpParams, ways, *, n_pages: int,
+                           batched: bool):
+        self._unsupported("homogeneous single-channel patterns",
+                          "steady_channel_end")
+
+    def sweep_steady(self, scalars, data_bytes, ways, *, n_pages: int,
+                     batched: bool):
+        self._unsupported("homogeneous design-point sweeps", "sweep_steady")
+
+
+@register_engine("scan", heterogeneous=True, batched_tables=True,
+                 energy=True, jittable=True)
+class ScanEngine(_EngineBase):
+    """O(T) ``lax.scan`` fold (DESIGN.md §2.2) — the default engine.
+    Session queries run the masked fold padded to length buckets, so
+    repeated nearby-length queries share one compile."""
+
+    def end_time(self, sim, trace, *, batched, segment_len):
+        t_b = _bucket_len(trace.n_ops)
+        fn = sim._closure(
+            ("scan", trace.channels, t_b, batched),
+            lambda: functools.partial(
+                _sim.trace_end_time_masked, *sim._targs,
+                n_channels=trace.channels, batched=batched))
+        return float(fn(*_padded_trace_args(trace, t_b)))
+
+    def energy_sums(self, sim, trace, kind, *, batched, segment_len):
+        fn = sim._closure(
+            ("scan-energy", trace.channels, trace.n_ops, batched, kind),
+            lambda: functools.partial(
+                _sim.trace_end_time_energy, *sim._targs,
+                sim._energy_table(kind),
+                n_channels=trace.channels, batched=batched))
+        end, sums = fn(*_trace_args(trace))
+        return float(end), np.asarray(sums, np.float64)
+
+    def end_time_batch(self, tables, trace, *, batched, segment_len,
+                       combine="chain"):
+        end = _sim.trace_end_time_batch(
+            *_stacked_table_args(tables), *_trace_args(trace),
+            n_channels=trace.channels, batched=batched)
+        return np.asarray(end)
+
+    def steady_channel_end(self, op, ways, *, n_pages, batched):
+        table, zeros, way, parity = _steady_channel_args(op, ways, n_pages)
+        return _sim.trace_end_time(
+            *table, zeros, zeros, way, parity, n_channels=1, batched=batched)
+
+    def sweep_steady(self, scalars, data_bytes, ways, *, n_pages, batched):
+        return _sim._sweep_scan_jit(*scalars, data_bytes, ways,
+                                    n_pages=n_pages, batched=batched)
+
+
+@register_engine("prefix", heterogeneous=True, batched_tables=True,
+                 energy=True, jittable=True)
+class PrefixEngine(_EngineBase):
+    """Segmented parallel-prefix (max,+) fold, O(L + log T) depth
+    (DESIGN.md §2.3); energy rides the same chunking as segment sums."""
+
+    def end_time(self, sim, trace, *, batched, segment_len):
+        fn = sim._closure(
+            ("prefix", trace.channels, trace.ways, trace.n_ops, batched,
+             segment_len),
+            lambda: functools.partial(
+                _sim.trace_end_time_prefix, *sim._targs,
+                n_channels=trace.channels, n_ways=trace.ways,
+                batched=batched, segment_len=segment_len))
+        return float(fn(*_trace_args(trace)))
+
+    def energy_sums(self, sim, trace, kind, *, batched, segment_len):
+        fn = sim._closure(
+            ("prefix-energy", trace.channels, trace.ways, trace.n_ops,
+             batched, segment_len, kind),
+            lambda: functools.partial(
+                _sim.trace_end_time_prefix_energy, *sim._targs,
+                sim._energy_table(kind),
+                n_channels=trace.channels, n_ways=trace.ways,
+                batched=batched, segment_len=segment_len))
+        end, sums = fn(*_trace_args(trace))
+        return float(end), np.asarray(sums, np.float64)
+
+    def end_time_batch(self, tables, trace, *, batched, segment_len,
+                       combine="chain"):
+        end = _sim.trace_end_time_prefix_batch(
+            *_stacked_table_args(tables), *_trace_args(trace),
+            n_channels=trace.channels, n_ways=trace.ways, batched=batched,
+            segment_len=segment_len, combine=combine)
+        return np.asarray(end)
+
+    def steady_channel_end(self, op, ways, *, n_pages, batched):
+        table, zeros, way, parity = _steady_channel_args(op, ways, n_pages)
+        return _sim.trace_end_time_prefix(
+            *table, zeros, zeros, way, parity,
+            n_channels=1, n_ways=MAX_WAYS, batched=batched)
+
+
+@register_engine("squaring", heterogeneous=False, batched_tables=False,
+                 energy=True, jittable=True)
+class SquaringEngine(_EngineBase):
+    """Periodic (max,+) matrix squaring, O(log T) matmuls (DESIGN.md
+    §2.3).  Homogeneous only: the trace must be a single-class,
+    single-channel round-robin stream with ways | MAX_WAYS.  Energy is
+    (+,+)-linear in the ops, so on that domain the accumulator is the
+    exact per-op sum — engine-independent by construction."""
+
+    def _periodic_form(self, sim, trace) -> tuple[int, int]:
+        t = np.arange(trace.n_ops)
+        cls = np.asarray(trace.cls)
+        if (trace.channels != 1
+                or np.any(cls != cls[0])
+                or np.any(np.asarray(trace.channel) != 0)
+                or np.any(np.asarray(trace.way) != t % trace.ways)
+                or np.any(np.asarray(trace.parity)
+                          != (t // trace.ways) % 2)):
+            hetero = ", ".join(sorted(
+                n for n, e in _REGISTRY.items() if e.caps.heterogeneous))
+            raise CapabilityError(
+                "engine 'squaring' needs a homogeneous single-channel "
+                f"round-robin stream (heterogeneous engines: {hetero})")
+        _sim._validate_squaring_ways(trace.ways)
+        k = int(cls[0])
+        if float(np.asarray(sim.table.arb_us)[k]) != 0.0:
+            raise CapabilityError(
+                "engine 'squaring' models a dedicated single-channel "
+                "firmware loop (arb_us must be zero)")
+        return k, trace.ways
+
+    def end_time(self, sim, trace, *, batched, segment_len):
+        k, ways = self._periodic_form(sim, trace)
+        fn = sim._closure(
+            ("squaring", k, ways, trace.n_ops, batched),
+            lambda: functools.partial(
+                _sim._squaring_end_time,
+                *(sim._targs[i][k] for i in range(6)),
+                jnp.asarray(ways, jnp.int32),
+                n_pages=trace.n_ops, batched=batched))
+        return float(fn())
+
+    def energy_sums(self, sim, trace, kind, *, batched, segment_len):
+        end = self.end_time(sim, trace, batched=batched,
+                            segment_len=segment_len)
+        return end, sim._linear_energy_sums(trace, kind)
+
+    def steady_channel_end(self, op, ways, *, n_pages, batched):
+        _sim._validate_squaring_ways(ways)
+        return _sim._squaring_end_time(
+            *_op_scalars(op), jnp.asarray(ways, jnp.int32),
+            n_pages=n_pages, batched=batched)
+
+    def sweep_steady(self, scalars, data_bytes, ways, *, n_pages, batched):
+        _sim._validate_squaring_ways(ways)
+        return _sim._sweep_squaring_jit(*scalars, data_bytes, ways,
+                                        n_pages=n_pages, batched=batched)
+
+
+@register_engine("pallas", heterogeneous=True, batched_tables=True,
+                 energy=True, jittable=False)
+class PallasEngine(_EngineBase):
+    """The (max,+) Pallas matrix-fold kernel (TPU-native; interpret on
+    CPU).  The step-matrix dictionary is built host-side per query, so
+    the session closure cache does not apply."""
+
+    def end_time(self, sim, trace, *, batched, segment_len):
+        from repro.kernels.maxplus.ops import trace_end_time_maxplus
+        return float(trace_end_time_maxplus(
+            sim.table, trace, policy=_policy_name(batched)))
+
+    def energy_sums(self, sim, trace, kind, *, batched, segment_len):
+        from repro.kernels.maxplus.ops import trace_energy_maxplus
+        end, sums = trace_energy_maxplus(
+            sim.table, trace, kind, policy=_policy_name(batched))
+        return float(end), np.asarray(sums, np.float64)
+
+    def end_time_batch(self, tables, trace, *, batched, segment_len,
+                       combine="chain"):
+        from repro.kernels.maxplus.ops import trace_end_time_maxplus
+        return np.asarray(trace_end_time_maxplus(
+            list(tables), trace, policy=_policy_name(batched)))
+
+
+@register_engine("oracle", heterogeneous=True, batched_tables=False,
+                 energy=True, jittable=False)
+class OracleEngine(_EngineBase):
+    """The plain-Python event loop (``repro.core.sim_ref``) — the test
+    oracle, now first-class behind the same request surface."""
+
+    def end_time(self, sim, trace, *, batched, segment_len):
+        from repro.core.sim_ref import simulate_trace_ref
+        return float(simulate_trace_ref(sim.table, trace,
+                                        _policy_name(batched)))
+
+    def energy_sums(self, sim, trace, kind, *, batched, segment_len):
+        from repro.core.sim_ref import simulate_trace_energy_ref
+        end, sums = simulate_trace_energy_ref(
+            sim.table, trace, kind, _policy_name(batched))
+        return float(end), np.asarray(sums, np.float64)
+
+
+def _op_scalars(op: PageOpParams):
+    return tuple(jnp.asarray(x, jnp.float32)
+                 for x in (op.cmd_us, op.pre_us, op.slot_us, op.post_lo_us,
+                           op.post_hi_us, op.ctrl_us))
+
+
+# ---------------------------------------------------------------------------
+# Request / response types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimRequest:
+    """One simulation query.  Validation happens here, once: the policy
+    literal, the objective and the engine name are all checked at
+    request construction, so no entry point can silently fall through
+    on a typo."""
+
+    trace: OpTrace
+    policy: Policy | None = None        # None -> the session's default
+    objective: Objective = "end_time"
+    engine: str | None = None           # None -> "scan"
+    segment_len: int | None = 64        # prefix-engine chunk size
+
+    def __post_init__(self):
+        if self.policy is not None:
+            policy_is_batched(self.policy)
+        if self.objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {self.objective!r} "
+                             f"(one of {', '.join(OBJECTIVES)})")
+        if self.engine is not None:
+            get_engine(self.engine)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SimResult:
+    """One simulation answer — the same shape for every engine and
+    objective.  ``energy`` is populated for objective "energy"/"all";
+    ``mb_s`` is user-payload bandwidth (None for payload-free traces,
+    e.g. all-hedged duplicates)."""
+
+    end_us: float
+    mb_s: float | None
+    channel_busy_us: np.ndarray          # [channels] bus occupancy (us)
+    energy: EnergyBreakdown | None
+    engine: str
+    n_ops: int
+    payload_bytes: int
+
+    @property
+    def channel_occupancy(self) -> np.ndarray:
+        """Per-channel bus busy fraction of the makespan."""
+        return self.channel_busy_us / max(self.end_us, 1e-30)
+
+    def describe(self) -> str:
+        occ = "/".join(f"{x:.2f}" for x in self.channel_occupancy)
+        bw = f"{self.mb_s:.1f} MB/s" if self.mb_s is not None else "no payload"
+        return (f"[{self.engine}] {self.n_ops} ops in "
+                f"{self.end_us / 1e3:.2f} ms, {bw}, occ {occ}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheInfo:
+    hits: int
+    misses: int
+    entries: int
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+
+
+class Simulator:
+    """A simulation session bound to one design point.
+
+    Binds an ``SSDConfig`` (or a raw ``OpClassTable``) once: the timing
+    table is converted to device arrays at construction, and every
+    jittable engine's closures are cached on
+    ``(engine, geometry, trace-length bucket, policy, ...)`` so repeated
+    queries are compile- and conversion-free.  All five registered
+    engines answer through :meth:`run`; :meth:`run_many` is the batched
+    serving path (length-bucketed, vmapped); :meth:`sweep` fans one
+    trace out over a batch of design-point tables.
+    """
+
+    def __init__(self, config: SSDConfig | None = None, *,
+                 table: OpClassTable | None = None,
+                 kind: InterfaceKind | str | None = None):
+        if config is None and table is None:
+            raise ValueError("Simulator needs an SSDConfig or an "
+                             "OpClassTable")
+        self.config = config
+        self.table = table if table is not None else op_class_table(config)
+        if kind is not None:
+            self.kind: InterfaceKind | None = InterfaceKind(kind)
+        else:
+            self.kind = config.interface if config is not None else None
+        self.default_policy: Policy = (config.policy if config is not None
+                                       else "eager")
+        self._targs = tuple(jnp.asarray(getattr(self.table, f))
+                            for f in _TABLE_FIELDS)
+        self._e_tables: dict[InterfaceKind, jax.Array] = {}
+        self._e_tables_np: dict[InterfaceKind, np.ndarray] = {}
+        self._closures: dict[tuple, object] = {}
+        self._hits = 0
+        self._misses = 0
+
+    # -- shared per-config sessions ----------------------------------------
+
+    @classmethod
+    def for_config(cls, config: SSDConfig) -> "Simulator":
+        """Process-wide memoised session for a design point — the
+        storage tier, planners and benchmarks all share closures."""
+        return simulator_for(config)
+
+    # -- closure cache ------------------------------------------------------
+
+    def _closure(self, key: tuple, build):
+        fn = self._closures.get(key)
+        if fn is None:
+            self._misses += 1
+            fn = self._closures[key] = build()
+        else:
+            self._hits += 1
+        return fn
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(self._hits, self._misses, len(self._closures))
+
+    def cache_clear(self) -> None:
+        self._closures.clear()
+        self._hits = self._misses = 0
+
+    def _energy_table(self, kind: InterfaceKind) -> jax.Array:
+        e = self._e_tables.get(kind)
+        if e is None:
+            e = self._e_tables[kind] = jnp.asarray(
+                op_phase_energy_uj(self.table, kind))
+        return e
+
+    def _linear_energy_sums(self, trace: OpTrace,
+                            kind: InterfaceKind) -> np.ndarray:
+        """[P] phase sums (uJ) by direct per-op summation — energy is
+        (+,+)-linear, so this is the engine-free evaluation the packed
+        serving path uses.  The float64 phase table is memoised per
+        interface kind like its device-array twin."""
+        e = self._e_tables_np.get(kind)
+        if e is None:
+            e = self._e_tables_np[kind] = np.asarray(
+                op_phase_energy_uj(self.table, kind), np.float64)
+        return e[np.asarray(trace.cls),
+                 np.asarray(trace.parity) % 2].sum(axis=0)
+
+    # -- queries ------------------------------------------------------------
+
+    def _resolve(self, request: SimRequest):
+        policy = request.policy or self.default_policy
+        batched = policy_is_batched(policy)
+        eng = get_engine(request.engine or "scan")
+        if request.objective in ("energy", "all"):
+            if not eng.caps.energy:
+                raise CapabilityError(
+                    f"engine {eng.caps.name!r} does not accumulate energy")
+            if self.kind is None:
+                raise ValueError(
+                    "energy query on a Simulator with no interface kind "
+                    "(pass kind= or bind an SSDConfig)")
+        return eng, batched
+
+    def _result(self, trace: OpTrace, end_us: float, engine: str,
+                energy: EnergyBreakdown | None) -> SimResult:
+        table = self.table
+        payload = trace.total_bytes(table)
+        busy = np.bincount(
+            np.asarray(trace.channel),
+            weights=np.asarray(table.slot_us, np.float64)[
+                np.asarray(trace.cls)],
+            minlength=trace.channels)
+        return SimResult(
+            end_us=end_us,
+            mb_s=(payload / end_us) if payload > 0 else None,
+            channel_busy_us=busy, energy=energy, engine=engine,
+            n_ops=trace.n_ops, payload_bytes=payload)
+
+    def run(self, request: SimRequest | OpTrace, /, **overrides) -> SimResult:
+        """Answer one query.  Accepts a :class:`SimRequest` or a bare
+        ``OpTrace`` plus request fields as keywords."""
+        if not isinstance(request, SimRequest):
+            request = SimRequest(trace=request, **overrides)
+        elif overrides:
+            request = dataclasses.replace(request, **overrides)
+        trace = request.trace
+        if trace.n_ops == 0:
+            raise ValueError("empty trace: no ops to simulate")
+        eng, batched = self._resolve(request)
+        energy = None
+        if request.objective in ("energy", "all"):
+            end, sums = eng.energy_sums(
+                self, trace, self.kind, batched=batched,
+                segment_len=request.segment_len)
+            energy = breakdown_from_sums(
+                sums, end_us=end,
+                payload_bytes=trace.total_bytes(self.table),
+                kind=self.kind, channels=trace.channels)
+            end_us = end
+        else:
+            end_us = eng.end_time(self, trace, batched=batched,
+                                  segment_len=request.segment_len)
+        return self._result(trace, end_us, eng.caps.name, energy)
+
+    def run_many(self, traces, *, policy: Policy | None = None,
+                 objective: Objective = "end_time",
+                 engine: str | None = None,
+                 segment_len: int | None = 64) -> list[SimResult]:
+        """The batched serving path: pack heterogeneous traces into
+        power-of-two length buckets per (channels, bucket) group and
+        evaluate each group in one vmapped masked fold — results are
+        identical to per-trace :meth:`run` (masked padding is a state
+        no-op).  Engines other than ``scan`` fall back to a per-trace
+        loop through the same session cache."""
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r} "
+                             f"(one of {', '.join(OBJECTIVES)})")
+        policy = policy or self.default_policy
+        batched = policy_is_batched(policy)
+        name = engine or "scan"
+        eng = get_engine(name)
+        traces = list(traces)
+        for t in traces:
+            if t.n_ops == 0:
+                raise ValueError("empty trace: no ops to simulate")
+        if name != "scan":
+            return [self.run(SimRequest(trace=t, policy=policy,
+                                        objective=objective, engine=name,
+                                        segment_len=segment_len))
+                    for t in traces]
+        if objective in ("energy", "all") and self.kind is None:
+            raise ValueError(
+                "energy query on a Simulator with no interface kind "
+                "(pass kind= or bind an SSDConfig)")
+        groups: dict[tuple[int, int], list[int]] = {}
+        for i, t in enumerate(traces):
+            groups.setdefault((t.channels, _bucket_len(t.n_ops)),
+                              []).append(i)
+        ends = np.empty(len(traces), np.float64)
+        for (channels, t_b), idxs in groups.items():
+            stacked = [np.stack(cols) for cols in zip(
+                *(_pad_trace_np(traces[i], t_b) for i in idxs))]
+            fn = self._closure(
+                ("scan-many", channels, t_b, batched, len(idxs)),
+                lambda channels=channels: functools.partial(
+                    _sim.trace_end_time_masked_many, *self._targs,
+                    n_channels=channels, batched=batched))
+            ends[idxs] = np.asarray(
+                fn(*(jnp.asarray(s) for s in stacked)))
+        results = []
+        for t, end in zip(traces, ends):
+            energy = None
+            if objective in ("energy", "all"):
+                energy = breakdown_from_sums(
+                    self._linear_energy_sums(t, self.kind),
+                    end_us=float(end),
+                    payload_bytes=t.total_bytes(self.table),
+                    kind=self.kind, channels=t.channels)
+            results.append(self._result(t, float(end), name, energy))
+        return results
+
+    def sweep(self, tables, trace: OpTrace, *,
+              policy: Policy | None = None, engine: str = "prefix",
+              segment_len: int | None = 64,
+              combine: str = "chain") -> np.ndarray:
+        """[B] completion times of one trace under a batch of
+        design-point tables (``tables=None`` sweeps the bound table
+        alone) — the design-space fan-out direction of the serving
+        path."""
+        return sweep_tables(
+            [self.table] if tables is None else tables, trace,
+            policy=policy or self.default_policy, engine=engine,
+            segment_len=segment_len, combine=combine)
+
+
+@functools.lru_cache(maxsize=128)
+def simulator_for(config: SSDConfig) -> Simulator:
+    """Memoised :class:`Simulator` per design point (``SSDConfig`` is a
+    frozen dataclass, so it is the cache key)."""
+    return Simulator(config)
+
+
+# ---------------------------------------------------------------------------
+# Module-level query functions (what the deprecated shims delegate to)
+# ---------------------------------------------------------------------------
+
+
+def sweep_tables(tables, trace: OpTrace, *, policy: Policy = "eager",
+                 engine: str = "prefix", segment_len: int | None = 64,
+                 combine: str = "chain") -> np.ndarray:
+    """[B] completion times (us) of one trace under a batch of
+    design-point tables, dispatched through the registry."""
+    batched = policy_is_batched(policy)
+    eng = get_engine(engine)
+    if trace.n_ops == 0:
+        raise ValueError("empty trace: no ops to simulate")
+    return eng.end_time_batch(list(tables), trace, batched=batched,
+                              segment_len=segment_len, combine=combine)
+
+
+@functools.lru_cache(maxsize=256)
+def _steady_trace_cached(n_pages: int, channels: int, ways: int,
+                         op_cls: int) -> OpTrace:
+    return _trace.steady_trace(n_pages, channels, ways, op_cls)
+
+
+def steady_bandwidth_mb_s(cfg: SSDConfig, mode: str,
+                          n_pages: int = 512) -> float:
+    """SSD-level steady-stream bandwidth (MB/s): all channels simulated
+    jointly against the shared controller, capped by the SATA host link.
+    ``n_pages`` is per channel.  (The session-API home of the old
+    ``sim.ssd_bandwidth_mb_s``.)"""
+    if mode not in ("read", "write"):
+        raise ValueError(f"unknown mode {mode!r} (one of 'read', 'write')")
+    trace = _steady_trace_cached(
+        n_pages, cfg.channels, cfg.ways,
+        _trace.READ if mode == "read" else _trace.WRITE)
+    res = Simulator.for_config(cfg).run(trace, policy=cfg.policy)
+    return float(min(res.mb_s, cfg.sata_mb_s))
+
+
+def steady_channel_bandwidth_mb_s(op: PageOpParams, ways,
+                                  policy: Policy = "eager",
+                                  n_pages: int = 512,
+                                  engine: str = "scan") -> jax.Array:
+    """Steady-stream bandwidth of a single channel (MB/s) for one
+    op-class design point, via any engine with the homogeneous-pattern
+    capability (scan / prefix / squaring)."""
+    batched = policy_is_batched(policy)
+    end = get_engine(engine).steady_channel_end(
+        op, ways, n_pages=n_pages, batched=batched)
+    return (n_pages * op.data_bytes) / end
+
+
+def sweep_steady_bandwidth_mb_s(cmd_us, pre_us, slot_us, post_lo_us,
+                                post_hi_us, ctrl_us, data_bytes, ways,
+                                n_pages: int = 512, batched: bool = False,
+                                engine: str = "scan") -> jax.Array:
+    """Vectorised single-channel steady bandwidth over design points
+    (arrays [N]), via an engine with the sweep capability
+    (scan / squaring)."""
+    scalars = (cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us)
+    return get_engine(engine).sweep_steady(
+        scalars, data_bytes, ways, n_pages=n_pages, batched=batched)
+
+
+__all__ = [
+    "CacheInfo", "CapabilityError", "Engine", "EngineCaps", "OBJECTIVES",
+    "Objective", "Policy", "SimRequest", "SimResult", "Simulator",
+    "engine_capabilities", "get_engine", "register_engine",
+    "registered_engines", "simulator_for", "steady_bandwidth_mb_s",
+    "steady_channel_bandwidth_mb_s", "sweep_steady_bandwidth_mb_s",
+    "sweep_tables",
+]

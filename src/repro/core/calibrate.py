@@ -99,17 +99,18 @@ def stripe_crosscheck() -> dict[tuple[str, str], float]:
     lands at ~C**0.95 on the paper's Table 4 geometries — sub-linear
     power-law scaling in the fudge's neighbourhood, produced by a
     mechanism instead of a hard-coded exponent."""
-    from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
+    from repro.core.api import steady_bandwidth_mb_s
+    from repro.core.sim import SSDConfig
 
     out = {}
     for cell in ("slc", "mlc"):
         for mode in ("read", "write"):
             xs = []
             for channels, ways in ((2, 8), (4, 4)):
-                one = ssd_bandwidth_mb_s(
+                one = steady_bandwidth_mb_s(
                     SSDConfig(cell=CellType(cell), interface=InterfaceKind.CONV,
                               channels=1, ways=ways), mode)
-                many = ssd_bandwidth_mb_s(
+                many = steady_bandwidth_mb_s(
                     SSDConfig(cell=CellType(cell), interface=InterfaceKind.CONV,
                               channels=channels, ways=ways), mode)
                 xs.append(np.log(many / one) / np.log(channels))

@@ -58,7 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sim import MAX_WAYS, PageOpParams
+from repro.core.sim import MAX_WAYS, PageOpParams, policy_is_batched
 
 NEG = -1e30
 
@@ -111,7 +111,7 @@ def op_matrix(layout: StateLayout, *, cmd_us: float, pre_us: float,
     bus, chip = layout.bus(channel), layout.chip(channel, way)
     ctrl, rs = layout.ctrl, layout.rs(channel)
     # start = max over these source columns (+ per-column offsets) + arb:
-    if policy == "batched":
+    if policy_is_batched(policy):
         if way == 0:
             sources = {bus: cmd_us + pre_us}
             a[rs, :] = NEG

@@ -17,20 +17,25 @@ so a single engine handles heterogeneous mixed read/write traffic across
 all channels jointly.  Interchangeable engines evaluate the recurrence
 (DESIGN.md §2):
 
-* ``trace_end_time`` / ``channel_bandwidth_mb_s`` — ``jax.lax.scan`` over
-  trace ops (jit/vmap-able, O(T) depth);
+* ``trace_end_time`` — ``jax.lax.scan`` over trace ops (jit/vmap-able,
+  O(T) depth; ``trace_end_time_masked[_many]`` are the padded-bucket
+  variants the ``repro.core.api`` session cache serves from);
 * ``trace_end_time_prefix`` — the log-depth engine: per-op (max,+) step
-  matrices built in-trace (``repro.core.maxplus_form.op_matrices_jnp``)
-  and folded with a segmented parallel prefix, O(L + log T) depth
-  (DESIGN.md §2.3);
-* ``engine="squaring"`` on ``channel_bandwidth_mb_s`` /
-  ``sweep_bandwidth_mb_s`` — homogeneous streams fold one period and
+  matrices built in-trace (``repro.core.maxplus_form``) and folded with
+  a segmented parallel prefix, O(L + log T) depth (DESIGN.md §2.3);
+* ``_squaring_end_time`` — homogeneous streams fold one period and
   reach ``n_pages`` by repeated (max,+) matrix squaring, O(log n_pages);
 * ``repro.kernels.maxplus`` — the same recurrence as a blocked (max,+)
   matrix fold in Pallas, gathering the per-op-class matrix ``A[idx[t]]``
   per step (TPU-native, batched across design points; also exposes the
   segmented and squaring strategies);
 * ``repro.core.sim_ref`` — plain-Python trace oracle for tests.
+
+All engine *dispatch* lives in ``repro.core.api`` (the registry behind
+the ``Simulator`` session, DESIGN.md §2.5); this module holds only the
+jit-compiled evaluation primitives.  The old query entry points
+(``channel_bandwidth_mb_s`` / ``sweep_bandwidth_mb_s`` /
+``ssd_bandwidth_mb_s``) survive below as deprecated delegating shims.
 
 Every engine can also carry the phase-resolved energy accumulator of
 ``repro.core.energy`` alongside the end-time recurrence
@@ -87,15 +92,19 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import (WRITE_POLL_FIXED_US, InterfaceKind,
+# make_interface / nand_chip are no longer used here since the query
+# entry points moved to repro.core.api, but stay as deliberate
+# re-exports (long-standing import site for tests and callers).
+from repro.core.interface import (WRITE_POLL_FIXED_US, InterfaceKind,  # noqa: F401
                                   InterfaceParams, make_interface)
-from repro.core.nand import CellType, NandChipParams, chip as nand_chip
+from repro.core.nand import CellType, NandChipParams, chip as nand_chip  # noqa: F401
 
 MAX_WAYS = 16
 MAX_CHANNELS = 8
@@ -112,8 +121,24 @@ CTRL_ARB_SCAN_FRAC = 0.1
 
 Policy = Literal["eager", "batched"]
 Mode = Literal["read", "write"]
-# evaluation strategy for the (identical) recurrence — see module docstring
-Engine = Literal["scan", "prefix", "squaring"]
+# evaluation strategy for the (identical) recurrence; the authoritative
+# set is the repro.core.api registry — this literal mirrors it for the
+# deprecated shim signatures
+Engine = Literal["scan", "prefix", "squaring", "pallas", "oracle"]
+
+POLICIES: tuple[str, ...] = ("eager", "batched")
+
+
+def policy_is_batched(policy: str) -> bool:
+    """Validate the ``Policy`` literal once and return its batched-ness.
+
+    Every dispatch layer used to compare ``policy == "batched"`` ad hoc,
+    so a typo like ``"bathced"`` silently simulated ``"eager"``; this is
+    the single place that comparison is allowed to happen."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r} "
+                         f"(one of {', '.join(map(repr, POLICIES))})")
+    return policy == "batched"
 
 
 def controller_arb_us(ctrl_us: float, channels: int) -> float:
@@ -134,6 +159,9 @@ class SSDConfig:
     ways: int = 1
     policy: Policy = "eager"
     sata_mb_s: float = 300.0  # SATA2 ("SATA 3 Gbit/s"), paper footnote 1
+
+    def __post_init__(self):
+        policy_is_batched(self.policy)   # reject typos at construction
 
     def describe(self) -> str:
         return (
@@ -302,6 +330,78 @@ def trace_end_time_energy(
     ((bus_free, chip_free, _, _), acc), _ = jax.lax.scan(
         step, init, _trace_ops(cls, channel, way, parity))
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), acc
+
+
+def _trace_end_time_masked_impl(
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
+        cls, channel, way, parity, valid, n_channels, batched):
+    upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                         ctrl_us, arb_us, batched)
+
+    def step(state, op):
+        k, c, w, par, ok = op
+        new = upd(state, (k, c, w, par))
+        return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state), None
+
+    ops = _trace_ops(cls, channel, way, parity) + (valid.astype(bool),)
+    (bus_free, chip_free, _, _), _ = jax.lax.scan(
+        step, _trace_scan_init(n_channels), ops)
+    return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_end_time_masked(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    cls: jax.Array,          # [T] (T = padded length bucket)
+    channel: jax.Array,      # [T]
+    way: jax.Array,          # [T]
+    parity: jax.Array,       # [T]
+    valid: jax.Array,        # [T] bool; False = padding (state no-op)
+    n_channels: int,
+    batched: bool,
+) -> jax.Array:
+    """``trace_end_time`` with a validity mask: invalid (padding) ops
+    leave the carried state bitwise unchanged, so a trace padded to a
+    power-of-two length bucket produces the *identical* end time while
+    nearby trace lengths share one compiled program — the shape the
+    ``repro.core.api`` session cache serves repeated queries from."""
+    return _trace_end_time_masked_impl(
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
+        cls, channel, way, parity, valid, n_channels, batched)
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_end_time_masked_many(
+    cmd_us: jax.Array,       # [K] one op-class table shared by the batch
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    cls: jax.Array,          # [B, T] a bucket of padded traces
+    channel: jax.Array,      # [B, T]
+    way: jax.Array,          # [B, T]
+    parity: jax.Array,       # [B, T]
+    valid: jax.Array,        # [B, T]
+    n_channels: int,
+    batched: bool,
+) -> jax.Array:
+    """[B] completion times of a *bucket of traces* under one timing
+    table — the packed serving path behind ``Simulator.run_many``:
+    heterogeneous traces padded to a shared length bucket evaluate in
+    one vmapped masked fold."""
+    return jax.vmap(
+        lambda a, b, c, d, v: _trace_end_time_masked_impl(
+            cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
+            arb_us, a, b, c, d, v, n_channels, batched)
+    )(cls, channel, way, parity, valid)
 
 
 # ---------------------------------------------------------------------------
@@ -548,68 +648,28 @@ def channel_bandwidth_mb_s(
     n_pages: int = 512,
     engine: Engine = "scan",
 ) -> jax.Array:
-    """Steady-stream bandwidth of a single channel, MB/s.
-
-    ``engine`` selects the evaluation strategy: the O(T) ``lax.scan``
-    fold, the segmented parallel-prefix fold, or O(log T) periodic
-    matrix squaring (squaring requires ways | MAX_WAYS) — all evaluate
-    the identical recurrence."""
-    if engine not in ("scan", "prefix", "squaring"):
-        raise ValueError(f"unknown engine {engine!r}")
-    scalars = tuple(
-        jnp.asarray(x, jnp.float32)
-        for x in (op.cmd_us, op.pre_us, op.slot_us, op.post_lo_us,
-                  op.post_hi_us, op.ctrl_us))
-    if engine == "squaring":
-        _validate_squaring_ways(ways)
-        end = _squaring_end_time(
-            *scalars, jnp.asarray(ways, jnp.int32), n_pages=n_pages,
-            batched=(policy == "batched"))
-        return (n_pages * op.data_bytes) / end
-    way, parity = _steady_pattern(n_pages, jnp.asarray(ways, jnp.int32))
-    zeros = jnp.zeros((n_pages,), jnp.int32)
-    table = tuple(x[None] for x in scalars) + (jnp.zeros((1,), jnp.float32),)
-    if engine == "prefix":
-        end = trace_end_time_prefix(
-            *table, zeros, zeros, way, parity,
-            n_channels=1, n_ways=MAX_WAYS, batched=(policy == "batched"))
-    else:
-        end = trace_end_time(
-            *table, zeros, zeros, way, parity,
-            n_channels=1, batched=(policy == "batched"))
-    return (n_pages * op.data_bytes) / end  # bytes/us == MB/s
+    """Deprecated shim: use
+    ``repro.api.steady_channel_bandwidth_mb_s`` (same arguments, engine
+    dispatch through the registry).  Numerically identical."""
+    from repro.core import api
+    warnings.warn(
+        "repro.core.sim.channel_bandwidth_mb_s is deprecated; use "
+        "repro.api.steady_channel_bandwidth_mb_s",
+        DeprecationWarning, stacklevel=2)
+    return api.steady_channel_bandwidth_mb_s(
+        op, ways, policy=policy, n_pages=n_pages, engine=engine)
 
 
 def ssd_bandwidth_mb_s(cfg: SSDConfig, mode: Mode, n_pages: int = 512) -> float:
-    """SSD-level bandwidth: all channels simulated jointly against the
-    shared controller (no striping fudge), capped by the SATA2 host link.
-
-    ``n_pages`` is per channel; the joint trace stripes pages round-robin
-    across channels, then ways, with explicit MLC page parity.
-    """
-    iface = make_interface(cfg.interface)
-    nand = nand_chip(cfg.cell)
-    op = page_op_params(iface, nand, mode, cfg.ways)
-    c_count, w_count = cfg.channels, cfg.ways
-    t = np.arange(n_pages * c_count)
-    per_ch = t // c_count
-    end = trace_end_time(
-        jnp.asarray([op.cmd_us], jnp.float32),
-        jnp.asarray([op.pre_us], jnp.float32),
-        jnp.asarray([op.slot_us], jnp.float32),
-        jnp.asarray([op.post_lo_us], jnp.float32),
-        jnp.asarray([op.post_hi_us], jnp.float32),
-        jnp.asarray([op.ctrl_us], jnp.float32),
-        jnp.asarray([controller_arb_us(op.ctrl_us, c_count)], jnp.float32),
-        jnp.zeros((t.size,), jnp.int32),
-        jnp.asarray(t % c_count, jnp.int32),
-        jnp.asarray(per_ch % w_count, jnp.int32),
-        jnp.asarray((per_ch // w_count) % 2, jnp.int32),
-        n_channels=c_count,
-        batched=(cfg.policy == "batched"),
-    )
-    total = (t.size * op.data_bytes) / float(end)
-    return float(min(total, cfg.sata_mb_s))
+    """Deprecated shim: use ``repro.api.steady_bandwidth_mb_s`` (same
+    joint multi-channel simulation through a cached ``Simulator``
+    session).  Numerically identical."""
+    from repro.core import api
+    warnings.warn(
+        "repro.core.sim.ssd_bandwidth_mb_s is deprecated; use "
+        "repro.api.steady_bandwidth_mb_s",
+        DeprecationWarning, stacklevel=2)
+    return api.steady_bandwidth_mb_s(cfg, mode, n_pages=n_pages)
 
 
 # ---------------------------------------------------------------------------
@@ -649,39 +709,29 @@ def sweep_bandwidth_mb_s(
     batched: bool = False,
     engine: Engine = "scan",
 ) -> jax.Array:
-    """Vectorised single-channel bandwidth over design points (arrays [N]).
-
-    Charges the shared-controller occupancy ``ctrl_us`` exactly like
-    ``channel_bandwidth_mb_s`` (the two paths are regression-pinned
-    equal); ``engine="squaring"`` evaluates each point in O(log n_pages)
-    matmuls instead of the O(n_pages) scan (and requires every entry of
-    ``ways`` to divide MAX_WAYS)."""
-    if engine not in ("scan", "squaring"):
-        raise ValueError(f"unknown sweep engine {engine!r} "
-                         "(one of 'scan', 'squaring')")
-    if engine == "squaring":
-        _validate_squaring_ways(ways)
-    return _sweep_bandwidth_jit(
+    """Deprecated shim: use ``repro.api.sweep_steady_bandwidth_mb_s``
+    (same arguments, engine dispatch through the registry).
+    Numerically identical."""
+    from repro.core import api
+    warnings.warn(
+        "repro.core.sim.sweep_bandwidth_mb_s is deprecated; use "
+        "repro.api.sweep_steady_bandwidth_mb_s",
+        DeprecationWarning, stacklevel=2)
+    return api.sweep_steady_bandwidth_mb_s(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
         data_bytes, ways, n_pages=n_pages, batched=batched, engine=engine)
 
 
-@functools.partial(jax.jit, static_argnames=("n_pages", "batched", "engine"))
-def _sweep_bandwidth_jit(
+@functools.partial(jax.jit, static_argnames=("n_pages", "batched"))
+def _sweep_scan_jit(
     cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
-    data_bytes, ways, n_pages: int, batched: bool, engine: Engine,
+    data_bytes, ways, n_pages: int, batched: bool,
 ) -> jax.Array:
+    """Scan-engine half of the homogeneous design-point sweep: charges
+    the shared-controller occupancy ``ctrl_us`` exactly like the
+    per-point channel path (the two are regression-pinned equal)."""
     zeros_i = jnp.zeros((n_pages,), jnp.int32)
     zero_k = jnp.zeros((1,), jnp.float32)
-
-    if engine == "squaring":
-        def one_sq(cmd, pre, slot, lo, hi, ctrl, nbytes, w):
-            end = _squaring_end_time(cmd, pre, slot, lo, hi, ctrl, w,
-                                     n_pages=n_pages, batched=batched)
-            return (n_pages * nbytes) / end
-
-        return jax.vmap(one_sq)(cmd_us, pre_us, slot_us, post_lo_us,
-                                post_hi_us, ctrl_us, data_bytes, ways)
 
     def one(cmd, pre, slot, lo, hi, ctrl, nbytes, w):
         way, parity = _steady_pattern(n_pages, w)
@@ -693,3 +743,21 @@ def _sweep_bandwidth_jit(
 
     return jax.vmap(one)(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
                          ctrl_us, data_bytes, ways)
+
+
+@functools.partial(jax.jit, static_argnames=("n_pages", "batched"))
+def _sweep_squaring_jit(
+    cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
+    data_bytes, ways, n_pages: int, batched: bool,
+) -> jax.Array:
+    """Squaring-engine half of the sweep: each point in O(log n_pages)
+    (max,+) matmuls (every entry of ``ways`` must divide MAX_WAYS —
+    validated by the caller, since tracers cannot be inspected here)."""
+
+    def one_sq(cmd, pre, slot, lo, hi, ctrl, nbytes, w):
+        end = _squaring_end_time(cmd, pre, slot, lo, hi, ctrl, w,
+                                 n_pages=n_pages, batched=batched)
+        return (n_pages * nbytes) / end
+
+    return jax.vmap(one_sq)(cmd_us, pre_us, slot_us, post_lo_us,
+                            post_hi_us, ctrl_us, data_bytes, ways)

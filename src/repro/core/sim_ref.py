@@ -20,13 +20,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.sim import MAX_WAYS, PageOpParams
+from repro.core.sim import MAX_WAYS, PageOpParams, policy_is_batched
 
 
 def _trace_event_loop(table, trace, policy, per_op=None) -> float:
     """The one explicit event loop behind both trace oracles.  Calls
     ``per_op(k, parity)`` after each op's state update when given."""
-    batched = policy == "batched"
+    batched = policy_is_batched(policy)   # typos raise, never fall through
     c_count, w_count = trace.channels, trace.ways
     bus_free = [0.0] * c_count
     chip_free = [[0.0] * w_count for _ in range(c_count)]

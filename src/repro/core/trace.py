@@ -17,18 +17,14 @@ heterogeneous ones are what the paper's simulator could not express.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import chip as nand_chip
 from repro.core.sim import (MAX_CHANNELS, MAX_WAYS, Engine, Policy,
-                            SSDConfig, controller_arb_us, page_op_params,
-                            trace_end_time, trace_end_time_batch,
-                            trace_end_time_energy, trace_end_time_prefix,
-                            trace_end_time_prefix_batch,
-                            trace_end_time_prefix_energy)
+                            SSDConfig, controller_arb_us, page_op_params)
 
 READ, WRITE = 0, 1
 
@@ -262,130 +258,73 @@ def kvoffload_trace(read_bytes_per_token: int, cfg: SSDConfig,
 
 
 # ---------------------------------------------------------------------------
-# Simulation entry points (lax.scan engine)
+# Deprecated query shims (the dispatch now lives in repro.core.api)
 # ---------------------------------------------------------------------------
 
 
 def simulate(table: OpClassTable, trace: OpTrace, policy: Policy = "eager",
              engine: Engine = "scan", segment_len: int | None = 64) -> float:
-    """Completion time (us) of ``trace`` under ``table``.
-
-    ``engine="scan"`` is the O(T) ``lax.scan`` fold; ``engine="prefix"``
-    evaluates the same recurrence as a segmented parallel-prefix (max,+)
-    matrix fold in O(segment_len + log T) depth (DESIGN.md §2.3)."""
-    args = (
-        jnp.asarray(table.cmd_us), jnp.asarray(table.pre_us),
-        jnp.asarray(table.slot_us), jnp.asarray(table.post_lo_us),
-        jnp.asarray(table.post_hi_us), jnp.asarray(table.ctrl_us),
-        jnp.asarray(table.arb_us),
-        jnp.asarray(trace.cls), jnp.asarray(trace.channel),
-        jnp.asarray(trace.way), jnp.asarray(trace.parity),
-    )
-    if engine == "prefix":
-        end = trace_end_time_prefix(
-            *args, n_channels=trace.channels, n_ways=trace.ways,
-            batched=(policy == "batched"), segment_len=segment_len)
-    elif engine == "scan":
-        end = trace_end_time(
-            *args, n_channels=trace.channels,
-            batched=(policy == "batched"))
-    else:   # "squaring" is homogeneous-only; reject rather than fall back
-        raise ValueError(f"unknown trace engine {engine!r} "
-                         "(one of 'scan', 'prefix')")
-    return float(end)
+    """Deprecated shim: use ``repro.api.Simulator.run`` — every
+    registered engine (scan / prefix / squaring / pallas / oracle) is
+    reachable there through one request surface.  Numerically
+    identical."""
+    from repro.core import api
+    warnings.warn(
+        "repro.core.trace.simulate is deprecated; use "
+        "repro.api.Simulator.run", DeprecationWarning, stacklevel=2)
+    return api.Simulator(table=table).run(
+        trace, policy=policy, engine=engine,
+        segment_len=segment_len).end_us
 
 
 def simulate_batch(tables: list[OpClassTable], trace: OpTrace,
                    policy: Policy = "eager", engine: Engine = "prefix",
                    segment_len: int | None = 64,
                    combine: str = "chain") -> np.ndarray:
-    """[B] completion times (us) of one trace under a batch of tables.
-
-    This is the design-space sweep form: the trace-dependent work (op
-    pattern, segment masks) is shared across the batch and the fold
-    vectorises over B design points — where the log-depth prefix engine
-    pays off (DESIGN.md §2.3)."""
-    targs = tuple(
-        jnp.asarray(np.stack([getattr(t, f) for t in tables]))
-        for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us",
-                  "post_hi_us", "ctrl_us", "arb_us"))
-    trargs = (jnp.asarray(trace.cls), jnp.asarray(trace.channel),
-              jnp.asarray(trace.way), jnp.asarray(trace.parity))
-    if engine == "prefix":
-        end = trace_end_time_prefix_batch(
-            *targs, *trargs, n_channels=trace.channels, n_ways=trace.ways,
-            batched=(policy == "batched"), segment_len=segment_len,
-            combine=combine)
-    elif engine == "scan":
-        end = trace_end_time_batch(
-            *targs, *trargs, n_channels=trace.channels,
-            batched=(policy == "batched"))
-    else:   # "squaring" is homogeneous-only; reject rather than fall back
-        raise ValueError(f"unknown trace engine {engine!r} "
-                         "(one of 'scan', 'prefix')")
-    return np.asarray(end)
+    """Deprecated shim: use ``repro.api.sweep_tables`` (or
+    ``Simulator.sweep``).  Numerically identical."""
+    from repro.core import api
+    warnings.warn(
+        "repro.core.trace.simulate_batch is deprecated; use "
+        "repro.api.sweep_tables", DeprecationWarning, stacklevel=2)
+    return np.asarray(api.sweep_tables(
+        list(tables), trace, policy=policy, engine=engine,
+        segment_len=segment_len, combine=combine))
 
 
 def simulate_energy(table: OpClassTable, trace: OpTrace,
                     kind: InterfaceKind | str, policy: Policy = "eager",
                     engine: str = "scan", segment_len: int | None = 64):
-    """Phase-resolved ``EnergyBreakdown`` of ``trace`` under ``table``
-    (DESIGN.md §2.4), computed alongside the end-time recurrence.
-
-    ``engine`` selects where the per-op accumulator rides: the
-    ``lax.scan`` carry (``"scan"``), the segment sums of the parallel-
-    prefix fold (``"prefix"``), or the Pallas ``E[idx[t]]`` gather
-    (``"pallas"``).  ``segment_len`` is the prefix engine's chunk size;
-    the sequential scan/pallas folds have no segment notion and ignore
-    it.  All engines agree to < 1e-3 (CI-gated)."""
-    from repro.core.energy import breakdown_from_sums, op_phase_energy_uj
-
-    if trace.n_ops == 0:
-        raise ValueError("empty trace: no ops to simulate")
-    kind = InterfaceKind(kind)
-    if engine == "pallas":
-        from repro.kernels.maxplus.ops import trace_energy_maxplus
-        end, sums = trace_energy_maxplus(table, trace, kind, policy=policy)
-    elif engine in ("scan", "prefix"):
-        e_op = jnp.asarray(op_phase_energy_uj(table, kind))
-        args = (
-            jnp.asarray(table.cmd_us), jnp.asarray(table.pre_us),
-            jnp.asarray(table.slot_us), jnp.asarray(table.post_lo_us),
-            jnp.asarray(table.post_hi_us), jnp.asarray(table.ctrl_us),
-            jnp.asarray(table.arb_us), e_op,
-            jnp.asarray(trace.cls), jnp.asarray(trace.channel),
-            jnp.asarray(trace.way), jnp.asarray(trace.parity),
-        )
-        if engine == "scan":
-            end, sums = trace_end_time_energy(
-                *args, n_channels=trace.channels,
-                batched=(policy == "batched"))
-        else:
-            end, sums = trace_end_time_prefix_energy(
-                *args, n_channels=trace.channels, n_ways=trace.ways,
-                batched=(policy == "batched"), segment_len=segment_len)
-    else:
-        raise ValueError(f"unknown energy engine {engine!r} "
-                         "(one of 'scan', 'prefix', 'pallas')")
-    return breakdown_from_sums(
-        np.asarray(sums, np.float64), end_us=float(end),
-        payload_bytes=trace.total_bytes(table), kind=kind,
-        channels=trace.channels)
+    """Deprecated shim: use ``repro.api.Simulator.run`` with
+    ``objective="energy"`` (returns a ``SimResult`` whose ``energy`` is
+    this ``EnergyBreakdown``).  Numerically identical."""
+    from repro.core import api
+    warnings.warn(
+        "repro.core.trace.simulate_energy is deprecated; use "
+        "repro.api.Simulator.run(objective='energy')",
+        DeprecationWarning, stacklevel=2)
+    return api.Simulator(table=table, kind=kind).run(
+        trace, policy=policy, engine=engine, segment_len=segment_len,
+        objective="energy").energy
 
 
 def trace_bandwidth_mb_s(table: OpClassTable, trace: OpTrace,
                          policy: Policy = "eager",
                          engine: Engine = "scan") -> float:
-    """Aggregate user-payload bandwidth of the trace, MB/s.
-
-    Rejects empty or payload-free traces (nothing meaningful to price;
-    silently returning 0 or dividing by zero hid real bugs upstream)."""
+    """Deprecated shim: use ``repro.api.Simulator.run`` with
+    ``objective="bandwidth"`` (``SimResult.mb_s``).  Rejects empty or
+    payload-free traces like the original.  Numerically identical."""
+    from repro.core import api
+    warnings.warn(
+        "repro.core.trace.trace_bandwidth_mb_s is deprecated; use "
+        "repro.api.Simulator.run(objective='bandwidth')",
+        DeprecationWarning, stacklevel=2)
     if trace.n_ops == 0:
         raise ValueError("empty trace: no ops to simulate")
-    nbytes = trace.total_bytes(table)
-    if nbytes <= 0:
+    if trace.total_bytes(table) <= 0:
         raise ValueError("trace delivers no payload bytes")
-    return nbytes / simulate(table, trace, policy, engine=engine)
+    return api.Simulator(table=table).run(
+        trace, policy=policy, engine=engine, objective="bandwidth").mb_s
 
 
 _WORKLOADS = {

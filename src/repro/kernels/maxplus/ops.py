@@ -21,6 +21,12 @@ Both take a ``strategy`` (DESIGN.md §2.3):
 
 ``trace_energy_maxplus`` additionally accumulates the phase-resolved
 per-op energies ``E[idx[t]]`` inside the kernel's fold (DESIGN.md §2.4).
+
+Engine-level dispatch lives in ``repro.core.api``: this module is the
+``"pallas"`` entry of the registry, and ``strategy`` remains a
+kernel-local knob selecting the fold shape.  Policy strings are
+validated by ``repro.core.sim.policy_is_batched`` on the matrix-build
+path, so typos raise instead of silently simulating ``eager``.
 """
 
 from __future__ import annotations

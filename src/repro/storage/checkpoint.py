@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core.sim import SSDConfig
 from repro.core.trace import checkpoint_trace
-from repro.storage.ssd_model import estimate_trace
+from repro.storage.ssd_model import estimate_trace_interfaces
 
 CHUNK_BYTES = 16 << 20
 
@@ -124,14 +124,14 @@ class CheckpointEngine:
         final = self.dir / f"step_{step:08d}"
         out.rename(final)
         wall = time.time() - t0
-        modeled = {}
         # the save is an op trace (chunk-striped write burst), priced on
         # the joint multi-channel simulation; the trace depends only on
-        # cell/geometry, not on the interface kind
+        # cell/geometry, not on the interface kind, so one per-interface
+        # fan-out through the cached Simulator sessions prices all three
         tr = checkpoint_trace(nbytes, self.ssd)
-        for kind in ("conv", "sync_only", "proposed"):
-            cfg = dataclasses.replace(self.ssd, interface=kind)
-            modeled[kind] = estimate_trace(tr, cfg, total_bytes=nbytes).seconds
+        modeled = {kind: est.seconds for kind, est in
+                   estimate_trace_interfaces(tr, self.ssd,
+                                             total_bytes=nbytes).items()}
         self._last = SaveResult(step, nbytes, wall, modeled)
         self._gc()
 

@@ -45,7 +45,10 @@ def pipeline_io_trace(pipe, n_batches: int,
     Way-interleaved shard reads, with the pipe's *observed* hedge rate
     re-issued on the neighbouring channel — the input for
     ``repro.storage.ssd_model.estimate_trace`` / trace-aware geometry
-    planning.  Synthetic pipelines do no I/O and return None."""
+    planning (both served by the cached per-config
+    ``repro.api.Simulator`` sessions, so re-pricing a live pipe every
+    few batches is cheap).  Synthetic pipelines do no I/O and return
+    None."""
     if not isinstance(pipe, FileBackedTokens):
         return None
     # a store may have more shards than the modeled SSD has channels

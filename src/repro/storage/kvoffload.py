@@ -22,12 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sim import SSDConfig
 from repro.core.trace import OpTrace, kvoffload_trace
 from repro.models.transformer import ModelConfig
-from repro.storage.ssd_model import estimate_trace
+from repro.storage.ssd_model import estimate_trace_interfaces
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,16 +75,14 @@ def plan_kv_offload(cfg: ModelConfig, seq_len: int, *,
     # and appends one token's KV — a mixed read/write trace per token
     read_mb = cold_total / 1e6
     per_token_mb = (cold_total + cold_rate) / 1e6   # read burst + KV append
-    rates = {}
-    # the trace depends only on geometry/cell, not on the interface kind
-    trace = kvoffload_trace(
-        cold_total, SSDConfig(cell=cell, channels=channels, ways=ways),
-        n_tokens=2, append_bytes_per_token=cold_rate)
-    for kind in InterfaceKind:
-        ssd = SSDConfig(interface=kind, cell=cell, channels=channels,
-                        ways=ways)
-        est = estimate_trace(trace, ssd)   # sustained rate of the mixed window
-        rates[kind.value] = est.bandwidth_mb_s / per_token_mb
+    # the trace depends only on geometry/cell, not on the interface kind;
+    # one fan-out through the cached Simulator sessions prices the mixed
+    # window's sustained rate under all three interfaces
+    base = SSDConfig(cell=cell, channels=channels, ways=ways)
+    trace = kvoffload_trace(cold_total, base, n_tokens=2,
+                            append_bytes_per_token=cold_rate)
+    rates = {kind: est.bandwidth_mb_s / per_token_mb
+             for kind, est in estimate_trace_interfaces(trace, base).items()}
     return KVOffloadPlan(
         applicable=True,
         state_bytes_per_seq=cold_total,

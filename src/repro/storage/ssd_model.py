@@ -8,7 +8,9 @@ interface (CONV / SYNC_ONLY / PROPOSED), cell type and channel/way
 geometry, ``estimate_trace`` returns wall time, aggregate bandwidth and
 controller energy for arbitrary mixed read/write access patterns.
 ``estimate_io`` keeps the legacy bytes+mode interface (a homogeneous
-steady trace).  ``plan_geometry`` inverts the model: find the cheapest
+steady trace).  All pricing flows through the shared per-design-point
+``repro.api.Simulator`` sessions (jit-closure cached, DESIGN.md §2.5).
+``plan_geometry`` inverts the model: find the cheapest
 (channels, ways) meeting a time budget for a *workload* — the paper's
 §5.3.2 trade-off study automated, extended beyond the paper's
 homogeneous streams.
@@ -19,12 +21,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+from repro.core.api import Simulator, steady_bandwidth_mb_s
 from repro.core.energy import ControllerEnergyModel, EnergyBreakdown
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
-from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s
-from repro.core.trace import (OpTrace, READ, op_class_table, simulate,
-                              simulate_energy)
+from repro.core.sim import SSDConfig
+from repro.core.trace import OpTrace, READ
 
 #: Candidate geometries for planning, cheapest first.  Area cost model per
 #: the paper §2.2.1: a channel costs ~4x a way (NAND_IF + ECC block +
@@ -59,19 +61,25 @@ def estimate_trace(trace: OpTrace, cfg: SSDConfig, *,
     steady workload, extrapolate wall time by bytes at the simulated
     sustained bandwidth.  The returned ``energy`` is the phase-resolved
     trace-level breakdown (DESIGN.md §2.4); ``energy_joules`` is its
-    controller total — the paper's constant-power quantity."""
+    controller total — the paper's constant-power quantity.
+
+    Queries go through the shared per-config ``repro.api.Simulator``
+    session, so repeated pricing of the same design point (planning
+    loops, the storage tier's per-interface comparisons) reuses cached
+    jitted closures."""
     assert trace.channels == cfg.channels and trace.ways == cfg.ways, \
         f"trace geometry {trace.channels}x{trace.ways} != config " \
         f"{cfg.channels}x{cfg.ways}"
     if trace.n_ops == 0:
         raise ValueError("empty trace: no ops to estimate")
-    table = op_class_table(cfg)
+    sim = Simulator.for_config(cfg)
+    table = sim.table
     window_bytes = trace.total_bytes(table)
     if window_bytes <= 0:
         raise ValueError("trace delivers no payload bytes (every op is "
                          "payload-masked); nothing to price")
-    breakdown = simulate_energy(table, trace, cfg.interface,
-                                policy=policy or cfg.policy)
+    breakdown = sim.run(trace, policy=policy or cfg.policy,
+                        objective="all").energy
     end_us = breakdown.end_us
     bw = min(window_bytes / end_us, cfg.sata_mb_s)     # bytes/us == MB/s
     nbytes = window_bytes if total_bytes is None else int(total_bytes)
@@ -94,7 +102,7 @@ def estimate_trace(trace: OpTrace, cfg: SSDConfig, *,
 
 def estimate_io(nbytes: int, cfg: SSDConfig, mode: str) -> IOEstimate:
     """Legacy bytes+mode estimate — a homogeneous steady trace."""
-    bw = ssd_bandwidth_mb_s(cfg, mode)
+    bw = steady_bandwidth_mb_s(cfg, mode)
     seconds = nbytes / (bw * 1e6)
     energy = ControllerEnergyModel(cfg.interface).energy_joules(nbytes, bw) \
         * cfg.channels
@@ -163,6 +171,21 @@ def plan_geometry_for_trace(
         budget_s, interface, cell, objective)
 
 
+def estimate_trace_interfaces(trace: OpTrace, base_cfg: SSDConfig, *,
+                              total_bytes: int | None = None
+                              ) -> dict[str, IOEstimate]:
+    """Price one trace under every interface kind at ``base_cfg``'s
+    geometry/cell/policy — the per-interface fan-out the storage tier
+    (checkpoint stall projection, KV-offload feasibility) runs on every
+    save/plan, served from the per-config ``Simulator`` sessions."""
+    return {
+        kind.value: estimate_trace(
+            trace, dataclasses.replace(base_cfg, interface=kind),
+            total_bytes=total_bytes)
+        for kind in InterfaceKind
+    }
+
+
 def compare_interfaces(nbytes: int, mode: str, *, channels: int = 4,
                        ways: int = 8, cell: CellType = CellType.MLC
                        ) -> dict[str, IOEstimate]:
@@ -179,11 +202,7 @@ def compare_interfaces_trace(trace: OpTrace, *, cell: CellType = CellType.MLC,
                              total_bytes: int | None = None
                              ) -> dict[str, IOEstimate]:
     """Interface comparison on an arbitrary op trace."""
-    return {
-        kind.value: estimate_trace(
-            trace,
-            SSDConfig(interface=kind, cell=cell, channels=trace.channels,
-                      ways=trace.ways),
-            total_bytes=total_bytes)
-        for kind in InterfaceKind
-    }
+    return estimate_trace_interfaces(
+        trace,
+        SSDConfig(cell=cell, channels=trace.channels, ways=trace.ways),
+        total_bytes=total_bytes)

@@ -1,0 +1,417 @@
+"""The unified ``repro.api`` surface (DESIGN.md §2.5): API snapshot,
+engine registry/capability dispatch, Simulator jit-closure caching,
+``run_many`` bucket packing, request-layer policy validation, and one
+regression test per deprecated shim (DeprecationWarning + numerically
+identical results)."""
+
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import api as capi
+from repro.core import trace as tr
+from repro.core.interface import InterfaceKind, make_interface
+from repro.core.nand import CellType, chip as nand_chip
+from repro.core.sim import (SSDConfig, channel_bandwidth_mb_s,
+                            page_op_params, policy_is_batched,
+                            ssd_bandwidth_mb_s, sweep_bandwidth_mb_s)
+from repro.core.sim_ref import simulate_trace_energy_ref, simulate_trace_ref
+
+
+def _cfg(channels=2, ways=4, cell=CellType.MLC):
+    return SSDConfig(cell=cell, channels=channels, ways=ways)
+
+
+# --- API-surface snapshot ---------------------------------------------------
+
+#: Public names + signatures of the ``repro.core.api`` surface.  An
+#: intentional API change must update this snapshot (and the DESIGN.md
+#: §2.5 / README migration table alongside it).
+API_SNAPSHOT = {
+    "CacheInfo": "(hits: 'int', misses: 'int', entries: 'int') -> None",
+    "CapabilityError": "<class>",
+    "EngineCaps": "(name: 'str', heterogeneous: 'bool', "
+                  "batched_tables: 'bool', energy: 'bool', "
+                  "jittable: 'bool') -> None",
+    "OBJECTIVES": ("end_time", "bandwidth", "energy", "all"),
+    "SimRequest": "(trace: 'OpTrace', policy: 'Policy | None' = None, "
+                  "objective: 'Objective' = 'end_time', "
+                  "engine: 'str | None' = None, "
+                  "segment_len: 'int | None' = 64) -> None",
+    "SimResult": "(end_us: 'float', mb_s: 'float | None', "
+                 "channel_busy_us: 'np.ndarray', "
+                 "energy: 'EnergyBreakdown | None', engine: 'str', "
+                 "n_ops: 'int', payload_bytes: 'int') -> None",
+    "Simulator": "(config: 'SSDConfig | None' = None, *, "
+                 "table: 'OpClassTable | None' = None, "
+                 "kind: 'InterfaceKind | str | None' = None)",
+    "engine_capabilities": "() -> 'dict[str, EngineCaps]'",
+    "get_engine": "(name: 'str') -> 'Engine'",
+    "register_engine": "(name: 'str', *, heterogeneous: 'bool', "
+                       "batched_tables: 'bool', energy: 'bool', "
+                       "jittable: 'bool')",
+    "registered_engines": "() -> 'tuple[str, ...]'",
+    "simulator_for": "(config: 'SSDConfig') -> 'Simulator'",
+    "steady_bandwidth_mb_s": "(cfg: 'SSDConfig', mode: 'str', "
+                             "n_pages: 'int' = 512) -> 'float'",
+    "steady_channel_bandwidth_mb_s":
+        "(op: 'PageOpParams', ways, policy: 'Policy' = 'eager', "
+        "n_pages: 'int' = 512, engine: 'str' = 'scan') -> 'jax.Array'",
+    "sweep_steady_bandwidth_mb_s":
+        "(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, "
+        "data_bytes, ways, n_pages: 'int' = 512, batched: 'bool' = False, "
+        "engine: 'str' = 'scan') -> 'jax.Array'",
+    "sweep_tables": "(tables, trace: 'OpTrace', *, "
+                    "policy: 'Policy' = 'eager', engine: 'str' = 'prefix', "
+                    "segment_len: 'int | None' = 64, "
+                    "combine: 'str' = 'chain') -> 'np.ndarray'",
+}
+
+SIMULATOR_METHODS = {
+    "run": "(self, request: 'SimRequest | OpTrace', /, **overrides) "
+           "-> 'SimResult'",
+    "run_many": "(self, traces, *, policy: 'Policy | None' = None, "
+                "objective: 'Objective' = 'end_time', "
+                "engine: 'str | None' = None, "
+                "segment_len: 'int | None' = 64) -> 'list[SimResult]'",
+    "sweep": "(self, tables, trace: 'OpTrace', *, "
+             "policy: 'Policy | None' = None, engine: 'str' = 'prefix', "
+             "segment_len: 'int | None' = 64, combine: 'str' = 'chain') "
+             "-> 'np.ndarray'",
+    "cache_info": "(self) -> 'CacheInfo'",
+}
+
+
+def test_api_surface_snapshot():
+    """Freeze the public request/response surface: any signature drift
+    is an intentional, reviewed API change."""
+    for name, want in API_SNAPSHOT.items():
+        obj = getattr(api, name)
+        if not callable(obj):
+            assert obj == want, name
+        elif want == "<class>":
+            assert inspect.isclass(obj), name
+        else:
+            assert str(inspect.signature(obj)) == want, name
+    for name, want in SIMULATOR_METHODS.items():
+        got = str(inspect.signature(getattr(api.Simulator, name)))
+        assert got == want, name
+    # every snapshot name (plus the protocol/type re-exports) is exported
+    assert set(API_SNAPSHOT) <= set(api.__all__)
+    for extra in ("Engine", "Policy", "Objective", "SSDConfig", "OpTrace",
+                  "OpClassTable", "EnergyBreakdown", "workload_trace"):
+        assert extra in api.__all__, extra
+
+
+# --- registry + capability table --------------------------------------------
+
+
+def test_registry_names_and_capabilities():
+    caps = api.engine_capabilities()
+    assert api.registered_engines() == ("oracle", "pallas", "prefix",
+                                        "scan", "squaring")
+    assert caps["scan"].heterogeneous and caps["scan"].jittable
+    assert caps["prefix"].batched_tables and caps["prefix"].energy
+    assert not caps["squaring"].heterogeneous
+    assert not caps["squaring"].batched_tables
+    assert caps["pallas"].batched_tables and not caps["pallas"].jittable
+    assert not caps["oracle"].batched_tables
+    for cap in caps.values():          # every engine accumulates energy
+        assert cap.energy
+        assert cap.name in cap.describe()
+    # the registry instances satisfy the Engine protocol
+    for name in api.registered_engines():
+        assert isinstance(api.get_engine(name), api.Engine)
+
+
+def test_unknown_engine_one_error_everywhere():
+    """Unknown names raise the same registry ValueError (naming the
+    registered engines) from every entry point — the old asymmetry
+    (simulate rejected 'pallas', simulate_energy accepted it) is gone."""
+    cfg = _cfg()
+    sim = api.Simulator.for_config(cfg)
+    trace = tr.mixed_trace(32, 2, 4, 0.5, seed=0)
+    msgs = set()
+    for fn in (lambda: sim.run(trace, engine="sqaring"),
+               lambda: api.SimRequest(trace=trace, engine="sqaring"),
+               lambda: api.sweep_tables([sim.table], trace,
+                                        engine="sqaring")):
+        with pytest.raises(ValueError, match="registered engines") as ei:
+            fn()
+        msgs.add(str(ei.value))
+    assert len(msgs) == 1              # literally the same message
+    # end-time queries route to the Pallas fold now, matching energy
+    end_pl = sim.run(trace, engine="pallas").end_us
+    bd_pl = sim.run(trace, engine="pallas", objective="energy").energy
+    assert end_pl == pytest.approx(sim.run(trace).end_us, rel=1e-4)
+    assert bd_pl.end_us == pytest.approx(end_pl, rel=1e-4)
+
+
+def test_capability_errors_name_alternatives():
+    cfg = _cfg()
+    sim = api.Simulator.for_config(cfg)
+    hetero = tr.mixed_trace(32, 2, 4, 0.5, seed=1)
+    with pytest.raises(api.CapabilityError,      # derived from the registry
+                       match="pallas, prefix, scan"):
+        api.sweep_tables([sim.table], hetero, engine="oracle")
+    with pytest.raises(api.CapabilityError,
+                       match="oracle, pallas, prefix, scan"):
+        sim.run(hetero, engine="squaring")
+    op = page_op_params(make_interface(InterfaceKind.PROPOSED),
+                        nand_chip(CellType.SLC), "read", 4)
+    with pytest.raises(api.CapabilityError, match="scan, squaring"):
+        api.get_engine("prefix").sweep_steady(
+            (None,) * 6, None, None, n_pages=8, batched=False)
+    assert float(api.steady_channel_bandwidth_mb_s(op, 4, n_pages=32)) > 0
+
+
+def test_register_engine_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        @api.register_engine("scan", heterogeneous=True,
+                             batched_tables=True, energy=True, jittable=True)
+        class Dup:
+            pass
+    try:
+        @api.register_engine("test-dummy", heterogeneous=False,
+                             batched_tables=False, energy=False,
+                             jittable=False)
+        class Dummy(capi._EngineBase):
+            def end_time(self, sim, trace, *, batched, segment_len):
+                return 1.0
+        assert "test-dummy" in api.registered_engines()
+        with pytest.raises(api.CapabilityError):
+            api.Simulator.for_config(_cfg()).run(
+                tr.mixed_trace(8, 2, 4, 0.5), engine="test-dummy",
+                objective="energy")
+    finally:
+        capi._REGISTRY.pop("test-dummy")
+
+
+# --- all five engines through one Simulator, end time AND energy ------------
+
+
+@pytest.mark.parametrize("policy", ["eager", "batched"])
+def test_all_engines_agree_through_simulator(policy):
+    """The acceptance grid (sampled): every registered engine answers
+    through `Simulator.run` and agrees with the oracle < 1e-3 on end
+    time and controller energy — heterogeneous engines on mixed traces
+    over channels 1-4 x ways 1-16, squaring on its periodic domain."""
+    for channels, ways in ((1, 1), (1, 16), (2, 4), (4, 8)):
+        cfg = _cfg(channels, ways)
+        sim = api.Simulator.for_config(cfg)
+        trace = tr.mixed_trace(96, channels, ways, 0.6,
+                               seed=channels * 17 + ways)
+        end_ref, sums = simulate_trace_energy_ref(sim.table, trace,
+                                                  cfg.interface, policy)
+        tol = 1e-3 * trace.n_ops + 1e-5 * end_ref
+        ctrl_ref = None
+        for name, caps in api.engine_capabilities().items():
+            t = trace
+            if not caps.heterogeneous:   # squaring: periodic domain
+                if channels != 1:
+                    continue
+                t = tr.steady_trace(96, 1, ways, tr.READ)
+            res = sim.run(t, policy=policy, engine=name, objective="all")
+            want = simulate_trace_ref(sim.table, t, policy)
+            assert abs(res.end_us - want) <= tol, (name, channels, ways)
+            _, ref_sums = simulate_trace_energy_ref(sim.table, t,
+                                                    cfg.interface, policy)
+            np.testing.assert_allclose(res.energy.op_sums_uj(), ref_sums,
+                                       rtol=1e-3, err_msg=name)
+            assert res.engine == name
+
+
+def test_simresult_fields():
+    cfg = _cfg()
+    sim = api.Simulator.for_config(cfg)
+    trace = tr.mixed_trace(64, 2, 4, 0.5, seed=2)
+    res = sim.run(trace, objective="all")
+    assert res.n_ops == 64
+    assert res.payload_bytes == trace.total_bytes(sim.table)
+    assert res.mb_s == pytest.approx(res.payload_bytes / res.end_us)
+    assert res.channel_busy_us.shape == (2,)
+    want_busy = np.bincount(trace.channel,
+                            weights=sim.table.slot_us[trace.cls],
+                            minlength=2)
+    np.testing.assert_allclose(res.channel_busy_us, want_busy, rtol=1e-6)
+    assert np.all(res.channel_occupancy <= 1.0 + 1e-6)
+    assert res.energy is not None and res.energy.idle_j >= 0.0
+    assert "MB/s" in res.describe()
+    # payload-free traces: no bandwidth, still an end time
+    masked = dataclasses.replace(trace,
+                                 payload=np.zeros(trace.n_ops, bool))
+    assert sim.run(masked).mb_s is None
+    with pytest.raises(ValueError, match="empty trace"):
+        sim.run(dataclasses.replace(
+            trace, cls=np.zeros(0, np.int32),
+            channel=np.zeros(0, np.int32), way=np.zeros(0, np.int32),
+            parity=np.zeros(0, np.int32), payload=None))
+
+
+# --- jit-closure cache -------------------------------------------------------
+
+
+def test_jit_cache_hits_on_repeated_queries():
+    sim = api.Simulator(_cfg())
+    trace = tr.mixed_trace(100, 2, 4, 0.5, seed=3)
+    r1 = sim.run(trace)
+    assert sim.cache_info() == api.CacheInfo(hits=0, misses=1, entries=1)
+    r2 = sim.run(trace)
+    assert sim.cache_info() == api.CacheInfo(hits=1, misses=1, entries=1)
+    assert r1.end_us == r2.end_us
+    # a different length in the same power-of-two bucket is also a hit
+    sim.run(tr.mixed_trace(120, 2, 4, 0.5, seed=4))
+    assert sim.cache_info().hits == 2
+    # a different policy is a distinct closure
+    sim.run(trace, policy="batched")
+    assert sim.cache_info().misses == 2
+    sim.cache_clear()
+    assert sim.cache_info() == api.CacheInfo(hits=0, misses=0, entries=0)
+
+
+def test_simulator_for_config_is_shared():
+    cfg = _cfg(channels=1, ways=2)
+    assert api.Simulator.for_config(cfg) is api.simulator_for(cfg)
+    assert api.simulator_for(cfg) is api.simulator_for(
+        SSDConfig(cell=CellType.MLC, channels=1, ways=2))
+
+
+# --- run_many bucket packing -------------------------------------------------
+
+
+def test_run_many_matches_per_trace_run():
+    """Heterogeneous lengths pack into padded buckets; every result is
+    identical to a per-trace run (masked padding is a state no-op), for
+    both objectives and both policies."""
+    cfg = _cfg()
+    sim = api.Simulator.for_config(cfg)
+    traces = [tr.mixed_trace(n, 2, 4, 0.5, seed=i)
+              for i, n in enumerate((33, 100, 257, 100, 64))]
+    for policy in ("eager", "batched"):
+        results = sim.run_many(traces, policy=policy, objective="all")
+        assert len(results) == len(traces)
+        for t, r in zip(traces, results):
+            single = sim.run(t, policy=policy, objective="all")
+            assert r.end_us == single.end_us, t.n_ops
+            assert r.mb_s == pytest.approx(single.mb_s)
+            assert abs(r.energy.controller_j - single.energy.controller_j) \
+                <= 1e-3 * single.energy.controller_j
+            oracle = simulate_trace_ref(sim.table, t, policy)
+            assert abs(r.end_us - oracle) <= 1e-3 * t.n_ops + 1e-5 * oracle
+    # non-scan engines serve run_many through the per-trace path
+    px = sim.run_many(traces[:2], engine="prefix")
+    assert px[0].end_us == pytest.approx(sim.run(traces[0]).end_us,
+                                         rel=1e-5)
+    # empty batches return empty for every objective (no index crash)
+    assert sim.run_many([]) == []
+    assert sim.run_many([], objective="energy") == []
+
+
+# --- policy validation (the silent-fallthrough fix) -------------------------
+
+
+def test_policy_typo_raises_everywhere():
+    """Every layer used to compare ``policy == "batched"`` — a typo
+    silently simulated eager.  Now the request layer (and the frozen
+    config) validate the literal once and raise."""
+    cfg = _cfg()
+    sim = api.Simulator.for_config(cfg)
+    trace = tr.mixed_trace(16, 2, 4, 0.5, seed=5)
+    with pytest.raises(ValueError, match="unknown policy"):
+        policy_is_batched("bathced")
+    with pytest.raises(ValueError, match="unknown policy"):
+        sim.run(trace, policy="bathced")
+    with pytest.raises(ValueError, match="unknown policy"):
+        api.SimRequest(trace=trace, policy="bathced")
+    with pytest.raises(ValueError, match="unknown policy"):
+        sim.run_many([trace], policy="bathced")
+    with pytest.raises(ValueError, match="unknown policy"):
+        SSDConfig(policy="bathced")
+    with pytest.raises(ValueError, match="unknown policy"):
+        tr.simulate(sim.table, trace, policy="bathced")
+    with pytest.raises(ValueError, match="unknown policy"):
+        simulate_trace_ref(sim.table, trace, "bathced")
+    with pytest.raises(ValueError, match="unknown objective"):
+        sim.run(trace, objective="latency")
+    # the two valid literals still route to genuinely different sims
+    assert sim.run(trace, policy="eager").end_us \
+        != sim.run(trace, policy="batched").end_us
+
+
+# --- one regression test per deprecated shim --------------------------------
+
+
+def _mixed():
+    cfg = _cfg()
+    sim = api.Simulator.for_config(cfg)
+    return cfg, sim, tr.mixed_trace(80, 2, 4, 0.6, seed=6)
+
+
+def test_shim_simulate():
+    _, sim, trace = _mixed()
+    with pytest.deprecated_call():
+        old = tr.simulate(sim.table, trace, engine="prefix")
+    assert old == sim.run(trace, engine="prefix").end_us
+
+
+def test_shim_simulate_batch():
+    _, sim, trace = _mixed()
+    tables = [sim.table, sim.table]
+    with pytest.deprecated_call():
+        old = tr.simulate_batch(tables, trace)
+    np.testing.assert_array_equal(old, api.sweep_tables(tables, trace))
+
+
+def test_shim_simulate_energy():
+    cfg, sim, trace = _mixed()
+    with pytest.deprecated_call():
+        old = tr.simulate_energy(sim.table, trace, cfg.interface)
+    new = sim.run(trace, objective="energy").energy
+    assert old.controller_j == new.controller_j
+    np.testing.assert_array_equal(old.op_sums_uj(), new.op_sums_uj())
+
+
+def test_shim_trace_bandwidth_mb_s():
+    _, sim, trace = _mixed()
+    with pytest.deprecated_call():
+        old = tr.trace_bandwidth_mb_s(sim.table, trace)
+    assert old == sim.run(trace, objective="bandwidth").mb_s
+
+
+def test_shim_channel_bandwidth_mb_s():
+    op = page_op_params(make_interface(InterfaceKind.PROPOSED),
+                        nand_chip(CellType.MLC), "write", 4)
+    for engine in ("scan", "prefix", "squaring"):
+        with pytest.deprecated_call():
+            old = float(channel_bandwidth_mb_s(op, 4, n_pages=64,
+                                               engine=engine))
+        new = float(api.steady_channel_bandwidth_mb_s(op, 4, n_pages=64,
+                                                      engine=engine))
+        assert old == new, engine
+
+
+def test_shim_sweep_bandwidth_mb_s():
+    import jax.numpy as jnp
+    ops = [page_op_params(make_interface(k), nand_chip(c), m, 4)
+           for k in InterfaceKind for c in CellType for m in ("read", "write")]
+    args = tuple(jnp.asarray([getattr(o, f) for o in ops], jnp.float32)
+                 for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us",
+                           "post_hi_us", "ctrl_us", "data_bytes"))
+    wv = jnp.asarray([4] * len(ops), jnp.int32)
+    for engine in ("scan", "squaring"):
+        with pytest.deprecated_call():
+            old = np.asarray(sweep_bandwidth_mb_s(*args, wv, n_pages=64,
+                                                  engine=engine))
+        new = np.asarray(api.sweep_steady_bandwidth_mb_s(
+            *args, wv, n_pages=64, engine=engine))
+        np.testing.assert_array_equal(old, new, err_msg=engine)
+
+
+def test_shim_ssd_bandwidth_mb_s():
+    cfg = SSDConfig(cell=CellType.SLC, channels=2, ways=8)
+    with pytest.deprecated_call():
+        old = ssd_bandwidth_mb_s(cfg, "read")
+    assert old == api.steady_bandwidth_mb_s(cfg, "read")

@@ -137,11 +137,23 @@ def test_pallas_periodic_energy_accumulator():
 
 
 def test_simulate_energy_validates_engine():
+    """Unknown engine names raise the registry's ValueError; a
+    registered engine asked outside its capability row (squaring on a
+    heterogeneous trace) raises too — but squaring *is* now reachable
+    for energy on its periodic domain (the old scan/pallas asymmetry is
+    gone)."""
     cfg = SSDConfig(cell=CellType.SLC, channels=1, ways=2)
     table = tr.op_class_table(cfg)
-    trace = tr.steady_trace(8, 1, 2)
+    hetero = tr.mixed_trace(16, 1, 2, read_fraction=0.5, seed=1)
+    assert len(set(hetero.cls.tolist())) == 2   # genuinely heterogeneous
     with pytest.raises(ValueError):
-        tr.simulate_energy(table, trace, cfg.interface, engine="squaring")
+        tr.simulate_energy(table, hetero, cfg.interface, engine="squaring")
+    with pytest.raises(ValueError, match="registered engines"):
+        tr.simulate_energy(table, hetero, cfg.interface, engine="sqauring")
+    steady = tr.steady_trace(8, 1, 2)
+    want = tr.simulate_energy(table, steady, cfg.interface, engine="scan")
+    got = tr.simulate_energy(table, steady, cfg.interface, engine="squaring")
+    assert got.controller_j == pytest.approx(want.controller_j, rel=1e-3)
 
 
 # --- phase table structure --------------------------------------------------

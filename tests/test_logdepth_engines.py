@@ -136,11 +136,17 @@ def test_engine_dispatch_is_validated():
                              n_pages=64, engine="prefix")
     cfg = SSDConfig(cell=CellType.SLC, channels=1, ways=2)
     table = tr.op_class_table(cfg)
-    trace = tr.steady_trace(16, 1, 2)
-    with pytest.raises(ValueError):
-        tr.simulate(table, trace, engine="squaring")
-    with pytest.raises(ValueError):
-        tr.simulate_batch([table], trace, engine="squaring")
+    hetero = tr.mixed_trace(16, 1, 2, read_fraction=0.5, seed=1)
+    with pytest.raises(ValueError):        # outside squaring's capability
+        tr.simulate(table, hetero, engine="squaring")
+    with pytest.raises(ValueError):        # squaring has no batched tables
+        tr.simulate_batch([table], tr.steady_trace(16, 1, 2),
+                          engine="squaring")
+    # ...but the registry now routes squaring's periodic domain through
+    # the same entry point the other engines use (the old asymmetry)
+    steady = tr.steady_trace(16, 1, 2)
+    assert tr.simulate(table, steady, engine="squaring") == pytest.approx(
+        tr.simulate(table, steady, engine="scan"), rel=1e-3)
 
 
 # --- algebra invariants -----------------------------------------------------
