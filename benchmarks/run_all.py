@@ -103,7 +103,8 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import api_bench, freq, roofline, sweep_bench, tables
+    from benchmarks import (api_bench, freq, roofline, sched_bench,
+                            sweep_bench, tables)
 
     t0 = time.perf_counter()
     sections = [
@@ -119,6 +120,10 @@ def main() -> None:
         _section("table5", lambda: tables.run_table5(small=args.smoke)),
         _section("table5_closed_form", tables.run_table5_closed_form),
         _section("sweep", lambda: sweep_bench.run(small=args.smoke)),
+        # latency under load: p99-vs-offered-load curves per way count;
+        # gates (smoke too): arrival-aware cross-engine agreement and
+        # dynamic-dispatch-vs-static-stripe end-time/p99 sanity
+        _section("sched", lambda: sched_bench.run(small=args.smoke)),
     ]
     _check_speedups(sections, args.smoke)
 

@@ -1,0 +1,115 @@
+"""Benchmark: latency under load through the scheduler/dispatch layer
+(DESIGN.md §2.6).
+
+The paper's evaluation is pure throughput — back-to-back homogeneous
+streams.  With request-level workloads the simulator answers the
+questions a serving tier actually asks: what is the p99 request latency
+at a given offered load, and what does way interleaving / dynamic
+dispatch buy at the tail?  This section sweeps open-loop Poisson
+offered load × way count and records p50/p99 per scheduling policy
+(static ``stripe`` lowering vs dynamic ``least_loaded`` dispatch), plus
+a closed-loop queue-depth sweep.
+
+Two gates run even under ``--smoke``:
+
+* **cross-engine agreement** — scan / prefix / pallas / oracle must
+  agree < 1e-3 on an arrival-aware lowered trace (the arrival threading
+  touches four independent implementations of the recurrence);
+* **dynamic-vs-static sanity** — on the hot/cold-skewed multi-tenant
+  family, dynamic least-loaded dispatch must not end later than the
+  static stripe lowering, and must win at the p99 tail.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api import (Simulator, SSDConfig, bursty_stream,
+                       closed_loop_stream, lower_static, multi_tenant,
+                       poisson_stream)
+from repro.core.nand import CellType
+from repro.core.sim_ref import simulate_trace_ref
+
+
+def _agreement_gate(sim: Simulator, load) -> float:
+    """Max rel disagreement of every arrival-capable engine vs the
+    oracle on the stripe-lowered arrival-aware trace."""
+    trace = lower_static(load, sim.config.channels, sim.config.ways).trace
+    ref = simulate_trace_ref(sim.table, trace, "eager")
+    tol_abs = 1e-3 * trace.n_ops + 1e-5 * ref
+    agree = 0.0
+    for engine in ("scan", "prefix", "pallas"):
+        got = sim.run(trace, engine=engine).end_us
+        assert abs(got - ref) <= tol_abs, \
+            f"{engine} disagrees on arrival-aware trace: {got} vs {ref}"
+        agree = max(agree, abs(got - ref) / ref)
+    return agree
+
+
+def run(small: bool = False) -> list[dict]:
+    n_req = 160 if small else 448
+    interarrivals = (60.0, 30.0) if small else (120.0, 60.0, 30.0, 15.0)
+    rows: list[dict] = []
+
+    # --- p99 vs offered load, per way count, both policies ---------------
+    for ways in (2, 4, 8):
+        cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=ways)
+        sim = Simulator.for_config(cfg)
+        for ia in interarrivals:
+            load = poisson_stream(n_req, ia, read_fraction=0.7, seed=11)
+            for policy in ("stripe", "least_loaded"):
+                res = sim.run(load, sched_policy=policy)
+                rows.append({
+                    "name": f"sched/p99_us/w{ways}/ia{ia:g}/{policy}",
+                    "value": round(res.p99_us, 1), "paper": "-"})
+                if policy == "least_loaded":
+                    rows.append({
+                        "name": f"sched/mb_s/w{ways}/ia{ia:g}/{policy}",
+                        "value": round(res.mb_s, 1), "paper": "-"})
+
+    # --- closed-loop queue-depth sweep (fio-style knee) ------------------
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=8)
+    sim = Simulator.for_config(cfg)
+    for qd in (1, 4, 16):
+        load = closed_loop_stream(n_req, qd, service_us=60.0,
+                                  read_fraction=0.7, seed=7)
+        res = sim.run(load, sched_policy="least_loaded")
+        rows.append({"name": f"sched/closed_loop_qd{qd}/p50_us",
+                     "value": round(res.p50_us, 1), "paper": "-"})
+        rows.append({"name": f"sched/closed_loop_qd{qd}/p99_us",
+                     "value": round(res.p99_us, 1), "paper": "-"})
+
+    # --- gates (run even under --smoke) ----------------------------------
+    worst_end = worst_p99 = 0.0
+    for seed in (0, 3):
+        for channels, ways in ((2, 4), (2, 8), (4, 4)):
+            cfg = SSDConfig(cell=CellType.MLC, channels=channels, ways=ways)
+            sim = Simulator.for_config(cfg)
+            hot = bursty_stream(max(60, n_req // 4), burst_len=20,
+                                gap_us=1500.0, read_fraction=0.1,
+                                seed=seed, stream=0)
+            cold = poisson_stream(max(60, n_req // 4),
+                                  mean_interarrival_us=80.0,
+                                  read_fraction=0.9, seed=seed + 100,
+                                  stream=1)
+            load = multi_tenant([hot, cold])
+            st = sim.run(load, sched_policy="stripe")
+            dyn = sim.run(load, sched_policy="least_loaded")
+            worst_end = max(worst_end, dyn.end_us / st.end_us)
+            worst_p99 = max(worst_p99, dyn.p99_us / st.p99_us)
+    assert worst_end <= 1.0 + 1e-6, \
+        f"dynamic dispatch ended later than static stripe: {worst_end}"
+    assert worst_p99 <= 1.0 + 1e-6, \
+        f"dynamic dispatch lost the p99 tail to stripe: {worst_p99}"
+    rows.append({"name": "sched/dyn_vs_static_worst_end_ratio",
+                 "value": round(worst_end, 4), "paper": "<=1"})
+    rows.append({"name": "sched/dyn_vs_static_worst_p99_ratio",
+                 "value": round(worst_p99, 4), "paper": "<=1"})
+
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    agree = _agreement_gate(Simulator.for_config(cfg),
+                            poisson_stream(n_req, 40.0, read_fraction=0.6,
+                                           seed=5))
+    rows.append({"name": "sched/arrival_engine_max_rel_disagreement",
+                 "value": f"{agree:.1e}", "paper": "<1e-3"})
+    return rows

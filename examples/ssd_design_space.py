@@ -7,11 +7,13 @@ read/write op-trace workloads the paper could not express.
 
 import time
 
-from repro.api import Simulator, steady_bandwidth_mb_s, sweep_tables
+from repro.api import (Simulator, build_workload, multi_tenant,
+                       poisson_stream, bursty_stream, steady_bandwidth_mb_s,
+                       sweep_tables)
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sim import SSDConfig
-from repro.core.trace import checkpoint_trace, datapipe_trace, workload_trace
+from repro.core.trace import checkpoint_trace, datapipe_trace
 from repro.storage.kvoffload import plan_kv_offload
 from repro.storage.ssd_model import (compare_interfaces,
                                      compare_interfaces_trace, plan_geometry,
@@ -34,7 +36,7 @@ def main():
     print("   (bandwidth + phase-resolved controller energy, DESIGN.md §2.4)")
     bd = None
     for channels, ways in ((1, 16), (2, 8), (4, 4)):
-        tr = workload_trace("mixed", SSDConfig(channels=channels, ways=ways),
+        tr = build_workload("mixed", SSDConfig(channels=channels, ways=ways),
                             read_fraction=0.7, seed=7)
         ests = compare_interfaces_trace(tr, cell=CellType.MLC)
         row = "  ".join(f"{k}={e.bandwidth_mb_s:6.1f}" for k, e in ests.items())
@@ -50,7 +52,7 @@ def main():
     print("   (one Simulator session per design point; same recurrence,")
     print("    O(segment+log T) depth instead of O(T))")
     cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=8)
-    tr2k = workload_trace("mixed", cfg, n_ops=2048, read_fraction=0.7, seed=3)
+    tr2k = build_workload("mixed", cfg, n_ops=2048, read_fraction=0.7, seed=3)
     sims = [Simulator.for_config(SSDConfig(interface=k, cell=c,
                                            channels=2, ways=8))
             for k in InterfaceKind for c in CellType]
@@ -67,6 +69,38 @@ def main():
     print(f"  scan engine   : {t_scan * 1e3:6.1f} ms for {len(tables)} design points")
     print(f"  prefix engine : {t_px * 1e3:6.1f} ms  (segmented, batched; "
           f"max rel dev {worst:.1e})")
+
+    print("\n== scheduler policy as a design axis (DESIGN.md §2.6) ==")
+    print("   (hot/cold-skewed multi-tenant load: a bursty write tenant")
+    print("    over a Poisson read trickle; p50/p99 request latency per")
+    print("    policy x geometry — dynamic dispatch is the cheap lever")
+    print("    when adding ways/channels is not on the table)")
+    hot = bursty_stream(100, burst_len=20, gap_us=1500.0,
+                        read_fraction=0.1, seed=0, stream=0)
+    cold = poisson_stream(100, mean_interarrival_us=80.0,
+                          read_fraction=0.9, seed=100, stream=1)
+    load = multi_tenant([hot, cold])
+    for channels, ways in ((2, 4), (2, 8), (4, 4)):
+        sim = Simulator.for_config(
+            SSDConfig(cell=CellType.MLC, channels=channels, ways=ways))
+        row = []
+        for policy in ("stripe", "round_robin", "least_loaded",
+                       "earliest_ready"):
+            res = sim.run(load, sched_policy=policy)
+            row.append(f"{policy}={res.p50_us:5.0f}/{res.p99_us:5.0f}")
+        print(f"  {channels}ch x {ways:2d}way : " + "  ".join(row)
+              + "  (p50/p99 us)")
+
+    print("\n== queue-depth sweep: closed-loop client, 2ch x 8way MLC ==")
+    from repro.api import closed_loop_stream
+    sim = Simulator.for_config(SSDConfig(cell=CellType.MLC, channels=2,
+                                         ways=8))
+    for qd in (1, 2, 4, 8, 16, 32):
+        res = sim.run(closed_loop_stream(384, qd, service_us=60.0,
+                                         read_fraction=0.7, seed=9),
+                      sched_policy="least_loaded")
+        print(f"  QD={qd:2d}: p50 {res.p50_us:7.1f} us   "
+              f"p99 {res.p99_us:7.1f} us   {res.mb_s:6.1f} MB/s")
 
     print("\n== checkpoint-stall planning: 2.7B params (minicpm), bf16+opt ==")
     print("   (MLC tier first; fall back to an SLC tier when contention-")

@@ -3,16 +3,24 @@
 
 Quickstart::
 
-    from repro.api import Simulator, SSDConfig, workload_trace
+    from repro.api import Simulator, SSDConfig, build_workload
 
     cfg = SSDConfig(channels=4, ways=8)
     sim = Simulator.for_config(cfg)             # shared, jit-cached session
-    res = sim.run(workload_trace("mixed", cfg, read_fraction=0.7),
+    res = sim.run(build_workload("mixed", cfg, read_fraction=0.7),
                   objective="all")
     print(res.describe(), res.energy.nj_per_byte)
 
+Latency under load (request-level workloads, DESIGN.md §2.6)::
+
+    from repro.api import poisson_stream
+
+    load = poisson_stream(512, mean_interarrival_us=40.0, seed=0)
+    res = sim.run(load, sched_policy="least_loaded")   # dynamic dispatch
+    print(res.p50_us, res.p99_us)
+
 See DESIGN.md §2.5 for the request/response model, the engine registry
-and the cache keying.
+and the cache keying; §2.6 for workloads and scheduling policies.
 """
 
 from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
@@ -25,9 +33,17 @@ from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
 from repro.core.energy import EnergyBreakdown
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
+from repro.core.sched import (DYNAMIC_POLICIES, LoweredWorkload,
+                              SCHED_POLICIES, STATIC_POLICIES, lower_static,
+                              policy_is_dynamic)
 from repro.core.sim import PageOpParams, SSDConfig
 from repro.core.trace import (OpClassTable, OpTrace, READ, WRITE,
                               op_class_table, workload_trace)
+from repro.core.workload import (RequestStream, build_workload,
+                                 bursty_stream, checkpoint_requests,
+                                 closed_loop_stream, datapipe_requests,
+                                 kvoffload_requests, multi_tenant,
+                                 poisson_stream)
 
 __all__ = [
     # the session API proper
@@ -37,6 +53,12 @@ __all__ = [
     "registered_engines", "simulator_for", "steady_bandwidth_mb_s",
     "steady_channel_bandwidth_mb_s", "sweep_steady_bandwidth_mb_s",
     "sweep_tables",
+    # the request-level workload + scheduler layer (DESIGN.md §2.6)
+    "DYNAMIC_POLICIES", "LoweredWorkload", "RequestStream",
+    "SCHED_POLICIES", "STATIC_POLICIES", "build_workload", "bursty_stream",
+    "checkpoint_requests", "closed_loop_stream", "datapipe_requests",
+    "kvoffload_requests", "lower_static", "multi_tenant",
+    "policy_is_dynamic", "poisson_stream",
     # the types a request/result is made of
     "CellType", "EnergyBreakdown", "InterfaceKind", "OpClassTable",
     "OpTrace", "PageOpParams", "READ", "SSDConfig", "WRITE",

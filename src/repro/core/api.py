@@ -41,9 +41,18 @@ incompatible result types (bare floats, arrays, ``EnergyBreakdown``,
   request layer — a typo like ``"bathced"`` raises instead of silently
   simulating ``"eager"``.
 
+Above the trace layer, requests are first-class (DESIGN.md §2.6): a
+``SimRequest`` may carry a placement-free
+``repro.core.workload.RequestStream`` plus a ``sched_policy`` — static
+policies lower offline through ``repro.core.sched`` and reach every
+engine; dynamic policies require the ``dispatch`` capability and run
+the joint dispatch+simulate fold, attaching per-request latency
+percentiles (``SimResult.p50_us`` / ``p99_us``) to the answer.
+
 The legacy functions (``trace.simulate[_batch]``, ``simulate_energy``,
 ``trace_bandwidth_mb_s``, ``sim.channel_bandwidth_mb_s`` /
-``sweep_bandwidth_mb_s`` / ``ssd_bandwidth_mb_s``) survive as thin
+``sweep_bandwidth_mb_s`` / ``ssd_bandwidth_mb_s``,
+``trace.workload_trace``) survive as thin
 shims that emit ``DeprecationWarning`` and delegate here; a
 ``filterwarnings = error::DeprecationWarning:repro\\.`` rule in
 pytest.ini (and the same programmatic filter in ``benchmarks/run_all``)
@@ -61,14 +70,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sched as _sched
 from repro.core import sim as _sim
 from repro.core import trace as _trace
 from repro.core.energy import (EnergyBreakdown, breakdown_from_sums,
                                op_phase_energy_uj)
 from repro.core.interface import InterfaceKind
+from repro.core.sched import LoweredWorkload
 from repro.core.sim import (MAX_WAYS, PageOpParams, Policy, SSDConfig,
                             policy_is_batched)
 from repro.core.trace import OpClassTable, OpTrace, op_class_table
+from repro.core.workload import RequestStream, request_ops
 
 Objective = Literal["end_time", "bandwidth", "energy", "all"]
 OBJECTIVES: tuple[str, ...] = ("end_time", "bandwidth", "energy", "all")
@@ -97,10 +109,13 @@ class EngineCaps:
     batched_tables: bool  # one trace x stacked design-point tables
     energy: bool          # phase-resolved energy accumulation
     jittable: bool        # pure-jax: Simulator caches jitted closures
+    arrivals: bool = False  # arrival-aware traces (request workloads)
+    dispatch: bool = False  # joint dispatch+simulate (dynamic sched policies)
 
     def describe(self) -> str:
         flags = [k for k in ("heterogeneous", "batched_tables", "energy",
-                             "jittable") if getattr(self, k)]
+                             "jittable", "arrivals", "dispatch")
+                 if getattr(self, k)]
         return f"{self.name}: {', '.join(flags) or 'none'}"
 
 
@@ -127,7 +142,8 @@ _REGISTRY: dict[str, Engine] = {}
 
 
 def register_engine(name: str, *, heterogeneous: bool, batched_tables: bool,
-                    energy: bool, jittable: bool):
+                    energy: bool, jittable: bool, arrivals: bool = False,
+                    dispatch: bool = False):
     """Class decorator: instantiate and register an engine under ``name``
     with its declared capability row.  Names are unique."""
 
@@ -137,7 +153,8 @@ def register_engine(name: str, *, heterogeneous: bool, batched_tables: bool,
         inst = cls()
         inst.caps = EngineCaps(name=name, heterogeneous=heterogeneous,
                                batched_tables=batched_tables, energy=energy,
-                               jittable=jittable)
+                               jittable=jittable, arrivals=arrivals,
+                               dispatch=dispatch)
         _REGISTRY[name] = inst
         return cls
 
@@ -175,9 +192,29 @@ def _bucket_len(n: int, floor: int = 64) -> int:
     return max(floor, 1 << max(0, (n - 1).bit_length()))
 
 
+def _payload_latencies(lowered: LoweredWorkload, completion_us,
+                       stream: RequestStream) -> np.ndarray:
+    """Per-request latencies restricted to *payload* requests: hedged
+    duplicates are transport, not requests — a duplicate queueing
+    behind its primary must not inflate the reported tail.  (The
+    first-response-wins latency *credit* is conservatively not modeled:
+    the primary's own completion is the reported bound.)"""
+    lat = lowered.request_latencies(completion_us)
+    pay = stream.payload_mask()
+    return lat if pay.all() else lat[pay]
+
+
+def _op_arrivals(trace: OpTrace) -> np.ndarray:
+    """Per-op arrival array for the engines (zeros = back-to-back)."""
+    if trace.arrival_us is None:
+        return np.zeros(trace.n_ops, np.float32)
+    return np.asarray(trace.arrival_us, np.float32)
+
+
 def _trace_args(trace: OpTrace):
     return (jnp.asarray(trace.cls), jnp.asarray(trace.channel),
-            jnp.asarray(trace.way), jnp.asarray(trace.parity))
+            jnp.asarray(trace.way), jnp.asarray(trace.parity),
+            jnp.asarray(_op_arrivals(trace)))
 
 
 def _pad_trace_np(trace: OpTrace, t_bucket: int):
@@ -191,6 +228,7 @@ def _pad_trace_np(trace: OpTrace, t_bucket: int):
             np.pad(np.asarray(trace.channel), (0, pad)),
             np.pad(np.asarray(trace.way), (0, pad)),
             np.pad(np.asarray(trace.parity), (0, pad)),
+            np.pad(_op_arrivals(trace), (0, pad)),
             valid)
 
 
@@ -199,14 +237,15 @@ def _padded_trace_args(trace: OpTrace, t_bucket: int):
 
 
 def _steady_channel_args(op: PageOpParams, ways, n_pages: int):
-    """(table columns, cls zeros, way, parity) of a single-channel
-    round-robin stream over one op class — shared by every engine with
-    the homogeneous-pattern capability."""
+    """(table columns, cls zeros, way, parity, arrival zeros) of a
+    single-channel round-robin stream over one op class — shared by
+    every engine with the homogeneous-pattern capability."""
     scalars = _op_scalars(op)
     way, parity = _sim._steady_pattern(n_pages, jnp.asarray(ways, jnp.int32))
     zeros = jnp.zeros((n_pages,), jnp.int32)
+    zeros_f = jnp.zeros((n_pages,), jnp.float32)
     table = tuple(x[None] for x in scalars) + (jnp.zeros((1,), jnp.float32),)
-    return table, zeros, way, parity
+    return table, zeros, way, parity, zeros_f
 
 
 def _stacked_table_args(tables: list[OpClassTable]):
@@ -243,9 +282,21 @@ class _EngineBase:
                      batched: bool):
         self._unsupported("homogeneous design-point sweeps", "sweep_steady")
 
+    def completions(self, sim: "Simulator", trace: OpTrace, *,
+                    batched: bool) -> tuple[float, np.ndarray]:
+        """(end_us, [T] per-op completion times) — what request-latency
+        percentiles are computed from."""
+        self._unsupported("per-op completion times", "completions")
+
+    def dispatch_run(self, sim: "Simulator", cls, arrival_us, *,
+                     n_channels: int, n_ways: int, rule: str):
+        """Joint dispatch+simulate under a dynamic sched policy; returns
+        (end_us, completion[T], channel[T], way[T], parity[T])."""
+        self._unsupported("dynamic dispatch policies", "dispatch_run")
+
 
 @register_engine("scan", heterogeneous=True, batched_tables=True,
-                 energy=True, jittable=True)
+                 energy=True, jittable=True, arrivals=True, dispatch=True)
 class ScanEngine(_EngineBase):
     """O(T) ``lax.scan`` fold (DESIGN.md §2.2) — the default engine.
     Session queries run the masked fold padded to length buckets, so
@@ -259,6 +310,28 @@ class ScanEngine(_EngineBase):
                 _sim.trace_end_time_masked, *sim._targs,
                 n_channels=trace.channels, batched=batched))
         return float(fn(*_padded_trace_args(trace, t_b)))
+
+    def completions(self, sim, trace, *, batched):
+        t_b = _bucket_len(trace.n_ops)
+        fn = sim._closure(
+            ("scan-completions", trace.channels, t_b, batched),
+            lambda: functools.partial(
+                _sim.trace_completions_masked, *sim._targs,
+                n_channels=trace.channels, batched=batched))
+        end, comp = fn(*_padded_trace_args(trace, t_b))
+        return float(end), np.asarray(comp, np.float64)[: trace.n_ops]
+
+    def dispatch_run(self, sim, cls, arrival_us, *, n_channels, n_ways,
+                     rule):
+        fn = sim._closure(
+            ("scan-dispatch", n_channels, n_ways, len(cls), rule),
+            lambda: functools.partial(
+                _sim.dispatch_trace, *sim._targs,
+                n_channels=n_channels, n_ways=n_ways, rule=rule))
+        end, comp, chan, way, par = fn(jnp.asarray(cls, jnp.int32),
+                                       jnp.asarray(arrival_us, jnp.float32))
+        return (float(end), np.asarray(comp, np.float64),
+                np.asarray(chan), np.asarray(way), np.asarray(par))
 
     def energy_sums(self, sim, trace, kind, *, batched, segment_len):
         fn = sim._closure(
@@ -278,9 +351,11 @@ class ScanEngine(_EngineBase):
         return np.asarray(end)
 
     def steady_channel_end(self, op, ways, *, n_pages, batched):
-        table, zeros, way, parity = _steady_channel_args(op, ways, n_pages)
+        table, zeros, way, parity, arr = _steady_channel_args(
+            op, ways, n_pages)
         return _sim.trace_end_time(
-            *table, zeros, zeros, way, parity, n_channels=1, batched=batched)
+            *table, zeros, zeros, way, parity, arr,
+            n_channels=1, batched=batched)
 
     def sweep_steady(self, scalars, data_bytes, ways, *, n_pages, batched):
         return _sim._sweep_scan_jit(*scalars, data_bytes, ways,
@@ -288,7 +363,7 @@ class ScanEngine(_EngineBase):
 
 
 @register_engine("prefix", heterogeneous=True, batched_tables=True,
-                 energy=True, jittable=True)
+                 energy=True, jittable=True, arrivals=True)
 class PrefixEngine(_EngineBase):
     """Segmented parallel-prefix (max,+) fold, O(L + log T) depth
     (DESIGN.md §2.3); energy rides the same chunking as segment sums."""
@@ -324,9 +399,10 @@ class PrefixEngine(_EngineBase):
         return np.asarray(end)
 
     def steady_channel_end(self, op, ways, *, n_pages, batched):
-        table, zeros, way, parity = _steady_channel_args(op, ways, n_pages)
+        table, zeros, way, parity, arr = _steady_channel_args(
+            op, ways, n_pages)
         return _sim.trace_end_time_prefix(
-            *table, zeros, zeros, way, parity,
+            *table, zeros, zeros, way, parity, arr,
             n_channels=1, n_ways=MAX_WAYS, batched=batched)
 
 
@@ -342,6 +418,12 @@ class SquaringEngine(_EngineBase):
     def _periodic_form(self, sim, trace) -> tuple[int, int]:
         t = np.arange(trace.n_ops)
         cls = np.asarray(trace.cls)
+        if trace.arrival_us is not None and np.any(trace.arrival_us > 0):
+            okay = ", ".join(sorted(
+                n for n, e in _REGISTRY.items() if e.caps.arrivals))
+            raise CapabilityError(
+                "engine 'squaring' folds a fixed period matrix — per-op "
+                f"arrivals break periodicity (arrival-aware engines: {okay})")
         if (trace.channels != 1
                 or np.any(cls != cls[0])
                 or np.any(np.asarray(trace.channel) != 0)
@@ -390,7 +472,7 @@ class SquaringEngine(_EngineBase):
 
 
 @register_engine("pallas", heterogeneous=True, batched_tables=True,
-                 energy=True, jittable=False)
+                 energy=True, jittable=False, arrivals=True)
 class PallasEngine(_EngineBase):
     """The (max,+) Pallas matrix-fold kernel (TPU-native; interpret on
     CPU).  The step-matrix dictionary is built host-side per query, so
@@ -415,7 +497,7 @@ class PallasEngine(_EngineBase):
 
 
 @register_engine("oracle", heterogeneous=True, batched_tables=False,
-                 energy=True, jittable=False)
+                 energy=True, jittable=False, arrivals=True)
 class OracleEngine(_EngineBase):
     """The plain-Python event loop (``repro.core.sim_ref``) — the test
     oracle, now first-class behind the same request surface."""
@@ -424,6 +506,12 @@ class OracleEngine(_EngineBase):
         from repro.core.sim_ref import simulate_trace_ref
         return float(simulate_trace_ref(sim.table, trace,
                                         _policy_name(batched)))
+
+    def completions(self, sim, trace, *, batched):
+        from repro.core.sim_ref import simulate_trace_completions_ref
+        end, comp = simulate_trace_completions_ref(
+            sim.table, trace, _policy_name(batched))
+        return float(end), comp
 
     def energy_sums(self, sim, trace, kind, *, batched, segment_len):
         from repro.core.sim_ref import simulate_trace_energy_ref
@@ -446,17 +534,34 @@ def _op_scalars(op: PageOpParams):
 @dataclasses.dataclass(frozen=True)
 class SimRequest:
     """One simulation query.  Validation happens here, once: the policy
-    literal, the objective and the engine name are all checked at
-    request construction, so no entry point can silently fall through
-    on a typo."""
+    literals (issue *and* scheduler), the objective and the engine name
+    are all checked at request construction, so no entry point can
+    silently fall through on a typo.
 
-    trace: OpTrace
+    Exactly one of ``trace`` (placed ops) or ``workload`` (a
+    placement-free ``RequestStream``) must be given.  A workload query
+    also accepts ``sched_policy``: static policies lower offline to a
+    trace any engine can evaluate; dynamic policies need an engine with
+    the ``dispatch`` capability (enforced by the registry) and produce
+    per-request latency percentiles on the result."""
+
+    trace: OpTrace | None = None
     policy: Policy | None = None        # None -> the session's default
     objective: Objective = "end_time"
     engine: str | None = None           # None -> "scan"
     segment_len: int | None = 64        # prefix-engine chunk size
+    workload: RequestStream | None = None
+    sched_policy: str | None = None     # None -> "stripe" (workload only)
 
     def __post_init__(self):
+        if (self.trace is None) == (self.workload is None):
+            raise ValueError("SimRequest needs exactly one of trace= or "
+                             "workload=")
+        if self.sched_policy is not None:
+            if self.workload is None:
+                raise ValueError("sched_policy applies to workload "
+                                 "requests (the trace is already placed)")
+            _sched.policy_is_dynamic(self.sched_policy)   # validates
         if self.policy is not None:
             policy_is_batched(self.policy)
         if self.objective not in OBJECTIVES:
@@ -471,7 +576,10 @@ class SimResult:
     """One simulation answer — the same shape for every engine and
     objective.  ``energy`` is populated for objective "energy"/"all";
     ``mb_s`` is user-payload bandwidth (None for payload-free traces,
-    e.g. all-hedged duplicates)."""
+    e.g. all-hedged duplicates).  Workload queries additionally carry
+    per-request latencies (when the serving engine emits per-op
+    completions — scan / oracle / every dynamic dispatch; the log-depth
+    engines answer makespan-only and leave it None)."""
 
     end_us: float
     mb_s: float | None
@@ -480,17 +588,35 @@ class SimResult:
     engine: str
     n_ops: int
     payload_bytes: int
+    request_lat_us: np.ndarray | None = None   # [R] per-request latency
+    sched_policy: str | None = None            # workload queries only
 
     @property
     def channel_occupancy(self) -> np.ndarray:
         """Per-channel bus busy fraction of the makespan."""
         return self.channel_busy_us / max(self.end_us, 1e-30)
 
+    @property
+    def p50_us(self) -> float | None:
+        """Median request latency (workload queries with completions)."""
+        if self.request_lat_us is None:
+            return None
+        return float(np.percentile(self.request_lat_us, 50))
+
+    @property
+    def p99_us(self) -> float | None:
+        """99th-percentile request latency."""
+        if self.request_lat_us is None:
+            return None
+        return float(np.percentile(self.request_lat_us, 99))
+
     def describe(self) -> str:
         occ = "/".join(f"{x:.2f}" for x in self.channel_occupancy)
         bw = f"{self.mb_s:.1f} MB/s" if self.mb_s is not None else "no payload"
+        lat = ("" if self.request_lat_us is None else
+               f", p50/p99 {self.p50_us:.0f}/{self.p99_us:.0f} us")
         return (f"[{self.engine}] {self.n_ops} ops in "
-                f"{self.end_us / 1e3:.2f} ms, {bw}, occ {occ}")
+                f"{self.end_us / 1e3:.2f} ms, {bw}, occ {occ}{lat}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -588,7 +714,7 @@ class Simulator:
 
     # -- queries ------------------------------------------------------------
 
-    def _resolve(self, request: SimRequest):
+    def _resolve(self, request: SimRequest, trace: OpTrace | None = None):
         policy = request.policy or self.default_policy
         batched = policy_is_batched(policy)
         eng = get_engine(request.engine or "scan")
@@ -600,10 +726,19 @@ class Simulator:
                 raise ValueError(
                     "energy query on a Simulator with no interface kind "
                     "(pass kind= or bind an SSDConfig)")
+        if (trace is not None and trace.arrival_us is not None
+                and np.any(trace.arrival_us > 0) and not eng.caps.arrivals):
+            okay = ", ".join(n for n in registered_engines()
+                             if _REGISTRY[n].caps.arrivals)
+            raise CapabilityError(
+                f"engine {eng.caps.name!r} cannot consume arrival-aware "
+                f"traces (engines that can: {okay})")
         return eng, batched
 
     def _result(self, trace: OpTrace, end_us: float, engine: str,
-                energy: EnergyBreakdown | None) -> SimResult:
+                energy: EnergyBreakdown | None,
+                request_lat_us: np.ndarray | None = None,
+                sched_policy: str | None = None) -> SimResult:
         table = self.table
         payload = trace.total_bytes(table)
         busy = np.bincount(
@@ -615,33 +750,118 @@ class Simulator:
             end_us=end_us,
             mb_s=(payload / end_us) if payload > 0 else None,
             channel_busy_us=busy, energy=energy, engine=engine,
-            n_ops=trace.n_ops, payload_bytes=payload)
+            n_ops=trace.n_ops, payload_bytes=payload,
+            request_lat_us=request_lat_us, sched_policy=sched_policy)
 
-    def run(self, request: SimRequest | OpTrace, /, **overrides) -> SimResult:
-        """Answer one query.  Accepts a :class:`SimRequest` or a bare
-        ``OpTrace`` plus request fields as keywords."""
-        if not isinstance(request, SimRequest):
+    def _breakdown(self, sums, end_us: float, trace: OpTrace):
+        return breakdown_from_sums(
+            sums, end_us=end_us,
+            payload_bytes=trace.total_bytes(self.table),
+            kind=self.kind, channels=trace.channels)
+
+    def run(self, request: SimRequest | OpTrace | RequestStream, /,
+            **overrides) -> SimResult:
+        """Answer one query.  Accepts a :class:`SimRequest`, a bare
+        ``OpTrace``, or a bare ``RequestStream`` (a workload query under
+        ``sched_policy``, default static stripe) plus request fields as
+        keywords."""
+        if isinstance(request, RequestStream):
+            request = SimRequest(workload=request, **overrides)
+        elif not isinstance(request, SimRequest):
             request = SimRequest(trace=request, **overrides)
         elif overrides:
             request = dataclasses.replace(request, **overrides)
+        if request.workload is not None:
+            return self._run_workload(request)
         trace = request.trace
         if trace.n_ops == 0:
             raise ValueError("empty trace: no ops to simulate")
-        eng, batched = self._resolve(request)
+        trace.validate_against(self.table)
+        eng, batched = self._resolve(request, trace)
         energy = None
         if request.objective in ("energy", "all"):
             end, sums = eng.energy_sums(
                 self, trace, self.kind, batched=batched,
                 segment_len=request.segment_len)
-            energy = breakdown_from_sums(
-                sums, end_us=end,
-                payload_bytes=trace.total_bytes(self.table),
-                kind=self.kind, channels=trace.channels)
+            energy = self._breakdown(sums, end, trace)
             end_us = end
         else:
             end_us = eng.end_time(self, trace, batched=batched,
                                   segment_len=request.segment_len)
         return self._result(trace, end_us, eng.caps.name, energy)
+
+    def _run_workload(self, request: SimRequest) -> SimResult:
+        """Workload queries: lower the request stream through the
+        scheduler (static policies offline, dynamic policies as the
+        joint dispatch fold) and attach per-request latencies when the
+        engine emits per-op completions (DESIGN.md §2.6)."""
+        if self.config is None:
+            raise ValueError(
+                "workload queries need a Simulator bound to an SSDConfig "
+                "(the scheduler needs the channel/way geometry)")
+        stream = request.workload
+        if stream.n_requests == 0:
+            raise ValueError("empty workload: no requests to simulate")
+        if int(np.max(stream.op_cls)) >= self.table.n_classes:
+            # checked before the dispatch fold runs: a clamped-garbage
+            # simulation followed by a numpy IndexError is not a report
+            raise ValueError(
+                f"RequestStream.op_cls out of range: max "
+                f"{int(np.max(stream.op_cls))} >= table.n_classes "
+                f"{self.table.n_classes}")
+        policy_s = request.sched_policy or "stripe"
+        eng, batched = self._resolve(request)
+        channels, ways = self.config.channels, self.config.ways
+        if _sched.policy_is_dynamic(policy_s):
+            # registry-enforced: engines without the dispatch capability
+            # raise CapabilityError naming the ones that have it
+            if batched:
+                raise ValueError(
+                    "dynamic dispatch is FCFS under the eager issue "
+                    "policy; 'batched' rounds are fixed at build time "
+                    "and only exist for static lowerings")
+            cls, arrival, req_id, payload = request_ops(stream)
+            end, comp, chan, way, par = eng.dispatch_run(
+                self, cls, arrival, n_channels=channels, n_ways=ways,
+                rule=policy_s)
+            trace = OpTrace(
+                cls=np.asarray(cls, np.int32), channel=chan, way=way,
+                parity=par, channels=channels, ways=ways,
+                payload=None if payload.all() else payload,
+                arrival_us=arrival)
+            lowered = LoweredWorkload(
+                trace=trace, request_id=req_id,
+                request_arrival_us=np.asarray(stream.arrival_us,
+                                              np.float32))
+            lat = _payload_latencies(lowered, comp, stream)
+            energy = None
+            if request.objective in ("energy", "all"):
+                # energy is (+,+)-linear: the dispatched placement fixes
+                # the parity sequence, so the engine-free per-op sum is
+                # exact (DESIGN.md §2.4)
+                energy = self._breakdown(
+                    self._linear_energy_sums(trace, self.kind), end, trace)
+            return self._result(trace, end, eng.caps.name, energy,
+                                request_lat_us=lat, sched_policy=policy_s)
+        lowered = _sched.lower_static(stream, channels, ways, policy_s)
+        trace = lowered.trace
+        trace.validate_against(self.table)
+        energy = None
+        lat = None
+        base = getattr(_EngineBase, "completions")
+        if getattr(type(eng), "completions", base) is not base:
+            end_us, comp = eng.completions(self, trace, batched=batched)
+            lat = _payload_latencies(lowered, comp, stream)
+        else:   # makespan-only engines (log-depth forms)
+            end_us = eng.end_time(self, trace, batched=batched,
+                                  segment_len=request.segment_len)
+        if request.objective in ("energy", "all"):
+            end_e, sums = eng.energy_sums(
+                self, trace, self.kind, batched=batched,
+                segment_len=request.segment_len)
+            energy = self._breakdown(sums, end_e, trace)
+        return self._result(trace, end_us, eng.caps.name, energy,
+                            request_lat_us=lat, sched_policy=policy_s)
 
     def run_many(self, traces, *, policy: Policy | None = None,
                  objective: Objective = "end_time",
@@ -664,6 +884,7 @@ class Simulator:
         for t in traces:
             if t.n_ops == 0:
                 raise ValueError("empty trace: no ops to simulate")
+            t.validate_against(self.table)
         if name != "scan":
             return [self.run(SimRequest(trace=t, policy=policy,
                                         objective=objective, engine=name,
@@ -787,8 +1008,8 @@ def sweep_steady_bandwidth_mb_s(cmd_us, pre_us, slot_us, post_lo_us,
 
 __all__ = [
     "CacheInfo", "CapabilityError", "Engine", "EngineCaps", "OBJECTIVES",
-    "Objective", "Policy", "SimRequest", "SimResult", "Simulator",
-    "engine_capabilities", "get_engine", "register_engine",
+    "Objective", "Policy", "RequestStream", "SimRequest", "SimResult",
+    "Simulator", "engine_capabilities", "get_engine", "register_engine",
     "registered_engines", "simulator_for", "steady_bandwidth_mb_s",
     "steady_channel_bandwidth_mb_s", "sweep_steady_bandwidth_mb_s",
     "sweep_tables",

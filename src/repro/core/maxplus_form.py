@@ -65,7 +65,16 @@ NEG = -1e30
 
 @dataclasses.dataclass(frozen=True)
 class StateLayout:
-    """Row indexing of the (max,+) state vector for a (C, W) geometry."""
+    """Row indexing of the (max,+) state vector for a (C, W) geometry.
+
+    The last row is the **origin** — a constant-zero row no op ever
+    rewrites (its step-matrix row is the identity basis row).  Request
+    arrival times enter the recurrence through its *column*: an op with
+    arrival a contributes ``a + offset`` to the start-time max via
+    ``A[row, origin] = a + offset`` and ``s[origin] = 0``, so
+    arrival-aware traces stay inside the (max,+) algebra and compose
+    across segment products exactly like every other source
+    (DESIGN.md §2.6)."""
 
     channels: int = 1
     ways: int = MAX_WAYS
@@ -73,7 +82,7 @@ class StateLayout:
     @property
     def n_state(self) -> int:
         c, w = self.channels, self.ways
-        return c + c * w + 1 + c
+        return c + c * w + 1 + c + 1
 
     def bus(self, c: int) -> int:
         return c
@@ -89,29 +98,53 @@ class StateLayout:
         return self.ctrl + 1 + c
 
     @property
+    def origin(self) -> int:
+        """The constant-zero (time-origin) row arrivals enter through."""
+        return self.ctrl + 1 + self.channels
+
+    @property
     def n_completion_rows(self) -> int:
-        """bus + chip rows participate in the completion time; the ctrl
-        and round_start helpers never exceed them."""
+        """bus + chip rows participate in the completion time; the ctrl,
+        round_start and origin helpers never exceed them."""
         return self.channels * (1 + self.ways)
 
 
 DEFAULT_LAYOUT = StateLayout(1, MAX_WAYS)
-N_STATE = DEFAULT_LAYOUT.n_state   # bus, chips 0..15, ctrl, round_start
+N_STATE = DEFAULT_LAYOUT.n_state   # bus, chips 0..15, ctrl, round_start, origin
 PERIOD = 2 * MAX_WAYS              # homogeneous: round-robin × page parity
+
+
+def ready_offset_us(cmd_us: float, pre_us: float, way: int,
+                    batched: bool) -> float:
+    """Command-issue latency between the ready *base* (chip free or round
+    start — or the request arrival, whichever is later) and the op being
+    ready for the bus: cmd+pre eager, (w+1)·cmd+pre batched.  The single
+    definition the scan step, the structured fold, the step matrices and
+    the oracles all share."""
+    return ((way + 1) * cmd_us + pre_us) if batched else (cmd_us + pre_us)
 
 
 def op_matrix(layout: StateLayout, *, cmd_us: float, pre_us: float,
               slot_us: float, ctrl_us: float, arb_us: float, post_us: float,
-              channel: int, way: int, policy: str = "eager") -> np.ndarray:
-    """(max,+) step matrix of one op on (channel, way)."""
+              channel: int, way: int, policy: str = "eager",
+              arrival_us: float = 0.0) -> np.ndarray:
+    """(max,+) step matrix of one op on (channel, way).
+
+    ``arrival_us`` enters through the origin column: the op's ready time
+    is max(base, arrival) + ready_offset, so the origin source carries
+    ``arrival + ready_offset``.  At arrival 0 the origin candidate is
+    dominated by every real source (state values are >= 0), leaving
+    zero-arrival traces numerically identical to the pre-arrival form."""
     n = layout.n_state
     a = np.full((n, n), NEG, np.float32)
     for r in range(n):
         a[r, r] = 0.0                       # untouched resources persist
     bus, chip = layout.bus(channel), layout.chip(channel, way)
-    ctrl, rs = layout.ctrl, layout.rs(channel)
+    ctrl, rs, origin = layout.ctrl, layout.rs(channel), layout.origin
+    batched = policy_is_batched(policy)
+    ready_off = ready_offset_us(cmd_us, pre_us, way, batched)
     # start = max over these source columns (+ per-column offsets) + arb:
-    if policy_is_batched(policy):
+    if batched:
         if way == 0:
             sources = {bus: cmd_us + pre_us}
             a[rs, :] = NEG
@@ -121,6 +154,7 @@ def op_matrix(layout: StateLayout, *, cmd_us: float, pre_us: float,
     else:
         sources = {bus: 0.0, chip: cmd_us + pre_us}
     sources[ctrl] = max(sources.get(ctrl, NEG), 0.0)
+    sources[origin] = arrival_us + ready_off
     for row, extra in ((bus, slot_us), (ctrl, ctrl_us),
                        (chip, slot_us + post_us)):
         a[row, :] = NEG
@@ -162,7 +196,13 @@ def trace_combos(trace) -> tuple[list[tuple[int, int, int, int]], np.ndarray]:
 
 def combo_matrices(table, combos, layout: StateLayout,
                    policy: str = "eager") -> np.ndarray:
-    """[M, N, N] step matrices for one timing table over shared combos."""
+    """[M, N, N] step matrices for one timing table over shared combos.
+
+    Arrivals are *not* baked in (they vary per op, not per combo): the
+    matrices carry the zero-arrival origin column, and arrival-aware
+    folds max the per-op ``combo_arrival_offsets`` row + arrival into
+    the state each step — algebraically the same augmented matrix,
+    without exploding the dictionary to one matrix per op."""
     return np.stack([
         op_matrix(
             layout,
@@ -173,6 +213,29 @@ def combo_matrices(table, combos, layout: StateLayout,
                           else table.post_hi_us[k]),
             channel=c, way=w, policy=policy)
         for k, c, w, par in combos])
+
+
+def combo_arrival_offsets(table, combos, layout: StateLayout,
+                          policy: str = "eager") -> np.ndarray:
+    """[M, N] origin-column templates per combo: row r of op combo m
+    holds the offset the op's arrival contributes to state row r
+    (NEG for rows the op does not rewrite).  The per-op augmented
+    matrix is ``mats[m]`` with its origin column maxed against
+    ``arrival + g[m]`` — equivalently, a fold step is
+    ``s' = max(A_m (x) s, arrival + g[m])`` since ``s[origin] = 0``."""
+    batched = policy_is_batched(policy)
+    g = np.full((len(combos), layout.n_state), NEG, np.float32)
+    for m, (k, c, w, par) in enumerate(combos):
+        ready_off = ready_offset_us(float(table.cmd_us[k]),
+                                    float(table.pre_us[k]), w, batched)
+        arb = float(table.arb_us[k])
+        slot = float(table.slot_us[k])
+        post = float(table.post_lo_us[k] if par == 0
+                     else table.post_hi_us[k])
+        g[m, layout.bus(c)] = arb + ready_off + slot
+        g[m, layout.ctrl] = arb + ready_off + float(table.ctrl_us[k])
+        g[m, layout.chip(c, w)] = arb + ready_off + slot + post
+    return g
 
 
 
@@ -303,6 +366,7 @@ def structured_segment_products(
     channel: jax.Array,      # [T] int32
     way: jax.Array,          # [T] int32
     parity: jax.Array,       # [T] int32
+    arrival_us: jax.Array | None = None,   # [T] float32 request arrivals
     *,
     channels: int,
     ways: int,
@@ -317,13 +381,22 @@ def structured_segment_products(
     applied to *N-row-valued* resource times.  Every segment runs that
     recurrence from identity basis rows, all segments advancing in one
     vectorised scan step: O(T·N) work, sequential depth L, versus
-    O(T·N³) / depth T for the dense fold."""
+    O(T·N³) / depth T for the dense fold.
+
+    ``arrival_us`` rides the same recurrence: the ready base is maxed
+    with the constant origin basis row shifted by the op's arrival
+    (DESIGN.md §2.6), so the segment products compose arrival effects
+    across segments exactly like every other (max,+) source.  None (or
+    all-zero) arrivals reproduce the pre-arrival products bit-for-bit
+    (state rows dominate the zero-shifted origin row)."""
     layout = StateLayout(channels, ways)
     n = layout.n_state
     t_steps = cls.shape[0]
     seg = max(1, min(segment_len, t_steps))
     n_seg = -(-t_steps // seg)
     pad = n_seg * seg - t_steps
+    if arrival_us is None:
+        arrival_us = jnp.zeros((t_steps,), jnp.float32)
 
     def cols(x, fill=0):
         x = jnp.pad(jnp.asarray(x), (0, pad), constant_values=fill)
@@ -340,13 +413,14 @@ def structured_segment_products(
     c = cols(jnp.asarray(channel, jnp.int32))
     w = cols(jnp.asarray(way, jnp.int32))
     par = cols(jnp.asarray(parity, jnp.int32))
+    arr = cols(jnp.asarray(arrival_us, jnp.float32))
     valid = cols(jnp.ones((t_steps,), bool), fill=False)
     ready_off = ((w + 1).astype(jnp.float32) * cmd_us[k] if batched
                  else cmd_us[k]) + pre_us[k]
     xs = (c, c * ways + w,
           jnp.where(valid, c, channels),               # drop-sentinels
           jnp.where(valid, c * ways + w, channels * ways),
-          (w == 0) & valid, valid, ready_off,
+          (w == 0) & valid, valid, ready_off, arr,
           slot_us[k], ctrl_us[k], arb_us[k],
           jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k]))
 
@@ -355,23 +429,25 @@ def structured_segment_products(
         basis[:channels],                              # bus  [S,C,N]
         basis[channels:channels * (1 + ways)],         # chip [S,C·W,N]
         basis[layout.ctrl],                            # ctrl [S,N]
-        basis[layout.ctrl + 1:]))                      # rs   [S,C,N]
+        basis[layout.ctrl + 1:layout.origin]))         # rs   [S,C,N]
+    origin_row = basis[layout.origin]                  # constant: never written
     lane = jnp.arange(n_seg)
 
     def step(state, op):
         bus, chip, ctl, rs = state
-        c, cw, ci, cwi, first, ok, rd, slot, ctru, arb, post = op
+        c, cw, ci, cwi, first, ok, rd, arr_t, slot, ctru, arb, post = op
         bus_c = jnp.take_along_axis(bus, c[:, None, None], axis=1)[:, 0]
+        arr_row = origin_row[None, :] + arr_t[:, None]   # [S, N]
         if batched:
             rs_c = jnp.take_along_axis(rs, c[:, None, None], axis=1)[:, 0]
             rs_row = jnp.where(first[:, None], bus_c, rs_c)
             rs = rs.at[lane, jnp.where(first, ci, channels)].set(
                 bus_c, mode="drop")
-            ready = rs_row + rd[:, None]
+            ready = jnp.maximum(rs_row, arr_row) + rd[:, None]
         else:                          # rs rows stay identity
             chip_cw = jnp.take_along_axis(
                 chip, cw[:, None, None], axis=1)[:, 0]
-            ready = chip_cw + rd[:, None]
+            ready = jnp.maximum(chip_cw, arr_row) + rd[:, None]
         start = jnp.maximum(jnp.maximum(bus_c, ready), ctl) + arb[:, None]
         new_bus = start + slot[:, None]
         bus = bus.at[lane, ci].set(new_bus, mode="drop")
@@ -380,7 +456,8 @@ def structured_segment_products(
         return (bus, chip, ctl, rs), None
 
     (bus, chip, ctl, rs), _ = jax.lax.scan(step, init, xs)
-    return jnp.concatenate([bus, chip, ctl[:, None, :], rs], axis=1)
+    origin = jnp.broadcast_to(origin_row, (n_seg, 1, n))
+    return jnp.concatenate([bus, chip, ctl[:, None, :], rs, origin], axis=1)
 
 
 def structured_segment_energy(

@@ -1,0 +1,116 @@
+"""Scheduler / dispatch layer: maps request workloads onto flash
+geometry (DESIGN.md §2.6).
+
+The paper's firmware decides *statically* where every page lands (the
+builders' round-robin).  FMMU (PAPERS.md) argues the map/dispatch layer
+is what gates SSD scalability; this module makes it a policy axis:
+
+* **Static policies** decide placement offline from the op sequence
+  alone and lower a :class:`repro.core.workload.RequestStream` to an
+  ``OpTrace`` — so they reach *every* engine (scan / prefix / squaring /
+  pallas / oracle), including the log-depth and batched forms:
+
+  - ``stripe``       — channel-first round-robin (channel = t mod C,
+    way advances after a channel sweep).  Exactly the retired builders'
+    ``_round_robin``; the zero-arrival lowering is regression-pinned
+    equal to the old trace builders.
+  - ``round_robin``  — way-first round-robin (way = t mod W, channel
+    advances after a way sweep): fills one channel's ways before moving
+    on, the other canonical firmware loop.
+
+  Hedged duplicate requests (``payload=False``) mirror their primary's
+  placement shifted one channel — the datapipe hedging rule.
+
+* **Dynamic policies** cannot be lowered offline — the assignment
+  depends on simulated occupancy, so they run as a joint
+  dispatch+simulate fold (``repro.core.sim.dispatch_trace``) whose
+  carried occupancy row drives the decision:
+
+  - ``least_loaded``   — op goes to the chip whose busy horizon ends
+    first (global greedy);
+  - ``earliest_ready`` — op goes to the channel whose bus drains first,
+    then its least-loaded way.
+
+Engines advertise dynamic support through the ``dispatch`` capability
+in the ``repro.core.api`` registry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.trace import OpTrace, _finalize
+from repro.core.workload import RequestStream, request_ops
+
+STATIC_POLICIES: tuple[str, ...] = ("stripe", "round_robin")
+DYNAMIC_POLICIES: tuple[str, ...] = ("least_loaded", "earliest_ready")
+SCHED_POLICIES: tuple[str, ...] = STATIC_POLICIES + DYNAMIC_POLICIES
+
+
+def policy_is_dynamic(policy: str) -> bool:
+    """Validate a scheduler-policy literal once and return whether it
+    needs the in-fold dispatch engine (mirrors
+    ``sim.policy_is_batched`` for issue policies)."""
+    if policy not in SCHED_POLICIES:
+        raise ValueError(
+            f"unknown sched policy {policy!r} (static: "
+            f"{', '.join(STATIC_POLICIES)}; dynamic: "
+            f"{', '.join(DYNAMIC_POLICIES)})")
+    return policy in DYNAMIC_POLICIES
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredWorkload:
+    """A request stream lowered onto a geometry: the placed ``OpTrace``
+    plus the op→request map latency accounting needs.  ``trace`` keeps
+    ``arrival_us=None`` when every arrival is zero, so zero-arrival
+    lowerings are field-for-field identical to the retired builders."""
+
+    trace: OpTrace
+    request_id: np.ndarray          # int32 [T] op -> request index
+    request_arrival_us: np.ndarray  # float32 [R]
+
+    def request_latencies(self, completion_us) -> np.ndarray:
+        """[R] request latency: last page-op completion − arrival, for
+        *every* request including non-payload hedge duplicates — the
+        query layer filters to payload requests before reporting
+        percentiles (a duplicate is transport, not a request)."""
+        comp = np.asarray(completion_us, np.float64)
+        done = np.zeros(len(self.request_arrival_us), np.float64)
+        np.maximum.at(done, self.request_id, comp)
+        return done - np.asarray(self.request_arrival_us, np.float64)
+
+
+def lower_static(stream: RequestStream, channels: int, ways: int,
+                 policy: str = "stripe") -> LoweredWorkload:
+    """Lower a request stream to a placed ``OpTrace`` under a static
+    policy (see module docstring).  Placement slots advance over
+    *payload* ops only; non-payload (hedged duplicate) ops copy their
+    primary's placement shifted one channel."""
+    if policy_is_dynamic(policy):
+        raise ValueError(
+            f"sched policy {policy!r} is dynamic — it cannot be lowered "
+            "offline; run it through Simulator.run(workload=...) / "
+            "sim.dispatch_trace (engines with the 'dispatch' capability)")
+    cls, arrival, req_id, payload = request_ops(stream)
+    slots = np.cumsum(payload) - 1                  # payload-op slot index
+    if policy == "stripe":
+        chan = slots % channels
+        way = (slots // channels) % ways
+    else:                                           # "round_robin": way-first
+        way = slots % ways
+        chan = (slots // ways) % channels
+    if not payload.all():
+        # hedged duplicates: primary's placement, one channel over
+        chan = np.where(payload, chan, (chan + 1) % channels)
+    # _finalize owns the MLC per-chip page-parity derivation (the one
+    # definition every trace builder shares); arrivals ride on top
+    trace = dataclasses.replace(
+        _finalize(cls, chan, way, channels, ways,
+                  payload=None if payload.all() else payload),
+        arrival_us=None if not np.any(arrival) else arrival)
+    return LoweredWorkload(
+        trace=trace, request_id=req_id,
+        request_arrival_us=np.asarray(stream.arrival_us, np.float32))

@@ -31,6 +31,13 @@ all channels jointly.  Interchangeable engines evaluate the recurrence
   segmented and squaring strategies);
 * ``repro.core.sim_ref`` — plain-Python trace oracle for tests.
 
+Every entry point is **arrival-aware** (DESIGN.md §2.6): the per-op
+``arrival_us`` operand lower-bounds the ready time (zero = the old
+back-to-back behaviour, bit-for-bit).  ``trace_completions`` emits
+per-op completion times for request-latency percentiles, and
+``dispatch_trace`` is the joint dispatch+simulate fold behind the
+dynamic scheduling policies of ``repro.core.sched``.
+
 All engine *dispatch* lives in ``repro.core.api`` (the registry behind
 the ``Simulator`` session, DESIGN.md §2.5); this module holds only the
 jit-compiled evaluation primitives.  The old query entry points
@@ -235,18 +242,23 @@ def page_op_params(
 def _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
                    ctrl_us, arb_us, batched):
     """Single per-op state update — the one recurrence every scan-engine
-    entry point (plain and energy-carrying) folds."""
+    entry point (plain and energy-carrying) folds.  The op tuple carries
+    the request arrival time: the ready base is maxed with it before the
+    command-issue offset, so an op can never start before its request
+    arrives (arrival 0 = the old back-to-back behaviour, bit-for-bit)."""
 
     def step(state, op):
         bus_free, chip_free, ctrl_free, round_start = state
-        k, c, w, par = op
+        k, c, w, par, arr = op
         cmd = cmd_us[k]
         round_start = jnp.where(
             w == 0, round_start.at[c].set(bus_free[c]), round_start)
         if batched:
-            ready = round_start[c] + (w + 1).astype(jnp.float32) * cmd + pre_us[k]
+            base = jnp.maximum(round_start[c], arr)
+            ready = base + (w + 1).astype(jnp.float32) * cmd + pre_us[k]
         else:
-            ready = chip_free[c, w] + cmd + pre_us[k]
+            base = jnp.maximum(chip_free[c, w], arr)
+            ready = base + cmd + pre_us[k]
         start = (jnp.maximum(jnp.maximum(bus_free[c], ready), ctrl_free)
                  + arb_us[k])
         new_bus = start + slot_us[k]
@@ -267,9 +279,10 @@ def _trace_scan_init(n_channels):
     )
 
 
-def _trace_ops(cls, channel, way, parity):
+def _trace_ops(cls, channel, way, parity, arrival):
     return (cls.astype(jnp.int32), channel.astype(jnp.int32),
-            way.astype(jnp.int32), parity.astype(jnp.int32))
+            way.astype(jnp.int32), parity.astype(jnp.int32),
+            arrival.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
@@ -285,6 +298,7 @@ def trace_end_time(
     channel: jax.Array,      # [T] int32
     way: jax.Array,          # [T] int32
     parity: jax.Array,       # [T] int32 page parity (MLC lower/upper)
+    arrival_us: jax.Array,   # [T] float32 request arrival per op (0 = t0)
     n_channels: int,
     batched: bool,
 ) -> jax.Array:
@@ -293,7 +307,7 @@ def trace_end_time(
                          ctrl_us, arb_us, batched)
     (bus_free, chip_free, _, _), _ = jax.lax.scan(
         lambda s, op: (upd(s, op), None), _trace_scan_init(n_channels),
-        _trace_ops(cls, channel, way, parity))
+        _trace_ops(cls, channel, way, parity, arrival_us))
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
 
 
@@ -311,6 +325,7 @@ def trace_end_time_energy(
     channel: jax.Array,      # [T]
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
+    arrival_us: jax.Array,   # [T]
     n_channels: int,
     batched: bool,
 ) -> tuple[jax.Array, jax.Array]:
@@ -322,28 +337,28 @@ def trace_end_time_energy(
 
     def step(carry, op):
         state, acc = carry
-        k, c, w, par = op
+        k, c, w, par, arr = op
         return (upd(state, op), acc + e_op_uj[k, par % 2]), None
 
     init = (_trace_scan_init(n_channels),
             jnp.zeros((e_op_uj.shape[-1],), jnp.float32))
     ((bus_free, chip_free, _, _), acc), _ = jax.lax.scan(
-        step, init, _trace_ops(cls, channel, way, parity))
+        step, init, _trace_ops(cls, channel, way, parity, arrival_us))
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), acc
 
 
 def _trace_end_time_masked_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, valid, n_channels, batched):
+        cls, channel, way, parity, arrival, valid, n_channels, batched):
     upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
                          ctrl_us, arb_us, batched)
 
     def step(state, op):
-        k, c, w, par, ok = op
-        new = upd(state, (k, c, w, par))
+        k, c, w, par, arr, ok = op
+        new = upd(state, (k, c, w, par, arr))
         return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state), None
 
-    ops = _trace_ops(cls, channel, way, parity) + (valid.astype(bool),)
+    ops = _trace_ops(cls, channel, way, parity, arrival) + (valid.astype(bool),)
     (bus_free, chip_free, _, _), _ = jax.lax.scan(
         step, _trace_scan_init(n_channels), ops)
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
@@ -362,6 +377,7 @@ def trace_end_time_masked(
     channel: jax.Array,      # [T]
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
+    arrival_us: jax.Array,   # [T]
     valid: jax.Array,        # [T] bool; False = padding (state no-op)
     n_channels: int,
     batched: bool,
@@ -373,7 +389,7 @@ def trace_end_time_masked(
     ``repro.core.api`` session cache serves repeated queries from."""
     return _trace_end_time_masked_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, valid, n_channels, batched)
+        cls, channel, way, parity, arrival_us, valid, n_channels, batched)
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
@@ -389,6 +405,7 @@ def trace_end_time_masked_many(
     channel: jax.Array,      # [B, T]
     way: jax.Array,          # [B, T]
     parity: jax.Array,       # [B, T]
+    arrival_us: jax.Array,   # [B, T]
     valid: jax.Array,        # [B, T]
     n_channels: int,
     batched: bool,
@@ -398,10 +415,169 @@ def trace_end_time_masked_many(
     heterogeneous traces padded to a shared length bucket evaluate in
     one vmapped masked fold."""
     return jax.vmap(
-        lambda a, b, c, d, v: _trace_end_time_masked_impl(
+        lambda a, b, c, d, e, v: _trace_end_time_masked_impl(
             cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
-            arb_us, a, b, c, d, v, n_channels, batched)
-    )(cls, channel, way, parity, valid)
+            arb_us, a, b, c, d, e, v, n_channels, batched)
+    )(cls, channel, way, parity, arrival_us, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_completions(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    cls: jax.Array,          # [T]
+    channel: jax.Array,      # [T]
+    way: jax.Array,          # [T]
+    parity: jax.Array,       # [T]
+    arrival_us: jax.Array,   # [T]
+    n_channels: int,
+    batched: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """(end_us, [T] per-op completion times): the scan recurrence
+    emitting each op's completion — bus drain for reads (data
+    delivered), bus drain + t_PROG for writes (page durable).  This is
+    the latency-extraction fold behind per-request p50/p99 on
+    arrival-aware workloads (DESIGN.md §2.6); the end time is the same
+    recurrence as ``trace_end_time``."""
+    upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                         ctrl_us, arb_us, batched)
+
+    def step(state, op):
+        new = upd(state, op)
+        _, c, w, _, _ = op
+        return new, new[1][c, w]                  # chip_free[c, w]
+
+    (bus_free, chip_free, _, _), comp = jax.lax.scan(
+        step, _trace_scan_init(n_channels),
+        _trace_ops(cls, channel, way, parity, arrival_us))
+    return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), comp
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_completions_masked(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    cls: jax.Array,          # [T] (T = padded length bucket)
+    channel: jax.Array,      # [T]
+    way: jax.Array,          # [T]
+    parity: jax.Array,       # [T]
+    arrival_us: jax.Array,   # [T]
+    valid: jax.Array,        # [T] bool; False = padding (state no-op)
+    n_channels: int,
+    batched: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """``trace_completions`` over a padded length bucket: padding ops
+    leave the state bitwise unchanged and their emitted completions are
+    trailing garbage the caller slices off — so workload latency
+    queries share the same power-of-two compile buckets as the masked
+    end-time fold instead of paying one XLA compile per trace length."""
+    upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                         ctrl_us, arb_us, batched)
+
+    def step(state, op):
+        k, c, w, par, arr, ok = op
+        new = upd(state, (k, c, w, par, arr))
+        new = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state)
+        return new, new[1][c, w]                  # chip_free[c, w]
+
+    ops = _trace_ops(cls, channel, way, parity, arrival_us) \
+        + (valid.astype(bool),)
+    (bus_free, chip_free, _, _), comp = jax.lax.scan(
+        step, _trace_scan_init(n_channels), ops)
+    return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), comp
+
+
+#: Dynamic dispatch rules evaluated inside the joint fold (sched-layer
+#: names; the static policies lower offline in ``repro.core.sched``).
+DISPATCH_RULES: tuple[str, ...] = ("least_loaded", "earliest_ready")
+
+
+@functools.partial(jax.jit, static_argnames=("n_channels", "n_ways", "rule"))
+def dispatch_trace(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    cls: jax.Array,          # [T] int32 op-class per op (placement-free)
+    arrival_us: jax.Array,   # [T] float32 request arrival per op
+    n_channels: int,
+    n_ways: int,
+    rule: str = "least_loaded",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Joint dispatch + simulate fold (DESIGN.md §2.6): the carried
+    occupancy row *drives* the channel/way assignment, one decision per
+    op inside the same ``lax.scan`` that advances the timeline —
+    the dynamic half of the scheduler layer (static policies lower
+    offline to an ``OpTrace`` instead and reach every engine).
+
+    Rules:
+
+    * ``least_loaded``  — the op goes to the chip with the smallest
+      busy horizon ``max(bus_free[c], chip_free[c, w])`` (global greedy
+      on the op's earliest feasible start: an idle chip behind a
+      saturated bus is *not* a good target; ties break to the lowest
+      index);
+    * ``earliest_ready`` — the op goes to the channel whose bus drains
+      first, then to that channel's least-loaded way.
+
+    Page parity is derived in-fold from a carried per-chip op counter
+    (the dispatch decides which chip's MLC pair advances).  Returns
+    ``(end_us, completion[T], channel[T], way[T], parity[T])`` — the
+    chosen placement is a full ``OpTrace`` assignment, so energy /
+    bandwidth accounting and the oracles replay it exactly.  Dispatch
+    is FCFS in trace order under the ``eager`` issue policy (a strict
+    ``batched`` round loop has no meaning when rounds are not fixed at
+    build time)."""
+    if rule not in DISPATCH_RULES:
+        raise ValueError(f"unknown dispatch rule {rule!r} "
+                         f"(one of {', '.join(DISPATCH_RULES)})")
+    least_loaded = rule == "least_loaded"
+
+    def step(state, op):
+        bus_free, chip_free, ctrl_free, counts = state
+        k, arr = op
+        if least_loaded:
+            horizon = jnp.maximum(chip_free, bus_free[:, None])
+            flat = jnp.argmin(horizon.reshape(-1))
+            c, w = flat // n_ways, flat % n_ways
+        else:
+            c = jnp.argmin(bus_free)
+            w = jnp.argmin(chip_free[c])
+        par = counts[c, w] % 2
+        ready = jnp.maximum(chip_free[c, w], arr) + cmd_us[k] + pre_us[k]
+        start = (jnp.maximum(jnp.maximum(bus_free[c], ready), ctrl_free)
+                 + arb_us[k])
+        new_bus = start + slot_us[k]
+        post = jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k])
+        comp = new_bus + post
+        state = (bus_free.at[c].set(new_bus),
+                 chip_free.at[c, w].set(comp),
+                 start + ctrl_us[k],
+                 counts.at[c, w].add(1))
+        return state, (comp, c.astype(jnp.int32), w.astype(jnp.int32),
+                       par.astype(jnp.int32))
+
+    init = (jnp.zeros((n_channels,), jnp.float32),
+            jnp.zeros((n_channels, n_ways), jnp.float32),
+            jnp.asarray(0.0, jnp.float32),
+            jnp.zeros((n_channels, n_ways), jnp.int32))
+    (bus_free, chip_free, _, _), (comp, chan, way, par) = jax.lax.scan(
+        step, init, (cls.astype(jnp.int32), arrival_us.astype(jnp.float32)))
+    end = jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
+    return end, comp, chan, way, par
 
 
 # ---------------------------------------------------------------------------
@@ -411,13 +587,13 @@ def trace_end_time_masked_many(
 
 def _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, n_channels, n_ways, batched,
+        cls, channel, way, parity, arrival, n_channels, n_ways, batched,
         segment_len, combine):
     from repro.core import maxplus_form as mf  # deferred: mf imports us
 
     prods = mf.structured_segment_products(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity,
+        cls, channel, way, parity, arrival,
         channels=n_channels, ways=n_ways, batched=batched,
         segment_len=segment_len if segment_len is not None else 1)
     layout = mf.StateLayout(n_channels, n_ways)
@@ -450,6 +626,7 @@ def trace_end_time_prefix(
     channel: jax.Array,      # [T]
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
+    arrival_us: jax.Array,   # [T]
     n_channels: int,
     n_ways: int,
     batched: bool,
@@ -475,7 +652,7 @@ def trace_end_time_prefix(
     depth dense form."""
     return _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, n_channels, n_ways, batched,
+        cls, channel, way, parity, arrival_us, n_channels, n_ways, batched,
         segment_len, combine)
 
 
@@ -495,6 +672,7 @@ def trace_end_time_prefix_energy(
     channel: jax.Array,      # [T]
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
+    arrival_us: jax.Array,   # [T]
     n_channels: int,
     n_ways: int,
     batched: bool,
@@ -509,7 +687,7 @@ def trace_end_time_prefix_energy(
 
     end = _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, n_channels, n_ways, batched,
+        cls, channel, way, parity, arrival_us, n_channels, n_ways, batched,
         segment_len, combine)
     seg = mf.structured_segment_energy(
         e_op_uj, cls, parity,
@@ -532,6 +710,7 @@ def trace_end_time_prefix_batch(
     channel: jax.Array,      # [T]
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
+    arrival_us: jax.Array,   # [T]
     n_channels: int,
     n_ways: int,
     batched: bool,
@@ -545,8 +724,8 @@ def trace_end_time_prefix_batch(
     batch)."""
     return jax.vmap(
         lambda *t: _trace_end_time_prefix_impl(
-            *t, cls, channel, way, parity, n_channels, n_ways, batched,
-            segment_len, combine)
+            *t, cls, channel, way, parity, arrival_us, n_channels, n_ways,
+            batched, segment_len, combine)
     )(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us)
 
 
@@ -608,14 +787,15 @@ def trace_end_time_batch(
     channel: jax.Array,
     way: jax.Array,
     parity: jax.Array,
+    arrival_us: jax.Array,
     n_channels: int,
     batched: bool,
 ) -> jax.Array:
     """[B] completion times — the scan engine vmapped over tables."""
     return jax.vmap(
         lambda *t: trace_end_time(
-            *t, cls, channel, way, parity, n_channels=n_channels,
-            batched=batched)
+            *t, cls, channel, way, parity, arrival_us,
+            n_channels=n_channels, batched=batched)
     )(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us)
 
 
@@ -731,13 +911,14 @@ def _sweep_scan_jit(
     the shared-controller occupancy ``ctrl_us`` exactly like the
     per-point channel path (the two are regression-pinned equal)."""
     zeros_i = jnp.zeros((n_pages,), jnp.int32)
+    zeros_f = jnp.zeros((n_pages,), jnp.float32)
     zero_k = jnp.zeros((1,), jnp.float32)
 
     def one(cmd, pre, slot, lo, hi, ctrl, nbytes, w):
         way, parity = _steady_pattern(n_pages, w)
         end = trace_end_time(
             cmd[None], pre[None], slot[None], lo[None], hi[None],
-            ctrl[None], zero_k, zeros_i, zeros_i, way, parity,
+            ctrl[None], zero_k, zeros_i, zeros_i, way, parity, zeros_f,
             n_channels=1, batched=batched)
         return (n_pages * nbytes) / end
 

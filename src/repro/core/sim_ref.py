@@ -25,9 +25,13 @@ from repro.core.sim import MAX_WAYS, PageOpParams, policy_is_batched
 
 def _trace_event_loop(table, trace, policy, per_op=None) -> float:
     """The one explicit event loop behind both trace oracles.  Calls
-    ``per_op(k, parity)`` after each op's state update when given."""
+    ``per_op(k, parity, completion_us)`` after each op's state update
+    when given.  Request arrivals (``trace.arrival_us``) lower-bound the
+    ready base: an op's command cannot issue before its request arrives
+    (absent/zero arrivals reproduce the back-to-back loop exactly)."""
     batched = policy_is_batched(policy)   # typos raise, never fall through
     c_count, w_count = trace.channels, trace.ways
+    arrival = trace.arrival_us
     bus_free = [0.0] * c_count
     chip_free = [[0.0] * w_count for _ in range(c_count)]
     ctrl_free = 0.0
@@ -37,25 +41,42 @@ def _trace_event_loop(table, trace, policy, per_op=None) -> float:
         c = int(trace.channel[t])
         w = int(trace.way[t])
         par = int(trace.parity[t])
+        arr = 0.0 if arrival is None else float(arrival[t])
         if w == 0:
             round_start[c] = bus_free[c]
         if batched:
-            ready = round_start[c] + (w + 1) * table.cmd_us[k] + table.pre_us[k]
+            ready = (max(round_start[c], arr)
+                     + (w + 1) * table.cmd_us[k] + table.pre_us[k])
         else:
-            ready = chip_free[c][w] + table.cmd_us[k] + table.pre_us[k]
+            ready = (max(chip_free[c][w], arr)
+                     + table.cmd_us[k] + table.pre_us[k])
         start = max(bus_free[c], ready, ctrl_free) + table.arb_us[k]
         bus_free[c] = start + table.slot_us[k]
         ctrl_free = start + table.ctrl_us[k]
         post = table.post_lo_us[k] if par % 2 == 0 else table.post_hi_us[k]
         chip_free[c][w] = bus_free[c] + post
         if per_op is not None:
-            per_op(k, par)
+            per_op(k, par, chip_free[c][w])
     return float(max(max(bus_free), max(max(row) for row in chip_free)))
 
 
 def simulate_trace_ref(table, trace, policy: str = "eager") -> float:
     """Completion time (us) of an OpTrace on C channels (trace oracle)."""
     return _trace_event_loop(table, trace, policy)
+
+
+def simulate_trace_completions_ref(table, trace, policy: str = "eager"
+                                   ) -> tuple[float, np.ndarray]:
+    """(end_us, [T] per-op completion times) — the oracle twin of
+    ``repro.core.sim.trace_completions`` (latency extraction for
+    arrival-aware request workloads)."""
+    comp: list[float] = []
+
+    def per_op(k, par, done_us):
+        comp.append(float(done_us))
+
+    end = _trace_event_loop(table, trace, policy, per_op)
+    return end, np.asarray(comp, np.float64)
 
 
 def trace_bandwidth_ref_mb_s(table, trace, policy: str = "eager") -> float:
@@ -73,7 +94,7 @@ def simulate_trace_energy_ref(table, trace, kind,
     e_op = np.asarray(op_phase_energy_uj(table, kind), np.float64)
     acc = np.zeros((N_OP_PHASES,), np.float64)
 
-    def per_op(k, par):
+    def per_op(k, par, done_us):
         acc[:] += e_op[k, par % 2]
 
     end = _trace_event_loop(table, trace, policy, per_op)
@@ -93,19 +114,39 @@ def simulate_trace_matfold_ref(table, trace, policy: str = "eager",
     Each length-``segment_len`` chunk of the trace folds into one step
     matrix with sequential numpy matmuls; the chunk products then
     combine in a pairwise tree (the log-depth combine), and the total
-    product applies to the all-free initial state."""
+    product applies to the all-free initial state.  Arrivals ride the
+    per-op matrices through the origin column (one matrix per op when
+    the trace carries them; the shared combo dictionary otherwise)."""
     from repro.core.maxplus_form import (StateLayout, combo_matrices,
                                          end_time_from_state, init_state,
-                                         maxplus_eye, trace_combos)
+                                         maxplus_eye, op_matrix, trace_combos)
 
     layout = StateLayout(trace.channels, trace.ways)
     combos, idx = trace_combos(trace)
-    mats = combo_matrices(table, combos, layout, policy)
+    if trace.arrival_us is None:
+        mats = combo_matrices(table, combos, layout, policy)
+        per_op = [mats[int(m)] for m in idx]
+    else:
+        per_op = []
+        for t in range(trace.n_ops):
+            k, c, w = (int(trace.cls[t]), int(trace.channel[t]),
+                       int(trace.way[t]))
+            par = int(trace.parity[t]) % 2
+            per_op.append(op_matrix(
+                layout, cmd_us=float(table.cmd_us[k]),
+                pre_us=float(table.pre_us[k]),
+                slot_us=float(table.slot_us[k]),
+                ctrl_us=float(table.ctrl_us[k]),
+                arb_us=float(table.arb_us[k]),
+                post_us=float(table.post_lo_us[k] if par == 0
+                              else table.post_hi_us[k]),
+                channel=c, way=w, policy=policy,
+                arrival_us=float(trace.arrival_us[t])))
     prods = []
     for lo in range(0, trace.n_ops, segment_len):
         p = maxplus_eye(layout.n_state).astype(np.float64)
-        for t in idx[lo:lo + segment_len]:
-            p = maxplus_matmul_np(mats[int(t)].astype(np.float64), p)
+        for a in per_op[lo:lo + segment_len]:
+            p = maxplus_matmul_np(a.astype(np.float64), p)
         prods.append(p)
     while len(prods) > 1:          # pairwise tree: prods[i+1] is later
         nxt = [maxplus_matmul_np(prods[i + 1], prods[i])

@@ -55,7 +55,15 @@ class OpTrace:
     """One op per entry; arrays [T] int32.  ``parity`` is the MLC
     lower/upper page alternation index of the op on its chip.
     ``payload`` marks ops that deliver user bytes — hedged duplicate
-    reads occupy the bus/controller but are not counted as payload."""
+    reads occupy the bus/controller but are not counted as payload.
+    ``arrival_us`` carries per-op request arrival times (float32 us;
+    None = back-to-back, the pre-request-layer behaviour): every engine
+    lower-bounds an op's ready time by its arrival (DESIGN.md §2.6).
+
+    Construction validates the geometry indices: an out-of-range
+    channel/way used to scatter silently with ``mode="drop"`` semantics
+    in the prefix path (the op vanished from the product) while the
+    scan engine clamped — now it raises here, once, for every engine."""
 
     cls: np.ndarray
     channel: np.ndarray
@@ -63,7 +71,34 @@ class OpTrace:
     parity: np.ndarray
     channels: int
     ways: int
-    payload: np.ndarray | None = None   # bool [T]; None = all payload
+    payload: np.ndarray | None = None      # bool [T]; None = all payload
+    arrival_us: np.ndarray | None = None   # float32 [T]; None = all zero
+
+    def __post_init__(self):
+        n = len(self.cls)
+        for name in ("channel", "way", "parity"):
+            if len(getattr(self, name)) != n:
+                raise ValueError(f"OpTrace.{name} has length "
+                                 f"{len(getattr(self, name))}, cls has {n}")
+        for name in ("payload", "arrival_us"):
+            arr = getattr(self, name)
+            if arr is not None and len(arr) != n:
+                raise ValueError(f"OpTrace.{name} has length {len(arr)}, "
+                                 f"cls has {n}")
+        if n == 0:
+            return
+        for name, arr, bound in (("cls", self.cls, None),
+                                 ("channel", self.channel, self.channels),
+                                 ("way", self.way, self.ways),
+                                 ("parity", self.parity, None)):
+            lo, hi = int(np.min(arr)), int(np.max(arr))
+            if lo < 0 or (bound is not None and hi >= bound):
+                raise ValueError(
+                    f"OpTrace.{name} out of range: [{lo}, {hi}] does not "
+                    f"fit {name} bounds [0, {bound})" if bound is not None
+                    else f"OpTrace.{name} must be non-negative, got {lo}")
+        if self.arrival_us is not None and float(np.min(self.arrival_us)) < 0:
+            raise ValueError("OpTrace.arrival_us must be non-negative")
 
     @property
     def n_ops(self) -> int:
@@ -84,6 +119,16 @@ class OpTrace:
         if not mask.any():
             return 0.0
         return float(np.mean(self.cls[mask] == READ))
+
+    def validate_against(self, table: OpClassTable) -> None:
+        """Geometry bounds are checked at construction; the op-class
+        bound needs the timing table, so query layers call this before
+        simulating (an out-of-range class used to gather garbage
+        timings silently)."""
+        if self.n_ops and int(np.max(self.cls)) >= table.n_classes:
+            raise ValueError(
+                f"OpTrace.cls out of range: max {int(np.max(self.cls))} "
+                f">= table.n_classes {table.n_classes}")
 
     def describe(self) -> str:
         return (f"{self.n_ops} ops, {self.channels}ch x {self.ways}way, "
@@ -184,49 +229,34 @@ def hot_cold_trace(n_ops: int, channels: int, ways: int,
                      channels, ways)
 
 
-def _pages(nbytes: int, page_bytes: int) -> int:
-    return max(1, -(-int(nbytes) // page_bytes))
-
-
-def _bucket(n: int, max_ops: int) -> int:
-    """Round a window length up to a power of two (bounded by max_ops) so
-    byte-extrapolated estimates reuse jit cache entries across sizes."""
-    return min(max_ops, 1 << (n - 1).bit_length())
-
-
 def checkpoint_trace(nbytes: int, cfg: SSDConfig,
                      max_ops: int = 4096) -> OpTrace:
     """Checkpoint save: a pure write burst, chunk-striped across channels
     (mirrors ``CheckpointEngine``'s round-robin chunk placement).  Long
     bursts are truncated to ``max_ops``; callers extrapolate by bytes
-    (the stream is steady-state)."""
-    n = _bucket(_pages(nbytes, nand_chip(cfg.cell).page_data_bytes), max_ops)
-    chan, way = _round_robin(n, cfg.channels, cfg.ways)
-    return _finalize(np.full(n, WRITE), chan, way, cfg.channels, cfg.ways)
+    (the stream is steady-state).  Emits the request stream of
+    ``repro.core.workload.checkpoint_requests`` lowered by the static
+    ``stripe`` policy — numerically identical to the pre-request-layer
+    builder (regression-pinned)."""
+    from repro.core import sched, workload
+    return sched.lower_static(
+        workload.checkpoint_requests(nbytes, cfg, max_ops=max_ops),
+        cfg.channels, cfg.ways).trace
 
 
 def datapipe_trace(nbytes: int, cfg: SSDConfig, hedge_fraction: float = 0.0,
                    seed: int = 0, max_ops: int = 4096) -> OpTrace:
     """Data-pipeline refill: way-interleaved shard reads; a
     ``hedge_fraction`` of reads is re-issued on the next channel
-    (straggler hedging duplicates traffic, it does not replace it)."""
-    n = _bucket(_pages(nbytes, nand_chip(cfg.cell).page_data_bytes), max_ops)
-    rng = np.random.default_rng(seed)
-    chan, way = _round_robin(n, cfg.channels, cfg.ways)
-    cls, channel, ways_, payload = [], [], [], []
-    hedged = rng.random(n) < hedge_fraction
-    for i in range(n):
-        cls.append(READ); channel.append(chan[i]); ways_.append(way[i])
-        payload.append(True)
-        if hedged[i]:
-            # duplicate occupies a neighbouring channel but delivers no
-            # *new* payload bytes (first response wins)
-            cls.append(READ)
-            channel.append((chan[i] + 1) % cfg.channels)
-            ways_.append(way[i])
-            payload.append(False)
-    return _finalize(cls, channel, ways_, cfg.channels, cfg.ways,
-                     payload=payload)
+    (straggler hedging duplicates traffic, it does not replace it).
+    Request stream from ``repro.core.workload.datapipe_requests``
+    lowered by ``stripe`` (regression-pinned)."""
+    from repro.core import sched, workload
+    return sched.lower_static(
+        workload.datapipe_requests(nbytes, cfg,
+                                   hedge_fraction=hedge_fraction,
+                                   seed=seed, max_ops=max_ops),
+        cfg.channels, cfg.ways).trace
 
 
 def kvoffload_trace(read_bytes_per_token: int, cfg: SSDConfig,
@@ -234,27 +264,15 @@ def kvoffload_trace(read_bytes_per_token: int, cfg: SSDConfig,
                     max_ops: int = 4096) -> OpTrace:
     """Long-context decode: per token, a cold-KV read burst with the KV
     append writes interleaved evenly (write-back caching overlaps the
-    append with the read stream), striped across channels.  Interleaving
-    keeps the read/write mix representative when a huge per-token burst
-    is truncated to the ``max_ops`` simulation window."""
-    page = nand_chip(cfg.cell).page_data_bytes
-    reads = _pages(read_bytes_per_token, page)
-    writes = (_pages(append_bytes_per_token, page)
-              if append_bytes_per_token > 0 else 0)
-    # build only the simulated window: a GiB-scale burst is represented
-    # by a max_ops-sized pattern with the same read/write mix
-    per_tok = reads + writes
-    if per_tok > max_ops:
-        writes = round(writes * max_ops / per_tok) if writes else 0
-        reads = max_ops - writes
-    token = np.full(reads, READ, np.int32)
-    if writes:
-        at = np.linspace(0, reads, writes, endpoint=False).astype(int)
-        token = np.insert(token, np.sort(at), WRITE)
-    reps = min(n_tokens, -(-max_ops // len(token)))
-    cls = np.tile(token, reps)[:max_ops]
-    chan, way = _round_robin(cls.size, cfg.channels, cfg.ways)
-    return _finalize(cls, chan, way, cfg.channels, cfg.ways)
+    append with the read stream), striped across channels.  Request
+    stream from ``repro.core.workload.kvoffload_requests`` lowered by
+    ``stripe`` (regression-pinned)."""
+    from repro.core import sched, workload
+    return sched.lower_static(
+        workload.kvoffload_requests(
+            read_bytes_per_token, cfg, n_tokens=n_tokens,
+            append_bytes_per_token=append_bytes_per_token, max_ops=max_ops),
+        cfg.channels, cfg.ways).trace
 
 
 # ---------------------------------------------------------------------------
@@ -327,28 +345,17 @@ def trace_bandwidth_mb_s(table: OpClassTable, trace: OpTrace,
         trace, policy=policy, engine=engine, objective="bandwidth").mb_s
 
 
-_WORKLOADS = {
-    "steady_read": lambda cfg, n_pages=512: steady_trace(
-        n_pages, cfg.channels, cfg.ways, READ),
-    "steady_write": lambda cfg, n_pages=512: steady_trace(
-        n_pages, cfg.channels, cfg.ways, WRITE),
-    "mixed": lambda cfg, n_ops=None, read_fraction=0.7, seed=0: mixed_trace(
-        n_ops or 512 * cfg.channels, cfg.channels, cfg.ways,
-        read_fraction, seed),
-    "hot_cold": lambda cfg, n_ops=None, **kw: hot_cold_trace(
-        n_ops or 512 * cfg.channels, cfg.channels, cfg.ways, **kw),
-    "checkpoint": lambda cfg, nbytes, **kw: checkpoint_trace(
-        nbytes, cfg, **kw),
-    "datapipe": lambda cfg, nbytes, **kw: datapipe_trace(nbytes, cfg, **kw),
-    "kvoffload": lambda cfg, read_bytes_per_token, **kw: kvoffload_trace(
-        read_bytes_per_token, cfg, **kw),
-}
-
-
 def workload_trace(kind: str, cfg: SSDConfig, **kw) -> OpTrace:
-    """Named workload registry (benchmarks / examples / sweeps).
-    Unknown kwargs raise TypeError from the underlying builder."""
-    if kind not in _WORKLOADS:
-        raise KeyError(
-            f"unknown workload {kind!r}; one of {sorted(_WORKLOADS)}")
-    return _WORKLOADS[kind](cfg, **kw)
+    """Deprecated shim: use ``repro.core.workload.build_workload`` — the
+    named registry now lives in the request-level workload layer
+    (DESIGN.md §2.6), where the storage kinds are built as
+    ``RequestStream``s and lowered by the static stripe scheduler.
+    Numerically identical.  Unknown kinds raise a ValueError naming the
+    valid kinds; unknown kwargs still raise TypeError from the
+    underlying builder."""
+    from repro.core import workload
+    warnings.warn(
+        "repro.core.trace.workload_trace is deprecated; use "
+        "repro.core.workload.build_workload", DeprecationWarning,
+        stacklevel=2)
+    return workload.build_workload(kind, cfg, **kw)

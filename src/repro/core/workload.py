@@ -1,0 +1,337 @@
+"""Request-level workloads for the SSD simulator (DESIGN.md §2.6).
+
+The trace layer (``repro.core.trace``) describes *what the flash sees*:
+per-op class/channel/way arrays with the placement already decided.
+This module describes *what the host asks for*: a :class:`RequestStream`
+of (arrival time, read/write, size-in-pages, tenant) tuples with **no
+placement** — deciding which channel/way serves each page is the
+scheduler's job (``repro.core.sched``), either offline (static policies
+lower a stream to an ``OpTrace`` that reaches every engine) or inside
+the simulation fold (dynamic policies; ``repro.core.sim.dispatch_trace``).
+
+Builders cover the arrival processes queueing behaviour actually depends
+on (Park et al. and the FMMU scalability argument, PAPERS.md):
+
+* :func:`poisson_stream`   — open-loop Poisson arrivals at an offered load;
+* :func:`bursty_stream`    — on/off bursts (checkpoint-like traffic);
+* :func:`closed_loop_stream` — a queue-depth-N client that admits request
+  i when its model of request i-N completes (fio-style QD sweeps);
+* :func:`multi_tenant`     — merge streams into one arrival-ordered
+  multi-tenant workload, preserving per-stream ids.
+
+The storage tier emits its workloads here (``checkpoint_requests`` /
+``datapipe_requests`` / ``kvoffload_requests``); their static-stripe
+lowerings are regression-pinned equal to the pre-request-layer trace
+builders.  ``build_workload`` is the named registry behind the
+deprecated ``trace.workload_trace`` shim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.nand import chip as nand_chip
+from repro.core.sim import SSDConfig
+from repro.core.trace import (OpTrace, READ, WRITE, hot_cold_trace,
+                              mixed_trace, steady_trace)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStream:
+    """Placement-free request workload: arrays [R], arrival-ordered.
+
+    ``payload`` marks requests that deliver user bytes (False = hedged
+    duplicates: they occupy resources but the first response wins).
+    ``stream`` is the issuing client/tenant id — latency percentiles
+    can be split per tenant after simulation."""
+
+    arrival_us: np.ndarray          # float32 [R], non-decreasing
+    op_cls: np.ndarray              # int32 [R], READ/WRITE
+    n_pages: np.ndarray             # int32 [R], >= 1
+    stream: np.ndarray              # int32 [R]
+    payload: np.ndarray | None = None   # bool [R]; None = all payload
+
+    def __post_init__(self):
+        r = len(self.arrival_us)
+        for name in ("op_cls", "n_pages", "stream"):
+            if len(getattr(self, name)) != r:
+                raise ValueError(f"RequestStream.{name} has length "
+                                 f"{len(getattr(self, name))}, "
+                                 f"arrival_us has {r}")
+        if self.payload is not None and len(self.payload) != r:
+            raise ValueError("RequestStream.payload length mismatch")
+        if r == 0:
+            return
+        if float(np.min(self.arrival_us)) < 0:
+            raise ValueError("arrival_us must be non-negative")
+        if np.any(np.diff(np.asarray(self.arrival_us, np.float64)) < 0):
+            raise ValueError("arrival_us must be non-decreasing (FCFS "
+                             "dispatch order is the array order)")
+        if int(np.min(self.n_pages)) < 1:
+            raise ValueError("n_pages must be >= 1")
+        if int(np.min(self.op_cls)) < 0:
+            raise ValueError("op_cls must be non-negative")
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.arrival_us)
+
+    @property
+    def total_pages(self) -> int:
+        return int(np.sum(self.n_pages))
+
+    def payload_mask(self) -> np.ndarray:
+        if self.payload is None:
+            return np.ones(self.n_requests, bool)
+        return self.payload.astype(bool)
+
+    def describe(self) -> str:
+        arr = np.asarray(self.arrival_us, np.float64)
+        span = float(arr[-1]) if self.n_requests else 0.0
+        reads = float(np.mean(self.op_cls == READ)) if self.n_requests else 0.0
+        return (f"{self.n_requests} reqs / {self.total_pages} pages over "
+                f"{span / 1e3:.2f} ms, read_frac={reads:.2f}, "
+                f"{len(np.unique(self.stream))} stream(s)")
+
+
+def _stream(arrival, op_cls, n_pages, stream, payload=None) -> RequestStream:
+    r = len(arrival)
+    return RequestStream(
+        arrival_us=np.asarray(arrival, np.float32),
+        op_cls=np.asarray(op_cls, np.int32),
+        n_pages=(np.full(r, n_pages, np.int32)
+                 if np.isscalar(n_pages) else np.asarray(n_pages, np.int32)),
+        stream=(np.full(r, stream, np.int32)
+                if np.isscalar(stream) else np.asarray(stream, np.int32)),
+        payload=None if payload is None else np.asarray(payload, bool))
+
+
+def _classes(n: int, read_fraction: float, rng) -> np.ndarray:
+    return np.where(rng.random(n) < read_fraction, READ, WRITE)
+
+
+# ---------------------------------------------------------------------------
+# Arrival-process builders
+# ---------------------------------------------------------------------------
+
+
+def poisson_stream(n_requests: int, mean_interarrival_us: float, *,
+                   read_fraction: float = 1.0, pages_per_request: int = 1,
+                   seed: int = 0, stream: int = 0) -> RequestStream:
+    """Open-loop Poisson arrivals: offered load = pages_per_request /
+    mean_interarrival_us pages/us, independent of service progress."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_interarrival_us, n_requests)
+    if n_requests:
+        gaps[0] = 0.0                   # the stream starts at t = 0
+    return _stream(np.cumsum(gaps), _classes(n_requests, read_fraction, rng),
+                   pages_per_request, stream)
+
+
+def bursty_stream(n_requests: int, burst_len: int, gap_us: float, *,
+                  intra_us: float = 0.0, read_fraction: float = 1.0,
+                  pages_per_request: int = 1, seed: int = 0,
+                  stream: int = 0) -> RequestStream:
+    """On/off bursts: ``burst_len`` requests ``intra_us`` apart, then an
+    idle ``gap_us`` before the next burst — checkpoint-save-like traffic
+    that exercises queue build-up and drain."""
+    if burst_len < 1:
+        raise ValueError("burst_len must be >= 1")
+    i = np.arange(n_requests)
+    arrival = (i // burst_len) * (burst_len * intra_us + gap_us) \
+        + (i % burst_len) * intra_us
+    rng = np.random.default_rng(seed)
+    return _stream(arrival, _classes(n_requests, read_fraction, rng),
+                   pages_per_request, stream)
+
+
+def closed_loop_stream(n_requests: int, queue_depth: int, service_us: float,
+                       *, read_fraction: float = 1.0,
+                       pages_per_request: int = 1, seed: int = 0,
+                       stream: int = 0) -> RequestStream:
+    """Closed-loop queue-depth-N client (fio-style): request i is
+    admitted when the client's single-server model of request i-N
+    completes.  ``service_us`` is the client's per-request service
+    estimate — the *simulated* device may be faster (queue drains,
+    latency ≈ service) or slower (queue builds, latency grows), which
+    is exactly the knee a QD sweep looks for."""
+    if queue_depth < 1:
+        raise ValueError("queue_depth must be >= 1")
+    arrival = np.zeros(n_requests, np.float64)
+    done = np.zeros(n_requests, np.float64)
+    prev_done = 0.0
+    for i in range(n_requests):
+        arrival[i] = 0.0 if i < queue_depth else done[i - queue_depth]
+        prev_done = max(arrival[i], prev_done) + service_us
+        done[i] = prev_done
+    rng = np.random.default_rng(seed)
+    return _stream(arrival, _classes(n_requests, read_fraction, rng),
+                   pages_per_request, stream)
+
+
+def multi_tenant(streams) -> RequestStream:
+    """Merge streams into one arrival-ordered workload.  Stream ids are
+    re-tagged by position so per-tenant latency splits stay unambiguous
+    even when inputs share an id.  Merge is stable: equal arrivals keep
+    the input order (earlier stream first)."""
+    streams = list(streams)
+    if not streams:
+        raise ValueError("multi_tenant needs at least one stream")
+    arrival = np.concatenate([s.arrival_us for s in streams])
+    order = np.argsort(arrival, kind="stable")
+    cat = lambda xs: np.concatenate(xs)[order]  # noqa: E731
+    return RequestStream(
+        arrival_us=np.asarray(arrival, np.float32)[order],
+        op_cls=cat([s.op_cls for s in streams]),
+        n_pages=cat([s.n_pages for s in streams]),
+        stream=cat([np.full(s.n_requests, i, np.int32)
+                    for i, s in enumerate(streams)]),
+        payload=(None if all(s.payload is None for s in streams)
+                 else cat([s.payload_mask() for s in streams])))
+
+
+def request_ops(stream: RequestStream
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Expand requests to page ops: (cls, arrival_us, request_id,
+    payload), each [T = total_pages].  Every page op inherits its
+    request's arrival and id — the shared front half of both the static
+    lowering and the dynamic dispatch fold."""
+    reps = np.asarray(stream.n_pages, np.int64)
+    return (np.repeat(np.asarray(stream.op_cls, np.int32), reps),
+            np.repeat(np.asarray(stream.arrival_us, np.float32), reps),
+            np.repeat(np.arange(stream.n_requests, dtype=np.int32), reps),
+            np.repeat(stream.payload_mask(), reps))
+
+
+# ---------------------------------------------------------------------------
+# Storage-tier request emitters (stripe-lowered twins of the retired
+# trace builders; regression-pinned numerically identical)
+# ---------------------------------------------------------------------------
+
+
+def _pages(nbytes: int, page_bytes: int) -> int:
+    return max(1, -(-int(nbytes) // page_bytes))
+
+
+def _bucket(n: int, max_ops: int) -> int:
+    """Round a window length up to a power of two (bounded by max_ops) so
+    byte-extrapolated estimates reuse jit cache entries across sizes."""
+    return min(max_ops, 1 << (n - 1).bit_length())
+
+
+def checkpoint_requests(nbytes: int, cfg: SSDConfig,
+                        max_ops: int = 4096) -> RequestStream:
+    """Checkpoint save: a zero-arrival pure write burst (the writer
+    thread queues every chunk at once), one request per page.  Long
+    bursts truncate to ``max_ops``; callers extrapolate by bytes."""
+    n = _bucket(_pages(nbytes, nand_chip(cfg.cell).page_data_bytes), max_ops)
+    return _stream(np.zeros(n), np.full(n, WRITE), 1, 0)
+
+
+def datapipe_requests(nbytes: int, cfg: SSDConfig,
+                      hedge_fraction: float = 0.0, seed: int = 0,
+                      max_ops: int = 4096) -> RequestStream:
+    """Data-pipeline refill: one read request per page; a
+    ``hedge_fraction`` of reads is followed by a non-payload duplicate
+    (straggler hedging — first response wins, so the duplicate delivers
+    no new bytes and the static lowering mirrors its primary's
+    placement shifted one channel)."""
+    n = _bucket(_pages(nbytes, nand_chip(cfg.cell).page_data_bytes), max_ops)
+    rng = np.random.default_rng(seed)
+    hedged = rng.random(n) < hedge_fraction
+    payload = np.ones(n + int(hedged.sum()), bool)
+    payload[np.cumsum(1 + hedged.astype(np.int64)) [hedged] - 1] = False
+    t = len(payload)
+    return _stream(np.zeros(t), np.full(t, READ), 1, 0,
+                   payload=None if payload.all() else payload)
+
+
+def kvoffload_requests(read_bytes_per_token: int, cfg: SSDConfig,
+                       n_tokens: int = 8, append_bytes_per_token: int = 0,
+                       max_ops: int = 4096) -> RequestStream:
+    """Long-context decode: per token, a cold-KV read burst with the KV
+    append writes interleaved evenly (write-back caching overlaps the
+    append with the read stream).  Interleaving keeps the read/write
+    mix representative when a huge per-token burst is truncated to the
+    ``max_ops`` simulation window."""
+    page = nand_chip(cfg.cell).page_data_bytes
+    reads = _pages(read_bytes_per_token, page)
+    writes = (_pages(append_bytes_per_token, page)
+              if append_bytes_per_token > 0 else 0)
+    # build only the simulated window: a GiB-scale burst is represented
+    # by a max_ops-sized pattern with the same read/write mix
+    per_tok = reads + writes
+    if per_tok > max_ops:
+        writes = round(writes * max_ops / per_tok) if writes else 0
+        reads = max_ops - writes
+    token = np.full(reads, READ, np.int32)
+    if writes:
+        at = np.linspace(0, reads, writes, endpoint=False).astype(int)
+        token = np.insert(token, np.sort(at), WRITE)
+    reps = min(n_tokens, -(-max_ops // len(token)))
+    cls = np.tile(token, reps)[:max_ops]
+    return _stream(np.zeros(cls.size), cls, 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Named registry (the workload-layer home of trace.workload_trace)
+# ---------------------------------------------------------------------------
+
+
+def _lowered(requests_fn):
+    def build(cfg: SSDConfig, *args, **kw) -> OpTrace:
+        from repro.core.sched import lower_static
+        return lower_static(requests_fn(*args, cfg=cfg, **kw),
+                            cfg.channels, cfg.ways).trace
+    return build
+
+
+WORKLOAD_KINDS: tuple[str, ...] = (
+    "steady_read", "steady_write", "mixed", "hot_cold",
+    "checkpoint", "datapipe", "kvoffload",
+    "poisson", "bursty", "closed_loop",
+)
+
+_BUILDERS = {
+    "steady_read": lambda cfg, n_pages=512: steady_trace(
+        n_pages, cfg.channels, cfg.ways, READ),
+    "steady_write": lambda cfg, n_pages=512: steady_trace(
+        n_pages, cfg.channels, cfg.ways, WRITE),
+    "mixed": lambda cfg, n_ops=None, read_fraction=0.7, seed=0: mixed_trace(
+        n_ops or 512 * cfg.channels, cfg.channels, cfg.ways,
+        read_fraction, seed),
+    "hot_cold": lambda cfg, n_ops=None, **kw: hot_cold_trace(
+        n_ops or 512 * cfg.channels, cfg.channels, cfg.ways, **kw),
+    "checkpoint": _lowered(
+        lambda nbytes, cfg, **kw: checkpoint_requests(nbytes, cfg, **kw)),
+    "datapipe": _lowered(
+        lambda nbytes, cfg, **kw: datapipe_requests(nbytes, cfg, **kw)),
+    "kvoffload": _lowered(
+        lambda read_bytes_per_token, cfg, **kw: kvoffload_requests(
+            read_bytes_per_token, cfg, **kw)),
+    "poisson": _lowered(
+        lambda cfg, n_requests=512, mean_interarrival_us=50.0, **kw:
+        poisson_stream(n_requests, mean_interarrival_us, **kw)),
+    "bursty": _lowered(
+        lambda cfg, n_requests=512, burst_len=32, gap_us=2000.0, **kw:
+        bursty_stream(n_requests, burst_len, gap_us, **kw)),
+    "closed_loop": _lowered(
+        lambda cfg, n_requests=512, queue_depth=8, service_us=50.0, **kw:
+        closed_loop_stream(n_requests, queue_depth, service_us, **kw)),
+}
+
+
+def build_workload(kind: str, cfg: SSDConfig, **kw) -> OpTrace:
+    """Named workload registry (benchmarks / examples / sweeps): the
+    op-level kinds build traces directly; the request-level kinds build
+    a ``RequestStream`` and lower it with the static stripe scheduler
+    (pass the stream to ``Simulator.run(workload=..., sched_policy=...)``
+    instead to pick a policy).  Unknown kinds raise a ValueError naming
+    the valid kinds; unknown kwargs raise TypeError from the builder."""
+    if kind not in _BUILDERS:
+        raise ValueError(
+            f"unknown workload kind {kind!r} "
+            f"(one of {', '.join(WORKLOAD_KINDS)})")
+    return _BUILDERS[kind](cfg, **kw)

@@ -50,13 +50,32 @@ def _kernel_periodic(mats_ref, s0_ref, out_ref, *, t_steps: int, period: int):
         s0_ref[...])
 
 
-def _kernel_indexed(idx_ref, mats_ref, s0_ref, out_ref, *, t_steps: int):
+def _arrival_step(mats, g, arr, i, t, s):
+    """One trace-indexed step with the arrival max-in: the (max,+)
+    matvec, then s' = max(A_i ⊗ s, g[i] + arrival[t]) — the augmented
+    origin-column contribution of DESIGN.md §2.6 (s[origin] = 0, so the
+    per-op arrival never needs its own matrix in the dictionary).  Zero
+    arrivals are the identity of the extra max: A_i already bakes the
+    zero-arrival origin column."""
+    s = _maxplus_step(mats, i, s)
+    gt = jax.lax.dynamic_index_in_dim(g, i, 0, keepdims=False)   # [N, BL]
+    at = jax.lax.dynamic_index_in_dim(arr, t, 0, keepdims=False)  # [1]
+    return jnp.maximum(s, gt + at)
+
+
+def _kernel_indexed(idx_ref, mats_ref, g_ref, arr_ref, s0_ref, out_ref, *,
+                    t_steps: int):
     """Heterogeneous trace: gather A[idx[t]] per step.  ``idx_ref`` is the
     scalar-prefetch operand — it lives in SMEM and is available before
-    the body runs, so the dynamic gather index is a scalar load."""
+    the body runs, so the dynamic gather index is a scalar load.
+    ``g_ref`` [M, N, BL] holds the per-combo origin-column templates and
+    ``arr_ref`` [T, 1] the per-op arrivals (see ``_arrival_step``)."""
     mats = mats_ref[...]          # [M, N, N, BL]
+    g = g_ref[...]                # [M, N, BL]
+    arr = arr_ref[...]            # [T, 1]
     out_ref[...] = jax.lax.fori_loop(
-        0, t_steps, lambda t, s: _maxplus_step(mats, idx_ref[t], s),
+        0, t_steps,
+        lambda t, s: _arrival_step(mats, g, arr, idx_ref[t], t, s),
         s0_ref[...])
 
 
@@ -79,19 +98,25 @@ def _kernel_periodic_energy(mats_ref, e_ref, s0_ref, out_ref, acc_ref, *,
     acc_ref[...] = acc
 
 
-def _kernel_indexed_energy(idx_ref, mats_ref, e_ref, s0_ref, out_ref,
-                           acc_ref, *, t_steps: int):
+def _kernel_indexed_energy(idx_ref, mats_ref, g_ref, arr_ref, e_ref, s0_ref,
+                           out_ref, acc_ref, *, t_steps: int):
     """Trace-indexed fold accumulating ``E[idx[t]]`` next to the (max,+)
-    matvec — both gathers share the same SMEM scalar index."""
+    matvec — matrix, origin-template and energy gathers all share the
+    same SMEM scalar index."""
     mats = mats_ref[...]          # [M, N, N, BL]
+    g = g_ref[...]                # [M, N, BL]
+    arr = arr_ref[...]            # [T, 1]
     energy = e_ref[...]           # [M, NP, BL]
     s, acc = jax.lax.fori_loop(
         0, t_steps,
-        lambda t, c: (_maxplus_step(mats, idx_ref[t], c[0]),
+        lambda t, c: (_arrival_step(mats, g, arr, idx_ref[t], t, c[0]),
                       _energy_step(energy, idx_ref[t], c[1])),
         (s0_ref[...], jnp.zeros(acc_ref.shape, acc_ref.dtype)))
     out_ref[...] = s
     acc_ref[...] = acc
+
+
+from repro.core.maxplus_form import NEG  # the one (max,+) -inf sentinel
 
 
 @functools.partial(jax.jit, static_argnames=("t_steps", "block_lanes", "interpret"))
@@ -102,14 +127,26 @@ def maxplus_fold_kernel(
     t_steps: int,
     idx: jax.Array | None = None,   # [t_steps] int32 per-op matrix index
     energy: jax.Array | None = None,  # [B, M, P] per-op phase energies (uJ)
+    arrivals: jax.Array | None = None,  # [t_steps] per-op request arrivals
+    gvec: jax.Array | None = None,      # [B, M, N] origin-column templates
     block_lanes: int = 128,
     interpret: bool = True,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Returns the folded state [B, N]; with ``energy`` given, also the
     [B, P] phase-energy accumulator ``sum_t energy[idx[t]]`` computed in
     the same ``fori_loop`` (the per-step matrix gather index doubles as
-    the energy gather index — DESIGN.md §2.4)."""
+    the energy gather index — DESIGN.md §2.4).
+
+    ``arrivals``/``gvec`` (trace-indexed path only) carry request
+    arrival times: each step additionally maxes ``gvec[idx[t]] +
+    arrivals[t]`` into the state — the augmented origin-column form of
+    DESIGN.md §2.6, keeping the matrix dictionary per-combo instead of
+    per-op.  Omitted, they default to identity values (zero arrivals /
+    NEG templates)."""
     b, m, n, _ = mats.shape
+    if (arrivals is not None or gvec is not None) and idx is None:
+        raise ValueError("arrivals/gvec need the trace-indexed path "
+                         "(pass idx)")
     bl = min(block_lanes, b)
     pad = (-b) % bl
     if pad:
@@ -117,6 +154,8 @@ def maxplus_fold_kernel(
         s0 = jnp.pad(s0, ((0, pad), (0, 0)))
         if energy is not None:
             energy = jnp.pad(energy, ((0, pad), (0, 0), (0, 0)))
+        if gvec is not None:
+            gvec = jnp.pad(gvec, ((0, pad), (0, 0), (0, 0)))
     bp = mats.shape[0]
     mats_l = jnp.moveaxis(mats, 0, -1)   # [M, N, N, B]
     s0_l = jnp.moveaxis(s0, 0, -1)       # [N, B]
@@ -134,10 +173,24 @@ def maxplus_fold_kernel(
         def spec(block):
             return pl.BlockSpec(
                 block, lambda i, idx_ref: (0,) * (len(block) - 1) + (i,))
+
+        def spec_whole(block):           # un-tiled operand (per-op arrivals)
+            return pl.BlockSpec(block, lambda i, idx_ref: (0,) * len(block))
         scalar_args = (idx.astype(jnp.int32),)
 
     in_specs = [spec((m, n, n, bl))]
     operands = [mats_l]
+    if idx is not None:
+        # the arrival max-in runs unconditionally on the indexed path —
+        # identity defaults keep zero-arrival traces bit-identical
+        if gvec is None:
+            g_l = jnp.full((m, n, bp), NEG, jnp.float32)
+        else:
+            g_l = jnp.moveaxis(gvec, 0, -1)            # [M, N, B]
+        arr2d = (jnp.zeros((t_steps, 1), jnp.float32) if arrivals is None
+                 else arrivals.astype(jnp.float32).reshape(t_steps, 1))
+        in_specs += [spec((m, n, bl)), spec_whole((t_steps, 1))]
+        operands += [g_l, arr2d]
     if energy is not None:
         in_specs.append(spec((m, np_, bl)))
         operands.append(e_l)

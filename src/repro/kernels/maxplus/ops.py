@@ -35,9 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.maxplus_form import (StateLayout, combo_matrices,
-                                     end_time_from_state, init_state,
-                                     maxplus_fold_segmented,
+from repro.core.maxplus_form import (StateLayout, combo_arrival_offsets,
+                                     combo_matrices, end_time_from_state,
+                                     init_state, maxplus_fold_segmented,
                                      periodic_fold_squaring, trace_combos,
                                      transition_matrices)
 from repro.core.sim import PageOpParams
@@ -45,15 +45,35 @@ from repro.kernels.maxplus.kernel import maxplus_fold_kernel
 from repro.kernels.maxplus.ref import maxplus_fold_ref
 
 
+def _augment_arrivals(mats, gvec, idx, arrivals):
+    """[B, T, N, N] per-op matrices with the arrival origin column maxed
+    in — the dense expansion the segmented strategy folds when a trace
+    carries arrivals (the sequential kernel keeps the compact per-combo
+    dictionary and maxes ``gvec[idx[t]] + arrivals[t]`` per step
+    instead).  The origin row is the last layout row by construction."""
+    per = jnp.take(mats, idx, axis=1)                       # [B, T, N, N]
+    cand = jnp.take(gvec, idx, axis=1) + arrivals[None, :, None]
+    return per.at[..., -1].set(jnp.maximum(per[..., -1], cand))
+
+
 def maxplus_fold(mats, s0, *, t_steps: int, idx=None, use_kernel: bool = True,
                  interpret: bool | None = None, strategy: str = "sequential",
-                 segment_len: int = 64):
+                 segment_len: int = 64, arrivals=None, gvec=None):
     """Fold dispatch: ``strategy`` picks the evaluation shape (see module
-    docstring); ``use_kernel=False`` runs the jnp sequential reference."""
+    docstring); ``use_kernel=False`` runs the jnp sequential reference.
+    ``arrivals`` [T] + ``gvec`` [B, M, N] make the fold arrival-aware
+    (trace-indexed path only; DESIGN.md §2.6)."""
+    if arrivals is not None and idx is None:
+        raise ValueError("arrivals need the trace-indexed path (pass idx)")
     if strategy == "segmented":
         if idx is None:
             idx = jnp.arange(t_steps, dtype=jnp.int32) % mats.shape[-3]
-        return maxplus_fold_segmented(mats, idx[:t_steps], s0,
+        idx = idx[:t_steps]
+        if arrivals is not None:
+            mats = _augment_arrivals(mats, gvec, idx,
+                                     jnp.asarray(arrivals, jnp.float32))
+            idx = jnp.arange(t_steps, dtype=jnp.int32)
+        return maxplus_fold_segmented(mats, idx, s0,
                                       segment_len=segment_len)
     if strategy == "squaring":
         if idx is not None:
@@ -70,8 +90,10 @@ def maxplus_fold(mats, s0, *, t_steps: int, idx=None, use_kernel: bool = True,
         interpret = jax.default_backend() != "tpu"
     if use_kernel:
         return maxplus_fold_kernel(mats, s0, t_steps=t_steps, idx=idx,
+                                   arrivals=arrivals, gvec=gvec,
                                    interpret=interpret)
-    return maxplus_fold_ref(mats, s0, t_steps=t_steps, idx=idx)
+    return maxplus_fold_ref(mats, s0, t_steps=t_steps, idx=idx,
+                            arrivals=arrivals, gvec=gvec)
 
 
 def channel_end_time_maxplus(
@@ -103,15 +125,24 @@ def bandwidth_maxplus_mb_s(ops, ways, *, n_pages: int = 512,
 
 
 def _combo_setup(tables, trace, policy):
-    """(layout, combos, idx, mats [B,M,N,N], s0 [B,N]) shared by the
-    trace-indexed end-time and energy entry points."""
+    """(layout, combos, idx, mats [B,M,N,N], s0 [B,N], arrivals, gvec)
+    shared by the trace-indexed end-time and energy entry points.
+    ``arrivals``/``gvec`` are None for back-to-back traces; an
+    arrival-aware trace additionally gets the per-combo origin-column
+    templates of ``combo_arrival_offsets`` (DESIGN.md §2.6)."""
     layout = StateLayout(trace.channels, trace.ways)
     combos, idx = trace_combos(trace)   # trace-only: shared by the batch
     mats = np.stack([combo_matrices(table, combos, layout, policy)
                      for table in tables])
     s0 = np.broadcast_to(init_state(layout),
                          (mats.shape[0], layout.n_state)).copy()
-    return layout, combos, idx, mats, s0
+    arrivals = gvec = None
+    if trace.arrival_us is not None:
+        arrivals = jnp.asarray(trace.arrival_us, jnp.float32)
+        gvec = jnp.asarray(np.stack([
+            combo_arrival_offsets(table, combos, layout, policy)
+            for table in tables]))
+    return layout, combos, idx, mats, s0, arrivals, gvec
 
 
 def trace_end_time_maxplus(
@@ -129,11 +160,13 @@ def trace_end_time_maxplus(
     single = not isinstance(tables, (list, tuple))
     if single:
         tables = [tables]
-    layout, _, idx, mats, s0 = _combo_setup(tables, trace, policy)
+    layout, _, idx, mats, s0, arrivals, gvec = _combo_setup(
+        tables, trace, policy)
     final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
                          t_steps=trace.n_ops, idx=jnp.asarray(idx),
                          use_kernel=use_kernel, interpret=interpret,
-                         strategy=strategy, segment_len=segment_len)
+                         strategy=strategy, segment_len=segment_len,
+                         arrivals=arrivals, gvec=gvec)
     end = end_time_from_state(np.asarray(final), layout)
     return end[0] if single else end
 
@@ -171,7 +204,8 @@ def trace_energy_maxplus(
         tables, kinds = [tables], [kinds]
     if len(kinds) != len(tables):
         raise ValueError("need one interface kind per op-class table")
-    layout, combos, idx, mats, s0 = _combo_setup(tables, trace, policy)
+    layout, combos, idx, mats, s0, arrivals, gvec = _combo_setup(
+        tables, trace, policy)
     e = np.stack([combo_energy_uj(table, combos, kind)
                   for table, kind in zip(tables, kinds)])
     if strategy == "sequential":
@@ -181,16 +215,18 @@ def trace_energy_maxplus(
             final, acc = maxplus_fold_kernel(
                 jnp.asarray(mats), jnp.asarray(s0), t_steps=trace.n_ops,
                 idx=jnp.asarray(idx), energy=jnp.asarray(e),
-                interpret=interpret)
+                arrivals=arrivals, gvec=gvec, interpret=interpret)
         else:
             final = maxplus_fold_ref(jnp.asarray(mats), jnp.asarray(s0),
                                      t_steps=trace.n_ops,
-                                     idx=jnp.asarray(idx))
+                                     idx=jnp.asarray(idx),
+                                     arrivals=arrivals, gvec=gvec)
             acc = jnp.sum(jnp.asarray(e)[:, idx, :], axis=1)
     elif strategy == "segmented":
-        final = maxplus_fold_segmented(
-            jnp.asarray(mats), jnp.asarray(idx), jnp.asarray(s0),
-            segment_len=segment_len)
+        final = maxplus_fold(
+            jnp.asarray(mats), jnp.asarray(s0), t_steps=trace.n_ops,
+            idx=jnp.asarray(idx), strategy="segmented",
+            segment_len=segment_len, arrivals=arrivals, gvec=gvec)
         acc = jnp.sum(jnp.asarray(e)[:, idx, :], axis=1)
     else:
         raise ValueError(f"unknown trace energy strategy {strategy!r} "

@@ -7,21 +7,37 @@ import jax.numpy as jnp
 
 
 def maxplus_fold_ref(mats: jax.Array, s0: jax.Array, *, t_steps: int,
-                     idx: jax.Array | None = None) -> jax.Array:
+                     idx: jax.Array | None = None,
+                     arrivals: jax.Array | None = None,
+                     gvec: jax.Array | None = None) -> jax.Array:
     """mats: [B, M, N, N]; s0: [B, N] -> [B, N] after t_steps ops.
 
-    ``idx`` [t_steps] selects the matrix per step; None = periodic."""
+    ``idx`` [t_steps] selects the matrix per step; None = periodic.
+    ``arrivals`` [t_steps] + ``gvec`` [B, M, N] add the per-op
+    origin-column max-in of arrival-aware traces (DESIGN.md §2.6):
+    ``s' = max(A_i (x) s, gvec[i] + arrivals[t])``."""
     m = mats.shape[1]
     if idx is None:
         idx = jnp.arange(t_steps, dtype=jnp.int32) % m
     idx = idx.astype(jnp.int32)
+    if arrivals is None:
+        def step(s, i):
+            a = mats[:, i]                                   # [B, N, N]
+            s = jnp.max(a + s[:, None, :], axis=-1)
+            return s, None
 
-    def step(s, i):
+        s, _ = jax.lax.scan(step, s0, idx[:t_steps])
+        return s
+
+    def step_arr(s, op):
+        i, arr = op
         a = mats[:, i]                                       # [B, N, N]
         s = jnp.max(a + s[:, None, :], axis=-1)
-        return s, None
+        return jnp.maximum(s, gvec[:, i] + arr), None
 
-    s, _ = jax.lax.scan(step, s0, idx[:t_steps])
+    s, _ = jax.lax.scan(step_arr, s0,
+                        (idx[:t_steps],
+                         arrivals.astype(s0.dtype)[:t_steps]))
     return s
 
 

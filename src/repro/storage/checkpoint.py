@@ -38,8 +38,9 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.core.sched import lower_static
 from repro.core.sim import SSDConfig
-from repro.core.trace import checkpoint_trace
+from repro.core.workload import checkpoint_requests
 from repro.storage.ssd_model import estimate_trace_interfaces
 
 CHUNK_BYTES = 16 << 20
@@ -124,11 +125,15 @@ class CheckpointEngine:
         final = self.dir / f"step_{step:08d}"
         out.rename(final)
         wall = time.time() - t0
-        # the save is an op trace (chunk-striped write burst), priced on
-        # the joint multi-channel simulation; the trace depends only on
-        # cell/geometry, not on the interface kind, so one per-interface
-        # fan-out through the cached Simulator sessions prices all three
-        tr = checkpoint_trace(nbytes, self.ssd)
+        # the save is a request-level workload (a zero-arrival write
+        # burst: the writer queues every chunk at once), lowered by the
+        # static stripe scheduler onto the tier's geometry and priced on
+        # the joint multi-channel simulation; the placement depends only
+        # on cell/geometry, not on the interface kind, so one
+        # per-interface fan-out through the cached Simulator sessions
+        # prices all three
+        requests = checkpoint_requests(nbytes, self.ssd)
+        tr = lower_static(requests, self.ssd.channels, self.ssd.ways).trace
         modeled = {kind: est.seconds for kind, est in
                    estimate_trace_interfaces(tr, self.ssd,
                                              total_bytes=nbytes).items()}

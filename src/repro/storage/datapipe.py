@@ -29,8 +29,10 @@ from typing import Iterator
 
 import numpy as np
 
+from repro.core.sched import lower_static
 from repro.core.sim import MAX_CHANNELS, SSDConfig
-from repro.core.trace import OpTrace, datapipe_trace
+from repro.core.trace import OpTrace
+from repro.core.workload import RequestStream, datapipe_requests
 
 
 @dataclasses.dataclass
@@ -38,26 +40,41 @@ class PipeState:
     cursor: int
 
 
-def pipeline_io_trace(pipe, n_batches: int,
-                      ssd: SSDConfig | None = None) -> OpTrace | None:
-    """The SSD op trace behind ``n_batches`` of a pipeline's reads.
+def _pipe_ssd(pipe, ssd: SSDConfig | None) -> SSDConfig:
+    # a store may have more shards than the modeled SSD has channels
+    return ssd or SSDConfig(channels=min(len(pipe.store.maps), MAX_CHANNELS),
+                            ways=pipe.ways)
 
-    Way-interleaved shard reads, with the pipe's *observed* hedge rate
-    re-issued on the neighbouring channel — the input for
-    ``repro.storage.ssd_model.estimate_trace`` / trace-aware geometry
-    planning (both served by the cached per-config
-    ``repro.api.Simulator`` sessions, so re-pricing a live pipe every
-    few batches is cheap).  Synthetic pipelines do no I/O and return
-    None."""
+
+def pipeline_io_requests(pipe, n_batches: int,
+                         ssd: SSDConfig | None = None
+                         ) -> RequestStream | None:
+    """The request-level workload behind ``n_batches`` of a pipeline's
+    reads: one read request per page with the pipe's *observed* hedge
+    rate as non-payload duplicate requests — the placement-free input
+    the scheduler layer lowers (or dispatches dynamically) onto a tier
+    geometry.  Synthetic pipelines do no I/O and return None."""
     if not isinstance(pipe, FileBackedTokens):
         return None
-    # a store may have more shards than the modeled SSD has channels
-    ssd = ssd or SSDConfig(channels=min(len(pipe.store.maps), MAX_CHANNELS),
-                           ways=pipe.ways)
+    ssd = _pipe_ssd(pipe, ssd)
     nbytes = n_batches * pipe.batch * (pipe.seq + 1) * 4   # int32 tokens
     served = max(1, pipe.cursor * pipe.batch)
     hedge = min(1.0, pipe.hedged_reads / served)
-    return datapipe_trace(nbytes, ssd, hedge_fraction=hedge)
+    return datapipe_requests(nbytes, ssd, hedge_fraction=hedge)
+
+
+def pipeline_io_trace(pipe, n_batches: int,
+                      ssd: SSDConfig | None = None) -> OpTrace | None:
+    """``pipeline_io_requests`` lowered by the static stripe scheduler —
+    the placed input for ``repro.storage.ssd_model.estimate_trace`` /
+    trace-aware geometry planning (both served by the cached per-config
+    ``repro.api.Simulator`` sessions, so re-pricing a live pipe every
+    few batches is cheap).  Synthetic pipelines return None."""
+    requests = pipeline_io_requests(pipe, n_batches, ssd)
+    if requests is None:
+        return None
+    ssd = _pipe_ssd(pipe, ssd)
+    return lower_static(requests, ssd.channels, ssd.ways).trace
 
 
 class SyntheticTokens:

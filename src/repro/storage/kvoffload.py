@@ -23,8 +23,10 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.nand import CellType
+from repro.core.sched import lower_static
 from repro.core.sim import SSDConfig
-from repro.core.trace import OpTrace, kvoffload_trace
+from repro.core.trace import OpTrace
+from repro.core.workload import RequestStream, kvoffload_requests
 from repro.models.transformer import ModelConfig
 from repro.storage.ssd_model import estimate_trace_interfaces
 
@@ -38,6 +40,7 @@ class KVOffloadPlan:
     read_mb_per_token: float          # SSD traffic per decoded token
     tokens_per_s: dict[str, float]    # interface -> sustainable decode rate
     trace: OpTrace | None = None      # per-token op trace (window)
+    requests: RequestStream | None = None   # placement-free workload window
     note: str = ""
 
 
@@ -75,12 +78,15 @@ def plan_kv_offload(cfg: ModelConfig, seq_len: int, *,
     # and appends one token's KV — a mixed read/write trace per token
     read_mb = cold_total / 1e6
     per_token_mb = (cold_total + cold_rate) / 1e6   # read burst + KV append
-    # the trace depends only on geometry/cell, not on the interface kind;
-    # one fan-out through the cached Simulator sessions prices the mixed
-    # window's sustained rate under all three interfaces
+    # the decode loop is a request-level workload (read burst + append
+    # writes per token); the stripe lowering depends only on
+    # geometry/cell, not on the interface kind, so one fan-out through
+    # the cached Simulator sessions prices the mixed window's sustained
+    # rate under all three interfaces
     base = SSDConfig(cell=cell, channels=channels, ways=ways)
-    trace = kvoffload_trace(cold_total, base, n_tokens=2,
-                            append_bytes_per_token=cold_rate)
+    requests = kvoffload_requests(cold_total, base, n_tokens=2,
+                                  append_bytes_per_token=cold_rate)
+    trace = lower_static(requests, base.channels, base.ways).trace
     rates = {kind: est.bandwidth_mb_s / per_token_mb
              for kind, est in estimate_trace_interfaces(trace, base).items()}
     return KVOffloadPlan(
@@ -91,6 +97,7 @@ def plan_kv_offload(cfg: ModelConfig, seq_len: int, *,
         read_mb_per_token=read_mb,
         tokens_per_s=rates,
         trace=trace,
+        requests=requests,
         note=f"{cfg.name}: full-attention KV {cold_total/2**30:.1f} GiB/seq at "
              f"S={seq_len}; PROPOSED sustains "
              f"{rates['proposed']:.2f} tok/s vs CONV {rates['conv']:.2f}.")

@@ -35,16 +35,22 @@ API_SNAPSHOT = {
     "CapabilityError": "<class>",
     "EngineCaps": "(name: 'str', heterogeneous: 'bool', "
                   "batched_tables: 'bool', energy: 'bool', "
-                  "jittable: 'bool') -> None",
+                  "jittable: 'bool', arrivals: 'bool' = False, "
+                  "dispatch: 'bool' = False) -> None",
     "OBJECTIVES": ("end_time", "bandwidth", "energy", "all"),
-    "SimRequest": "(trace: 'OpTrace', policy: 'Policy | None' = None, "
+    "SimRequest": "(trace: 'OpTrace | None' = None, "
+                  "policy: 'Policy | None' = None, "
                   "objective: 'Objective' = 'end_time', "
                   "engine: 'str | None' = None, "
-                  "segment_len: 'int | None' = 64) -> None",
+                  "segment_len: 'int | None' = 64, "
+                  "workload: 'RequestStream | None' = None, "
+                  "sched_policy: 'str | None' = None) -> None",
     "SimResult": "(end_us: 'float', mb_s: 'float | None', "
                  "channel_busy_us: 'np.ndarray', "
                  "energy: 'EnergyBreakdown | None', engine: 'str', "
-                 "n_ops: 'int', payload_bytes: 'int') -> None",
+                 "n_ops: 'int', payload_bytes: 'int', "
+                 "request_lat_us: 'np.ndarray | None' = None, "
+                 "sched_policy: 'str | None' = None) -> None",
     "Simulator": "(config: 'SSDConfig | None' = None, *, "
                  "table: 'OpClassTable | None' = None, "
                  "kind: 'InterfaceKind | str | None' = None)",
@@ -52,7 +58,8 @@ API_SNAPSHOT = {
     "get_engine": "(name: 'str') -> 'Engine'",
     "register_engine": "(name: 'str', *, heterogeneous: 'bool', "
                        "batched_tables: 'bool', energy: 'bool', "
-                       "jittable: 'bool')",
+                       "jittable: 'bool', arrivals: 'bool' = False, "
+                       "dispatch: 'bool' = False)",
     "registered_engines": "() -> 'tuple[str, ...]'",
     "simulator_for": "(config: 'SSDConfig') -> 'Simulator'",
     "steady_bandwidth_mb_s": "(cfg: 'SSDConfig', mode: 'str', "
@@ -71,8 +78,8 @@ API_SNAPSHOT = {
 }
 
 SIMULATOR_METHODS = {
-    "run": "(self, request: 'SimRequest | OpTrace', /, **overrides) "
-           "-> 'SimResult'",
+    "run": "(self, request: 'SimRequest | OpTrace | RequestStream', /, "
+           "**overrides) -> 'SimResult'",
     "run_many": "(self, traces, *, policy: 'Policy | None' = None, "
                 "objective: 'Objective' = 'end_time', "
                 "engine: 'str | None' = None, "
@@ -102,7 +109,9 @@ def test_api_surface_snapshot():
     # every snapshot name (plus the protocol/type re-exports) is exported
     assert set(API_SNAPSHOT) <= set(api.__all__)
     for extra in ("Engine", "Policy", "Objective", "SSDConfig", "OpTrace",
-                  "OpClassTable", "EnergyBreakdown", "workload_trace"):
+                  "OpClassTable", "EnergyBreakdown", "workload_trace",
+                  "RequestStream", "poisson_stream", "closed_loop_stream",
+                  "build_workload", "lower_static", "SCHED_POLICIES"):
         assert extra in api.__all__, extra
 
 

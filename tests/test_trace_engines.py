@@ -175,13 +175,22 @@ def test_trace_builders_structure():
     est_bytes = mixed.total_bytes(table)
     assert est_bytes == int(np.sum(table.data_bytes[mixed.cls]))
 
-    # named registry: routes kwargs through, rejects unknown names/kwargs
-    wt = tr.workload_trace("mixed", cfg, read_fraction=0.3, seed=9)
+    # named registry (now the workload layer): routes kwargs through,
+    # names the valid kinds on unknown names, rejects unknown kwargs;
+    # the old trace.workload_trace survives as a DeprecationWarning shim
+    from repro.core.workload import build_workload
+    wt = build_workload("mixed", cfg, read_fraction=0.3, seed=9)
     assert abs(wt.read_fraction() - 0.3) < 0.07
-    with pytest.raises(KeyError):
-        tr.workload_trace("nonsense", cfg)
+    with pytest.deprecated_call():
+        wt_shim = tr.workload_trace("mixed", cfg, read_fraction=0.3, seed=9)
+    assert np.array_equal(wt_shim.cls, wt.cls)
+    with pytest.raises(ValueError, match="steady_read"):
+        build_workload("nonsense", cfg)
+    with pytest.deprecated_call():
+        with pytest.raises(ValueError, match="valid|kind"):
+            tr.workload_trace("nonsense", cfg)
     with pytest.raises(TypeError):
-        tr.workload_trace("steady_read", cfg, bogus_kwarg=1)
+        build_workload("steady_read", cfg, bogus_kwarg=1)
     with pytest.raises(AssertionError):
         tr.steady_trace(8, channels=99, ways=4)
 

@@ -1,0 +1,333 @@
+"""Request-level workloads + scheduler/dispatch layer (DESIGN.md §2.6):
+arrival-aware cross-engine agreement, static-lowering regression pins,
+dynamic dispatch via the registry, per-request latency percentiles, and
+the OpTrace validation hardening.
+
+Deliberately hypothesis-free (plain numpy RNG / fixed seed grids) so the
+suite runs in minimal environments, like tests/test_trace_engines.py."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import sched, trace as tr, workload as wl
+from repro.core.nand import CellType
+from repro.core.sim import SSDConfig, dispatch_trace
+from repro.core.sim_ref import (simulate_trace_completions_ref,
+                                simulate_trace_ref)
+from repro.kernels.maxplus.ops import trace_end_time_maxplus
+
+
+def _tol(ref_us, n_ops):
+    # <= 1e-3 us/op plus the float32 ulp floor at the end-time magnitude
+    return 1e-3 * n_ops + 1e-5 * ref_us
+
+
+def _arrival_trace(channels, ways, seed, n_ops=144):
+    """A mixed trace with sorted random arrivals attached — the raw
+    arrival-aware input every engine must agree on."""
+    rng = np.random.default_rng(seed)
+    t = tr.mixed_trace(n_ops, channels, ways,
+                       read_fraction=float(rng.random()), seed=seed)
+    arr = np.sort(rng.uniform(0.0, 120.0 * n_ops, n_ops)).astype(np.float32)
+    return dataclasses.replace(t, arrival_us=arr)
+
+
+# --- cross-engine agreement on arrival-aware traces -------------------------
+
+
+@pytest.mark.parametrize("ways", [1, 2, 4, 8, 16])
+@pytest.mark.parametrize("policy", ["eager", "batched"])
+def test_arrival_aware_engines_agree(ways, policy):
+    """scan / prefix / pallas / oracle agree < 1e-3 on arrival-aware
+    traces for channels 1-4 x ways 1-16 x both issue policies — the
+    arrival threading touches four independent implementations of the
+    recurrence, so agreement is the whole correctness story."""
+    for channels in (1, 2, 4):
+        cfg = SSDConfig(cell=CellType.MLC, channels=channels, ways=ways)
+        sim = api.Simulator.for_config(cfg)
+        trace = _arrival_trace(channels, ways, seed=ways * 31 + channels)
+        ref = simulate_trace_ref(sim.table, trace, policy)
+        tol = _tol(ref, trace.n_ops)
+        for engine in ("scan", "prefix", "pallas", "oracle"):
+            got = sim.run(trace, policy=policy, engine=engine).end_us
+            assert abs(got - ref) <= tol, (engine, channels, ways, policy)
+        # the arrival gate is real: zeroing arrivals finishes no later
+        bare = simulate_trace_ref(
+            sim.table, dataclasses.replace(trace, arrival_us=None), policy)
+        assert bare <= ref + tol
+
+
+def test_arrival_trace_through_batched_and_packed_paths():
+    """The masked bucket fold (run / run_many) and the batched-tables
+    sweeps carry arrivals identically to the per-trace scan."""
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    sim = api.Simulator.for_config(cfg)
+    traces = [_arrival_trace(2, 4, seed=s, n_ops=n)
+              for s, n in ((1, 60), (2, 100), (3, 100), (4, 33))]
+    many = sim.run_many(traces)
+    for t, r in zip(traces, many):
+        ref = simulate_trace_ref(sim.table, t, "eager")
+        assert abs(r.end_us - ref) <= _tol(ref, t.n_ops)
+        assert r.end_us == sim.run(t).end_us
+    # one arrival trace under stacked tables (prefix + scan + pallas)
+    t0 = traces[1]
+    tables = [sim.table, api.Simulator.for_config(
+        SSDConfig(cell=CellType.SLC, channels=2, ways=4)).table]
+    ref = [simulate_trace_ref(tab, t0, "eager") for tab in tables]
+    for engine in ("scan", "prefix", "pallas"):
+        got = api.sweep_tables(tables, t0, engine=engine)
+        np.testing.assert_allclose(got, ref, rtol=1e-3, err_msg=engine)
+
+
+def test_squaring_rejects_arrivals_naming_alternatives():
+    cfg = SSDConfig(cell=CellType.MLC, channels=1, ways=4)
+    sim = api.Simulator.for_config(cfg)
+    steady = tr.steady_trace(32, 1, 4, tr.READ)
+    witharr = dataclasses.replace(
+        steady, arrival_us=np.linspace(0, 1e4, 32).astype(np.float32))
+    with pytest.raises(api.CapabilityError, match="oracle, pallas"):
+        sim.run(witharr, engine="squaring")
+    # zero arrivals stay inside squaring's periodic domain
+    zeroed = dataclasses.replace(steady,
+                                 arrival_us=np.zeros(32, np.float32))
+    assert sim.run(zeroed, engine="squaring").end_us == pytest.approx(
+        sim.run(steady, engine="scan").end_us, rel=1e-3)
+
+
+# --- workload builders -------------------------------------------------------
+
+
+def test_workload_builders_structure():
+    p = wl.poisson_stream(200, 50.0, read_fraction=0.5, seed=1)
+    assert p.n_requests == 200 and p.arrival_us[0] == 0.0
+    assert np.all(np.diff(p.arrival_us) >= 0)
+    assert 0.3 < np.mean(p.op_cls == tr.READ) < 0.7
+
+    b = wl.bursty_stream(64, burst_len=16, gap_us=1000.0, intra_us=2.0)
+    gaps = np.diff(b.arrival_us.astype(np.float64))
+    assert np.sum(gaps > 100.0) == 3          # 4 bursts -> 3 idle gaps
+
+    c = wl.closed_loop_stream(40, queue_depth=4, service_us=100.0)
+    assert np.all(c.arrival_us[:4] == 0.0)    # QD admits the first N at t0
+    assert np.all(np.diff(c.arrival_us) >= 0)
+    assert c.arrival_us[-1] > 0
+
+    m = wl.multi_tenant([p, b, c])
+    assert m.n_requests == 304
+    assert np.all(np.diff(m.arrival_us) >= 0)
+    assert set(np.unique(m.stream)) == {0, 1, 2}
+    assert "3 stream(s)" in m.describe()
+    with pytest.raises(ValueError, match="at least one"):
+        wl.multi_tenant([])
+
+    cls, arr, req, payload = wl.request_ops(
+        wl.poisson_stream(10, 5.0, pages_per_request=3))
+    assert len(cls) == 30 and np.all(payload)
+    assert np.array_equal(req, np.repeat(np.arange(10), 3))
+
+    with pytest.raises(ValueError, match="non-decreasing"):
+        wl.RequestStream(arrival_us=np.array([5.0, 1.0], np.float32),
+                         op_cls=np.zeros(2, np.int32),
+                         n_pages=np.ones(2, np.int32),
+                         stream=np.zeros(2, np.int32))
+    with pytest.raises(ValueError, match="n_pages"):
+        wl.RequestStream(arrival_us=np.zeros(2, np.float32),
+                         op_cls=np.zeros(2, np.int32),
+                         n_pages=np.zeros(2, np.int32),
+                         stream=np.zeros(2, np.int32))
+
+
+# --- static lowering: regression pins + the second static policy ------------
+
+
+def test_static_stripe_lowering_pins_old_builders_per_engine():
+    """Acceptance pin: the stripe lowering of a zero-arrival
+    RequestStream is numerically identical to the retired builders'
+    traces on every engine."""
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    sim = api.Simulator.for_config(cfg)
+    ck = tr.checkpoint_trace(10 << 20, cfg)     # builder (itself lowered)
+    low = sched.lower_static(wl.checkpoint_requests(10 << 20, cfg), 2, 4)
+    assert low.trace.arrival_us is None         # zero arrivals normalise
+    for name in ("channel", "way", "parity", "cls"):
+        np.testing.assert_array_equal(getattr(low.trace, name),
+                                      getattr(ck, name))
+    for engine in ("scan", "prefix", "pallas", "oracle"):
+        assert sim.run(low.trace, engine=engine).end_us == \
+            sim.run(ck, engine=engine).end_us, engine
+    # ... and through the workload path of the Simulator itself
+    res = sim.run(wl.checkpoint_requests(10 << 20, cfg),
+                  sched_policy="stripe")
+    assert res.end_us == sim.run(ck).end_us
+    assert res.sched_policy == "stripe" and res.request_lat_us is not None
+
+
+def test_round_robin_static_policy_is_way_first():
+    s = wl.poisson_stream(24, 10.0, seed=3)
+    low = sched.lower_static(s, channels=2, ways=4, policy="round_robin")
+    t = np.arange(24)
+    np.testing.assert_array_equal(low.trace.way, t % 4)
+    np.testing.assert_array_equal(low.trace.channel, (t // 4) % 2)
+    st = sched.lower_static(s, channels=2, ways=4, policy="stripe")
+    np.testing.assert_array_equal(st.trace.channel, t % 2)
+    with pytest.raises(ValueError, match="unknown sched policy"):
+        sched.lower_static(s, 2, 4, policy="striipe")
+    with pytest.raises(ValueError, match="dynamic"):
+        sched.lower_static(s, 2, 4, policy="least_loaded")
+
+
+# --- dynamic dispatch --------------------------------------------------------
+
+
+def test_dynamic_policies_produce_latency_percentiles():
+    """Acceptance: both dynamic policies answer through Simulator.run
+    with p50/p99 request latencies; the dispatch capability is enforced
+    by the registry for engines that cannot dispatch."""
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    sim = api.Simulator.for_config(cfg)
+    load = api.poisson_stream(200, mean_interarrival_us=40.0,
+                              read_fraction=0.7, seed=2)
+    for rule in ("least_loaded", "earliest_ready"):
+        res = sim.run(load, sched_policy=rule, objective="all")
+        assert res.sched_policy == rule and res.engine == "scan"
+        assert res.request_lat_us is not None
+        assert len(res.request_lat_us) == load.n_requests
+        assert 0 < res.p50_us <= res.p99_us
+        assert res.energy is not None and res.energy.controller_j > 0
+    for engine in ("prefix", "pallas", "oracle", "squaring"):
+        with pytest.raises(api.CapabilityError, match="engines that do"):
+            sim.run(load, sched_policy="least_loaded", engine=engine)
+    with pytest.raises(ValueError, match="eager"):
+        sim.run(load, sched_policy="least_loaded", policy="batched")
+    with pytest.raises(ValueError, match="exactly one"):
+        api.SimRequest(trace=tr.mixed_trace(8, 2, 4, 0.5), workload=load)
+    with pytest.raises(ValueError, match="sched_policy"):
+        api.SimRequest(trace=tr.mixed_trace(8, 2, 4, 0.5),
+                       sched_policy="stripe")
+
+
+def test_dispatch_placement_replays_on_every_engine():
+    """The dispatch fold returns a full placement; replaying it as a
+    static OpTrace through any engine (and the oracle) reproduces the
+    dispatched end time — dynamic dispatch is the same recurrence plus
+    an argmin, not a different simulator."""
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    sim = api.Simulator.for_config(cfg)
+    load = api.multi_tenant([
+        api.bursty_stream(60, burst_len=12, gap_us=800.0,
+                          read_fraction=0.2, seed=5, stream=0),
+        api.poisson_stream(60, mean_interarrival_us=60.0, seed=6,
+                           stream=1)])
+    cls, arr, req, _ = wl.request_ops(load)
+    end, comp, chan, way, par = (
+        api.get_engine("scan").dispatch_run(
+            sim, cls, arr, n_channels=2, n_ways=4, rule="least_loaded"))
+    replay = tr.OpTrace(cls=cls, channel=chan, way=way, parity=par,
+                        channels=2, ways=4,
+                        arrival_us=np.asarray(arr, np.float32))
+    ref = simulate_trace_ref(sim.table, replay, "eager")
+    assert abs(end - ref) <= _tol(ref, replay.n_ops)
+    for engine in ("prefix", "pallas"):
+        got = sim.run(replay, engine=engine).end_us
+        assert abs(got - ref) <= _tol(ref, replay.n_ops), engine
+    # completions agree with the oracle's per-op completions
+    _, comp_ref = simulate_trace_completions_ref(sim.table, replay, "eager")
+    np.testing.assert_allclose(comp, comp_ref,
+                               atol=_tol(ref, replay.n_ops))
+    # raw fold validates its rule literal
+    with pytest.raises(ValueError, match="unknown dispatch rule"):
+        dispatch_trace(*(np.zeros(1, np.float32),) * 7,
+                       np.zeros(1, np.int32), np.zeros(1, np.float32),
+                       n_channels=1, n_ways=1, rule="bogus")
+
+
+def test_dynamic_least_loaded_beats_static_stripe_on_skewed_load():
+    """Property (fixed deterministic grid): on hot/cold-skewed
+    multi-tenant workloads — a bursty write-heavy tenant over a trickle
+    of reads — dynamic least-loaded dispatch never ends later than the
+    static stripe lowering, and wins clearly on average."""
+    ratios = []
+    for seed in range(6):
+        for channels, ways in ((2, 4), (2, 8), (4, 4), (4, 8)):
+            cfg = SSDConfig(cell=CellType.MLC, channels=channels, ways=ways)
+            sim = api.Simulator.for_config(cfg)
+            hot = api.bursty_stream(100, burst_len=20, gap_us=1500.0,
+                                    read_fraction=0.1, seed=seed, stream=0)
+            cold = api.poisson_stream(100, mean_interarrival_us=80.0,
+                                      read_fraction=0.9, seed=seed + 100,
+                                      stream=1)
+            load = api.multi_tenant([hot, cold])
+            st = sim.run(load, sched_policy="stripe")
+            dyn = sim.run(load, sched_policy="least_loaded")
+            ratios.append(dyn.end_us / st.end_us)
+            # the tail is where dispatch pays: p99 dominance holds on
+            # the whole grid ...
+            assert dyn.p99_us <= st.p99_us * (1 + 1e-6), \
+                (seed, channels, ways)
+            # ... makespan dominance on every contended geometry (at 32
+            # chips / 200 requests the device is underloaded and the
+            # makespan is an arrival-bound near-tie either way)
+            if (channels, ways) != (4, 8):
+                assert dyn.end_us <= st.end_us * (1 + 1e-6), \
+                    (seed, channels, ways)
+    assert np.mean(ratios) < 0.9
+
+
+def test_latency_percentiles_cover_payload_requests_only():
+    """Hedged duplicates are transport, not requests: they must not
+    appear in the latency percentiles (a duplicate queueing behind its
+    primary would inflate the tail of the very mechanism that exists to
+    cut it).  Also pins the bucketed completions closure: nearby
+    workload lengths share one compiled fold."""
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    sim = api.Simulator(cfg)                      # fresh session
+    req = wl.datapipe_requests(4 << 20, cfg, hedge_fraction=0.5, seed=0)
+    assert not req.payload_mask().all()
+    res = sim.run(req, sched_policy="stripe")
+    assert len(res.request_lat_us) == int(req.payload_mask().sum())
+    # same power-of-two bucket -> the completions closure is a cache hit
+    misses = sim.cache_info().misses
+    sim.run(wl.poisson_stream(req.n_requests - 7, 20.0), sched_policy="stripe")
+    assert sim.cache_info().misses == misses
+
+
+# --- OpTrace validation hardening (satellite) --------------------------------
+
+
+def test_optrace_validates_geometry_on_construction():
+    """Out-of-range channel/way used to scatter with mode='drop' in the
+    prefix path (the op silently vanished); now construction raises."""
+    ok = dict(cls=np.zeros(4, np.int32), channel=np.zeros(4, np.int32),
+              way=np.zeros(4, np.int32), parity=np.zeros(4, np.int32),
+              channels=2, ways=4)
+    tr.OpTrace(**ok)                               # in range: fine
+    with pytest.raises(ValueError, match="channel out of range"):
+        tr.OpTrace(**{**ok, "channel": np.array([0, 1, 2, 0], np.int32)})
+    with pytest.raises(ValueError, match="way out of range"):
+        tr.OpTrace(**{**ok, "way": np.array([0, 4, 0, 0], np.int32)})
+    with pytest.raises(ValueError, match="non-negative"):
+        tr.OpTrace(**{**ok, "cls": np.array([0, -1, 0, 0], np.int32)})
+    with pytest.raises(ValueError, match="length"):
+        tr.OpTrace(**{**ok, "way": np.zeros(3, np.int32)})
+    with pytest.raises(ValueError, match="arrival_us"):
+        tr.OpTrace(**ok, arrival_us=np.array([0, -1, 0, 0], np.float32))
+    # the op-class bound needs the table; the session checks it
+    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+    sim = api.Simulator.for_config(cfg)
+    bad_cls = tr.OpTrace(**{**ok, "cls": np.array([0, 7, 0, 0], np.int32)})
+    with pytest.raises(ValueError, match="n_classes"):
+        sim.run(bad_cls)
+    with pytest.raises(ValueError, match="n_classes"):
+        sim.run_many([bad_cls])
+    # the workload path checks before the dispatch fold runs (a clamped
+    # simulation followed by a numpy IndexError is not a report)
+    bad_req = dataclasses.replace(wl.poisson_stream(8, 10.0),
+                                  op_cls=np.full(8, 7, np.int32))
+    for policy in ("stripe", "least_loaded"):
+        with pytest.raises(ValueError, match="n_classes"):
+            sim.run(bad_req, sched_policy=policy)
+    # degenerate builder sizes stay well-formed
+    assert wl.poisson_stream(0, 10.0).n_requests == 0
