@@ -100,6 +100,13 @@ def run(small: bool = False) -> list[dict]:
          "value": round(t_first / max(t_second, 1e-9), 1), "paper": ">=5"},
         {"name": "api/session_cache_entries",
          "value": sim.cache_info().entries, "paper": "-"},
+        {"name": "api/session_cache_hits",
+         "value": sim.cache_info().hits, "paper": "-"},
+        {"name": "api/session_cache_misses",
+         "value": sim.cache_info().misses, "paper": "-"},
+        {"name": "api/session_cache_evictions",
+         "value": sim.cache_info().evictions,
+         "paper": "0"},   # default bound (512) never evicts here
         {"name": "api/run_many_us_per_trace",
          "value": round(t_many / len(traces) * 1e6, 1), "paper": "-"},
         {"name": "api/engine_max_rel_disagreement",

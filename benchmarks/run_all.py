@@ -9,10 +9,13 @@ the engines is tracked across PRs by diffing the JSON files.
 
 ``--smoke`` shrinks trace lengths for CI: it still executes every
 engine and **fails on engine disagreement** — on end times (the
-``assert agree < 1e-3`` paths inside ``sweep_bench``) and on the
+``assert agree < 1e-3`` paths inside ``sweep_bench``), on the
 phase-resolved Table 5 / mixed-trace energy totals (the matching
-asserts in ``tables.run_table5`` and ``sweep_bench.run_mixed``) — and
-on a log-depth speedup < 1 in a full (non-smoke) run.
+asserts in ``tables.run_table5`` and ``sweep_bench.run_mixed``), and
+on the fleet-scale paths (``scale_bench``: streaming vs oracle,
+megakernel vs scan, sharded sweep == vmap) — and, in a full
+(non-smoke) run only, on a log-depth speedup < 1, a megakernel
+speedup < 2x, or a non-constant-memory streaming fold.
 """
 
 from __future__ import annotations
@@ -103,8 +106,8 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import (api_bench, freq, roofline, sched_bench,
-                            sweep_bench, tables)
+    from benchmarks import (api_bench, freq, roofline, scale_bench,
+                            sched_bench, sweep_bench, tables)
 
     t0 = time.perf_counter()
     sections = [
@@ -124,6 +127,11 @@ def main() -> None:
         # gates (smoke too): arrival-aware cross-engine agreement and
         # dynamic-dispatch-vs-static-stripe end-time/p99 sanity
         _section("sched", lambda: sched_bench.run(small=args.smoke)),
+        # fleet-scale paths (DESIGN.md §2.7); gates: streaming/megakernel
+        # cross-engine agreement < 1e-3 + sharded==vmap (smoke too);
+        # megakernel >= 2x over per-trace launches and million-op
+        # constant-memory streaming in full runs only
+        _section("scale", lambda: scale_bench.run(small=args.smoke)),
     ]
     _check_speedups(sections, args.smoke)
 

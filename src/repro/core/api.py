@@ -62,6 +62,7 @@ code can never call its own deprecated surface.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Literal, Protocol, runtime_checkable
@@ -283,9 +284,12 @@ class _EngineBase:
         self._unsupported("homogeneous design-point sweeps", "sweep_steady")
 
     def completions(self, sim: "Simulator", trace: OpTrace, *,
-                    batched: bool) -> tuple[float, np.ndarray]:
+                    batched: bool,
+                    segment_len: int | None = None
+                    ) -> tuple[float, np.ndarray]:
         """(end_us, [T] per-op completion times) — what request-latency
-        percentiles are computed from."""
+        percentiles are computed from.  ``segment_len`` is the chunk
+        length for chunked engines (others ignore it)."""
         self._unsupported("per-op completion times", "completions")
 
     def dispatch_run(self, sim: "Simulator", cls, arrival_us, *,
@@ -311,7 +315,7 @@ class ScanEngine(_EngineBase):
                 n_channels=trace.channels, batched=batched))
         return float(fn(*_padded_trace_args(trace, t_b)))
 
-    def completions(self, sim, trace, *, batched):
+    def completions(self, sim, trace, *, batched, segment_len=None):
         t_b = _bucket_len(trace.n_ops)
         fn = sim._closure(
             ("scan-completions", trace.channels, t_b, batched),
@@ -496,6 +500,85 @@ class PallasEngine(_EngineBase):
             list(tables), trace, policy=_policy_name(batched)))
 
 
+@register_engine("streaming", heterogeneous=True, batched_tables=False,
+                 energy=True, jittable=True, arrivals=True)
+class StreamingEngine(_EngineBase):
+    """Constant-memory chunked fold (DESIGN.md §2.7): the trace streams
+    through ``sim.trace_chunk_fold`` in fixed-size masked chunks, with
+    the occupancy state tuple, the arrival origin row and the
+    phase-energy accumulator carried between chunks — the segment-product
+    recurrence of §2.3 specialised to its concrete carried state, so any
+    chunking reproduces the scan engine *bit-for-bit* while peak live
+    memory stays O(chunk) regardless of trace length.  ``segment_len``
+    is the chunk length; :meth:`Simulator.run_stream` feeds this engine
+    chunk iterators that never materialise the trace at all."""
+
+    def _fold(self, sim, chunks, *, batched, kind=None, want_comp=False):
+        """Fold an iterator of ``OpTrace`` chunks; returns
+        ``(end_us, [P] energy sums, comp list | None, channels)``.
+        Chunks are padded to power-of-two length buckets, so a stream of
+        equal-size chunks compiles exactly once (plus once for a ragged
+        tail bucket)."""
+        e_tab = None if kind is None else sim._energy_table(kind)
+        carry = None
+        channels = None
+        comps = [] if want_comp else None
+        end = None
+        for chunk in chunks:
+            if chunk.n_ops == 0:
+                continue
+            if channels is None:
+                channels = chunk.channels
+                if e_tab is None:
+                    e_tab = jnp.zeros((sim.table.n_classes, 2, 1),
+                                      jnp.float32)
+                carry = _sim.trace_chunk_init(channels, e_tab.shape[-1])
+            elif chunk.channels != channels:
+                raise ValueError(
+                    f"streaming chunks switched geometry mid-stream: "
+                    f"{chunk.channels} channels after {channels}")
+            l_b = _bucket_len(chunk.n_ops)
+            fn = sim._closure(
+                ("stream", channels, l_b, batched, kind is not None),
+                lambda channels=channels: functools.partial(
+                    _sim.trace_chunk_fold, *sim._targs,
+                    n_channels=channels, batched=batched))
+            state, acc, end, comp = fn(
+                e_tab, *_padded_trace_args(chunk, l_b),
+                *_carry_args(carry))
+            carry = (state, acc)
+            if want_comp:
+                comps.append(np.asarray(comp, np.float64)[: chunk.n_ops])
+        if channels is None:
+            raise ValueError("empty trace: no ops to simulate")
+        return float(end), np.asarray(carry[1], np.float64), comps, channels
+
+    def end_time(self, sim, trace, *, batched, segment_len):
+        end, _, _, _ = self._fold(
+            sim, _trace.iter_trace_chunks(trace, segment_len or 64),
+            batched=batched)
+        return end
+
+    def energy_sums(self, sim, trace, kind, *, batched, segment_len):
+        end, sums, _, _ = self._fold(
+            sim, _trace.iter_trace_chunks(trace, segment_len or 64),
+            batched=batched, kind=kind)
+        return end, sums
+
+    def completions(self, sim, trace, *, batched, segment_len=None):
+        end, _, comps, _ = self._fold(
+            sim, _trace.iter_trace_chunks(trace, segment_len or 64),
+            batched=batched, want_comp=True)
+        return end, np.concatenate(comps)
+
+
+def _carry_args(carry):
+    """Flatten the ``trace_chunk_fold`` carry back into its positional
+    argument order ``(bus, chip, ctrl, round_start, energy_acc)``."""
+    (bus_free, chip_free, ctrl_free, round_start), acc = carry
+    return bus_free, chip_free, ctrl_free, round_start, acc
+
+
 @register_engine("oracle", heterogeneous=True, batched_tables=False,
                  energy=True, jittable=False, arrivals=True)
 class OracleEngine(_EngineBase):
@@ -507,7 +590,7 @@ class OracleEngine(_EngineBase):
         return float(simulate_trace_ref(sim.table, trace,
                                         _policy_name(batched)))
 
-    def completions(self, sim, trace, *, batched):
+    def completions(self, sim, trace, *, batched, segment_len=None):
         from repro.core.sim_ref import simulate_trace_completions_ref
         end, comp = simulate_trace_completions_ref(
             sim.table, trace, _policy_name(batched))
@@ -624,6 +707,8 @@ class CacheInfo:
     hits: int
     misses: int
     entries: int
+    evictions: int = 0
+    max_entries: int | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -646,10 +731,14 @@ class Simulator:
 
     def __init__(self, config: SSDConfig | None = None, *,
                  table: OpClassTable | None = None,
-                 kind: InterfaceKind | str | None = None):
+                 kind: InterfaceKind | str | None = None,
+                 max_cache_entries: int | None = 512):
         if config is None and table is None:
             raise ValueError("Simulator needs an SSDConfig or an "
                              "OpClassTable")
+        if max_cache_entries is not None and max_cache_entries < 1:
+            raise ValueError("max_cache_entries must be >= 1 or None "
+                             f"(unbounded), got {max_cache_entries}")
         self.config = config
         self.table = table if table is not None else op_class_table(config)
         if kind is not None:
@@ -662,9 +751,12 @@ class Simulator:
                             for f in _TABLE_FIELDS)
         self._e_tables: dict[InterfaceKind, jax.Array] = {}
         self._e_tables_np: dict[InterfaceKind, np.ndarray] = {}
-        self._closures: dict[tuple, object] = {}
+        self.max_cache_entries = max_cache_entries
+        self._closures: collections.OrderedDict[tuple, object] = \
+            collections.OrderedDict()
         self._hits = 0
         self._misses = 0
+        self._evictions = 0
 
     # -- shared per-config sessions ----------------------------------------
 
@@ -677,20 +769,31 @@ class Simulator:
     # -- closure cache ------------------------------------------------------
 
     def _closure(self, key: tuple, build):
+        """LRU-bounded jit-closure cache: hits refresh recency, misses
+        build and (past ``max_cache_entries``) evict the least recently
+        used closure — a long-lived session sweeping many geometries and
+        length buckets holds a bounded working set instead of growing
+        without limit."""
         fn = self._closures.get(key)
         if fn is None:
             self._misses += 1
             fn = self._closures[key] = build()
+            if (self.max_cache_entries is not None
+                    and len(self._closures) > self.max_cache_entries):
+                self._closures.popitem(last=False)
+                self._evictions += 1
         else:
             self._hits += 1
+            self._closures.move_to_end(key)
         return fn
 
     def cache_info(self) -> CacheInfo:
-        return CacheInfo(self._hits, self._misses, len(self._closures))
+        return CacheInfo(self._hits, self._misses, len(self._closures),
+                         self._evictions, self.max_cache_entries)
 
     def cache_clear(self) -> None:
         self._closures.clear()
-        self._hits = self._misses = 0
+        self._hits = self._misses = self._evictions = 0
 
     def _energy_table(self, kind: InterfaceKind) -> jax.Array:
         e = self._e_tables.get(kind)
@@ -850,7 +953,8 @@ class Simulator:
         lat = None
         base = getattr(_EngineBase, "completions")
         if getattr(type(eng), "completions", base) is not base:
-            end_us, comp = eng.completions(self, trace, batched=batched)
+            end_us, comp = eng.completions(self, trace, batched=batched,
+                                           segment_len=request.segment_len)
             lat = _payload_latencies(lowered, comp, stream)
         else:   # makespan-only engines (log-depth forms)
             end_us = eng.end_time(self, trace, batched=batched,
@@ -866,13 +970,27 @@ class Simulator:
     def run_many(self, traces, *, policy: Policy | None = None,
                  objective: Objective = "end_time",
                  engine: str | None = None,
-                 segment_len: int | None = 64) -> list[SimResult]:
+                 segment_len: int | None = 64,
+                 shard: bool | None = None) -> list[SimResult]:
         """The batched serving path: pack heterogeneous traces into
         power-of-two length buckets per (channels, bucket) group and
         evaluate each group in one vmapped masked fold — results are
         identical to per-trace :meth:`run` (masked padding is a state
-        no-op).  Engines other than ``scan`` fall back to a per-trace
-        loop through the same session cache."""
+        no-op).  The bucket grid is derived from the traces actually
+        present: empty power-of-two buckets are never compiled, and each
+        group's *batch* dimension also rounds up to a power of two (with
+        all-invalid padding rows) so batch-size jitter between calls
+        reuses the compiled fold instead of recompiling per group size.
+
+        ``engine="pallas"`` evaluates each (channels, ways) group as ONE
+        fused megakernel launch over the union combo dictionary and all
+        length buckets (``repro.kernels.maxplus.ops.
+        run_many_end_time_maxplus``); other engines fall back to a
+        per-trace loop through the same session cache.  With more than
+        one device present (``shard=None`` auto / ``shard=True``), the
+        scan groups additionally shard their batch rows across devices
+        with ``jax.shard_map``; ``shard=False`` forces the single-device
+        vmap path."""
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r} "
                              f"(one of {', '.join(OBJECTIVES)})")
@@ -885,7 +1003,7 @@ class Simulator:
             if t.n_ops == 0:
                 raise ValueError("empty trace: no ops to simulate")
             t.validate_against(self.table)
-        if name != "scan":
+        if name not in ("scan", "pallas"):
             return [self.run(SimRequest(trace=t, policy=policy,
                                         objective=objective, engine=name,
                                         segment_len=segment_len))
@@ -894,21 +1012,55 @@ class Simulator:
             raise ValueError(
                 "energy query on a Simulator with no interface kind "
                 "(pass kind= or bind an SSDConfig)")
+        ends = np.empty(len(traces), np.float64)
+        if name == "pallas":
+            from repro.kernels.maxplus.ops import run_many_end_time_maxplus
+            pgroups: dict[tuple[int, int], list[int]] = {}
+            for i, t in enumerate(traces):
+                pgroups.setdefault((t.channels, t.ways), []).append(i)
+            for _, idxs in pgroups.items():
+                ends[idxs] = run_many_end_time_maxplus(
+                    self.table, [traces[i] for i in idxs],
+                    policy=_policy_name(batched))
+            return self._many_results(traces, ends, name, objective)
+        mesh = _points_mesh() if shard is not False else None
         groups: dict[tuple[int, int], list[int]] = {}
         for i, t in enumerate(traces):
             groups.setdefault((t.channels, _bucket_len(t.n_ops)),
                               []).append(i)
-        ends = np.empty(len(traces), np.float64)
         for (channels, t_b), idxs in groups.items():
-            stacked = [np.stack(cols) for cols in zip(
-                *(_pad_trace_np(traces[i], t_b) for i in idxs))]
-            fn = self._closure(
-                ("scan-many", channels, t_b, batched, len(idxs)),
-                lambda channels=channels: functools.partial(
-                    _sim.trace_end_time_masked_many, *self._targs,
-                    n_channels=channels, batched=batched))
+            b_pad = _bucket_len(len(idxs), floor=1)
+            if mesh is not None:        # whole rows per device shard
+                n_dev = int(mesh.devices.size)
+                b_pad = max(b_pad, -(-b_pad // n_dev) * n_dev)
+            rows = [_pad_trace_np(traces[i], t_b) for i in idxs]
+            pad_row = tuple(np.zeros_like(col) for col in rows[0])
+            rows += [pad_row] * (b_pad - len(idxs))
+            stacked = [np.stack(cols) for cols in zip(*rows)]
+            if mesh is None:
+                fn = self._closure(
+                    ("scan-many", channels, t_b, batched, b_pad),
+                    lambda channels=channels: functools.partial(
+                        _sim.trace_end_time_masked_many, *self._targs,
+                        n_channels=channels, batched=batched))
+            else:
+                fn = self._closure(
+                    ("scan-many-shard", channels, t_b, batched, b_pad,
+                     mesh.devices.size),
+                    lambda channels=channels: _shard_points(
+                        mesh, functools.partial(
+                            _sim.trace_end_time_masked_many, *self._targs,
+                            n_channels=channels, batched=batched),
+                        n_sharded=6))
             ends[idxs] = np.asarray(
-                fn(*(jnp.asarray(s) for s in stacked)))
+                fn(*(jnp.asarray(s) for s in stacked)))[: len(idxs)]
+        return self._many_results(traces, ends, name, objective)
+
+    def _many_results(self, traces, ends, name: str,
+                      objective: Objective) -> list[SimResult]:
+        """Assemble per-trace results for the packed serving paths:
+        energy is (+,+)-linear, so the engine-free per-op sum is exact
+        for every serving engine (DESIGN.md §2.4)."""
         results = []
         for t, end in zip(traces, ends):
             energy = None
@@ -921,18 +1073,78 @@ class Simulator:
             results.append(self._result(t, float(end), name, energy))
         return results
 
+    def run_stream(self, chunks, *, policy: Policy | None = None,
+                   objective: Objective = "end_time") -> SimResult:
+        """Constant-memory streaming query (DESIGN.md §2.7): fold an
+        *iterator of OpTrace chunks* (``trace.iter_trace_chunks``, a
+        generator builder like ``trace.mixed_trace_chunks``, or any
+        iterable) through the streaming engine without ever holding the
+        full trace — payload bytes, per-channel occupancy and the op
+        count accumulate chunk-by-chunk, so a million-op trace costs
+        O(chunk) memory end to end."""
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r} "
+                             f"(one of {', '.join(OBJECTIVES)})")
+        policy = policy or self.default_policy
+        batched = policy_is_batched(policy)
+        kind = None
+        if objective in ("energy", "all"):
+            if self.kind is None:
+                raise ValueError(
+                    "energy query on a Simulator with no interface kind "
+                    "(pass kind= or bind an SSDConfig)")
+            kind = self.kind
+        eng = get_engine("streaming")
+        stats = {"n_ops": 0, "payload": 0, "busy": None}
+        slot = np.asarray(self.table.slot_us, np.float64)
+
+        def tap(cs):
+            for c in cs:
+                if c.n_ops == 0:
+                    continue
+                c.validate_against(self.table)
+                if stats["busy"] is None:
+                    stats["busy"] = np.zeros(c.channels)
+                elif len(stats["busy"]) != c.channels:
+                    raise ValueError(
+                        f"streaming chunks switched geometry mid-stream: "
+                        f"{c.channels} channels after {len(stats['busy'])}")
+                stats["n_ops"] += c.n_ops
+                stats["payload"] += c.total_bytes(self.table)
+                stats["busy"] += np.bincount(
+                    np.asarray(c.channel),
+                    weights=slot[np.asarray(c.cls)],
+                    minlength=c.channels)
+                yield c
+
+        end, sums, _, channels = eng._fold(self, tap(chunks),
+                                           batched=batched, kind=kind)
+        energy = None
+        if kind is not None:
+            energy = breakdown_from_sums(
+                sums, end_us=end, payload_bytes=stats["payload"],
+                kind=kind, channels=channels)
+        payload = stats["payload"]
+        return SimResult(
+            end_us=end, mb_s=(payload / end) if payload > 0 else None,
+            channel_busy_us=stats["busy"], energy=energy,
+            engine="streaming", n_ops=stats["n_ops"],
+            payload_bytes=payload)
+
     def sweep(self, tables, trace: OpTrace, *,
               policy: Policy | None = None, engine: str = "prefix",
-              segment_len: int | None = 64,
-              combine: str = "chain") -> np.ndarray:
+              segment_len: int | None = 64, combine: str = "chain",
+              shard: bool | None = None) -> np.ndarray:
         """[B] completion times of one trace under a batch of
         design-point tables (``tables=None`` sweeps the bound table
         alone) — the design-space fan-out direction of the serving
-        path."""
+        path.  With more than one device the table batch shards across
+        devices via ``jax.shard_map`` (``shard=None`` auto / ``True``;
+        ``False`` forces the vmap path)."""
         return sweep_tables(
             [self.table] if tables is None else tables, trace,
             policy=policy or self.default_policy, engine=engine,
-            segment_len=segment_len, combine=combine)
+            segment_len=segment_len, combine=combine, shard=shard)
 
 
 @functools.lru_cache(maxsize=128)
@@ -947,16 +1159,61 @@ def simulator_for(config: SSDConfig) -> Simulator:
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=1)
+def _points_mesh():
+    """Process-wide 1-D ``("points",)`` sweep mesh over every device;
+    None with a single device, which drops every sharded entry point
+    back to its plain vmap path."""
+    from repro.launch.mesh import make_points_mesh
+    return make_points_mesh()
+
+
+def _shard_points(mesh, fn, *, n_sharded: int):
+    from repro.distributed.partitioning import shard_points
+    return shard_points(mesh, fn, n_sharded=n_sharded)
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_batch_fn(mesh, engine: str, n_channels: int, n_ways: int,
+                      batched: bool, segment_len, combine):
+    """Memoised shard_map wrapper for the table-batched sweep folds:
+    the 7 stacked table columns shard their leading (design-point) axis
+    over the mesh, the trace arrays replicate — repeated sweeps over the
+    same geometry reuse one compiled sharded program."""
+    if engine == "scan":
+        fn = functools.partial(_sim.trace_end_time_batch,
+                               n_channels=n_channels, batched=batched)
+    else:
+        fn = functools.partial(
+            _sim.trace_end_time_prefix_batch, n_channels=n_channels,
+            n_ways=n_ways, batched=batched, segment_len=segment_len,
+            combine=combine)
+    return _shard_points(mesh, fn, n_sharded=7)
+
+
 def sweep_tables(tables, trace: OpTrace, *, policy: Policy = "eager",
                  engine: str = "prefix", segment_len: int | None = 64,
-                 combine: str = "chain") -> np.ndarray:
+                 combine: str = "chain",
+                 shard: bool | None = None) -> np.ndarray:
     """[B] completion times (us) of one trace under a batch of
-    design-point tables, dispatched through the registry."""
+    design-point tables, dispatched through the registry.  With more
+    than one device the stacked tables shard across devices via
+    ``jax.shard_map`` (scan/prefix engines; the batch pads to a device
+    multiple and slices back); ``shard=False`` forces the vmap path,
+    one device always falls back to it."""
     batched = policy_is_batched(policy)
     eng = get_engine(engine)
     if trace.n_ops == 0:
         raise ValueError("empty trace: no ops to simulate")
-    return eng.end_time_batch(list(tables), trace, batched=batched,
+    tables = list(tables)
+    mesh = _points_mesh() if shard is not False else None
+    if (mesh is not None and len(tables) > 1 and engine in ("scan", "prefix")
+            and eng.caps.jittable and eng.caps.batched_tables):
+        fn = _sharded_batch_fn(mesh, engine, trace.channels, trace.ways,
+                               batched, segment_len, combine)
+        return np.asarray(fn(*_stacked_table_args(tables),
+                             *_trace_args(trace)))
+    return eng.end_time_batch(tables, trace, batched=batched,
                               segment_len=segment_len, combine=combine)
 
 
@@ -994,14 +1251,36 @@ def steady_channel_bandwidth_mb_s(op: PageOpParams, ways,
     return (n_pages * op.data_bytes) / end
 
 
+@functools.lru_cache(maxsize=64)
+def _sharded_sweep_steady_fn(mesh, engine: str, n_pages: int,
+                             batched: bool):
+    """Memoised shard_map wrapper for the homogeneous design-point
+    sweep: all 8 per-point arrays shard their leading axis."""
+    base = (_sim._sweep_scan_jit if engine == "scan"
+            else _sim._sweep_squaring_jit)
+    fn = functools.partial(base, n_pages=n_pages, batched=batched)
+    return _shard_points(mesh, fn, n_sharded=8)
+
+
 def sweep_steady_bandwidth_mb_s(cmd_us, pre_us, slot_us, post_lo_us,
                                 post_hi_us, ctrl_us, data_bytes, ways,
                                 n_pages: int = 512, batched: bool = False,
-                                engine: str = "scan") -> jax.Array:
+                                engine: str = "scan",
+                                shard: bool | None = None) -> jax.Array:
     """Vectorised single-channel steady bandwidth over design points
     (arrays [N]), via an engine with the sweep capability
-    (scan / squaring)."""
+    (scan / squaring).  With more than one device the design points
+    shard across devices via ``jax.shard_map`` (``shard=False`` forces
+    the vmap path) — the fan-out the ``calibrate`` fitting grids ride."""
     scalars = (cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us)
+    mesh = _points_mesh() if shard is not False else None
+    if mesh is not None and engine in ("scan", "squaring"):
+        if engine == "squaring":
+            _sim._validate_squaring_ways(ways)
+        args = tuple(jnp.asarray(x) for x in scalars + (data_bytes, ways))
+        if args[0].ndim == 1 and int(args[0].shape[0]) > 1:
+            fn = _sharded_sweep_steady_fn(mesh, engine, n_pages, batched)
+            return fn(*args)
     return get_engine(engine).sweep_steady(
         scalars, data_bytes, ways, n_pages=n_pages, batched=batched)
 

@@ -40,22 +40,39 @@ from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import CellType, NandChipParams
 from repro.core.paper_tables import INTERFACE_ORDER, TABLE3
 from repro.core.sim import PageOpParams, page_op_params
-from repro.core.sim_ref import bandwidth_ref_mb_s
 
 WAYS = (1, 2, 4, 8, 16)
 
+_OP_FIELDS = ("cmd_us", "pre_us", "slot_us", "post_lo_us", "post_hi_us",
+              "ctrl_us", "data_bytes")
+
 
 def _write_errors(chip: NandChipParams, n_pages: int = 512) -> list[float]:
-    errs = []
+    """Relative write-bandwidth errors over the 15 Table 3 cells
+    (5 way counts × 3 interfaces), evaluated as ONE batched
+    ``api.sweep_steady_bandwidth_mb_s`` design-point sweep per candidate
+    chip — vectorised (and device-sharded when a multi-device mesh is
+    up) instead of 15 sequential reference-oracle event loops, which is
+    what lets the fitting grids below ride the fleet path."""
+    from repro.core.api import sweep_steady_bandwidth_mb_s
+
     cell = chip.cell.value
+    cols: dict[str, list[float]] = {f: [] for f in _OP_FIELDS}
+    ways_col, paper = [], []
     for ways in WAYS:
         paper_row = TABLE3[cell]["write"][ways]
         for idx, kind in enumerate(INTERFACE_ORDER):
-            iface = make_interface(InterfaceKind(kind))
-            op = page_op_params(iface, chip, "write", ways)
-            sim = bandwidth_ref_mb_s(op, ways, n_pages)
-            errs.append((sim - paper_row[idx]) / paper_row[idx])
-    return errs
+            op = page_op_params(make_interface(InterfaceKind(kind)),
+                                chip, "write", ways)
+            for f in _OP_FIELDS:
+                cols[f].append(float(getattr(op, f)))
+            ways_col.append(ways)
+            paper.append(paper_row[idx])
+    sim = np.asarray(sweep_steady_bandwidth_mb_s(
+        *(np.asarray(cols[f]) for f in _OP_FIELDS),
+        np.asarray(ways_col, np.int32), n_pages=n_pages), np.float64)
+    paper_arr = np.asarray(paper, np.float64)
+    return list((sim - paper_arr) / paper_arr)
 
 
 def fit_slc(n_pages: int = 256) -> tuple[float, float, float]:

@@ -497,6 +497,67 @@ def trace_completions_masked(
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), comp
 
 
+@functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
+def trace_chunk_fold(
+    cmd_us: jax.Array,       # [K] op-class timing table
+    pre_us: jax.Array,       # [K]
+    slot_us: jax.Array,      # [K]
+    post_lo_us: jax.Array,   # [K]
+    post_hi_us: jax.Array,   # [K]
+    ctrl_us: jax.Array,      # [K]
+    arb_us: jax.Array,       # [K]
+    e_op_uj: jax.Array,      # [K, 2, P] phase energies (zeros: end-time only)
+    cls: jax.Array,          # [L] one fixed-size chunk of the trace
+    channel: jax.Array,      # [L]
+    way: jax.Array,          # [L]
+    parity: jax.Array,       # [L]
+    arrival_us: jax.Array,   # [L]
+    valid: jax.Array,        # [L] bool; False = padding (state no-op)
+    bus_free: jax.Array,     # [C]        carried occupancy state
+    chip_free: jax.Array,    # [C, MAX_WAYS]
+    ctrl_free: jax.Array,    # []
+    round_start: jax.Array,  # [C]
+    energy_acc: jax.Array,   # [P] carried phase-energy accumulator (uJ)
+    n_channels: int,
+    batched: bool,
+) -> tuple[tuple, jax.Array, jax.Array, jax.Array]:
+    """One chunk of the streaming engine (DESIGN.md §2.7): fold ``L``
+    masked ops starting *from a caller-supplied occupancy state* and
+    return ``((bus, chip, ctrl, round_start), energy_acc, end_us,
+    comp[L])``.  This is the segment-product recurrence of §2.3
+    specialised to its concrete carried state: because every chunk
+    replays the exact per-op float sequence of ``_trace_step_fn`` (and
+    masked padding is a bitwise state no-op), chaining chunks of *any*
+    size reproduces the single-shot scan engine bit-for-bit — chunk-size
+    invariance by construction, O(L) live memory regardless of trace
+    length.  Energy adds ``where(valid, E[k, parity], 0)`` per step —
+    adding +0.0 is exact, so the accumulator is chunk-invariant too."""
+    upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
+                         ctrl_us, arb_us, batched)
+
+    def step(carry, op):
+        state, acc = carry
+        k, c, w, par, arr, ok = op
+        new = upd(state, (k, c, w, par, arr))
+        new = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state)
+        acc = acc + jnp.where(ok, e_op_uj[k, par % 2], 0.0)
+        return (new, acc), new[1][c, w]           # chip_free[c, w]
+
+    ops = _trace_ops(cls, channel, way, parity, arrival_us) \
+        + (valid.astype(bool),)
+    init = ((bus_free, chip_free, ctrl_free, round_start), energy_acc)
+    (state, acc), comp = jax.lax.scan(step, init, ops)
+    end = jnp.maximum(jnp.max(state[0]), jnp.max(state[1]))
+    return state, acc, end, comp
+
+
+def trace_chunk_init(n_channels: int, n_phases: int):
+    """Initial carry for :func:`trace_chunk_fold` — the zero occupancy
+    state of ``_trace_scan_init`` plus a zero energy accumulator."""
+    return (_trace_scan_init(n_channels),
+            jnp.zeros((n_phases,), jnp.float32))
+
+
 #: Dynamic dispatch rules evaluated inside the joint fold (sched-layer
 #: names; the static policies lower offline in ``repro.core.sched``).
 DISPATCH_RULES: tuple[str, ...] = ("least_loaded", "earliest_ready")

@@ -213,6 +213,54 @@ def mixed_trace(n_ops: int, channels: int, ways: int, read_fraction: float,
     return _finalize(cls, chan, way, channels, ways)
 
 
+def iter_trace_chunks(trace: OpTrace, chunk_len: int):
+    """Yield ``trace`` as consecutive ``OpTrace`` chunks of at most
+    ``chunk_len`` ops — the materialised-trace adapter for the
+    constant-memory streaming engine (DESIGN.md §2.7).  Chunks carry the
+    same geometry and slice ``payload``/``arrival_us`` alongside the op
+    arrays, so concatenating them reconstructs the trace exactly."""
+    if chunk_len < 1:
+        raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+    for lo in range(0, trace.n_ops, chunk_len):
+        hi = min(lo + chunk_len, trace.n_ops)
+        yield OpTrace(
+            cls=trace.cls[lo:hi], channel=trace.channel[lo:hi],
+            way=trace.way[lo:hi], parity=trace.parity[lo:hi],
+            channels=trace.channels, ways=trace.ways,
+            payload=(None if trace.payload is None
+                     else trace.payload[lo:hi]),
+            arrival_us=(None if trace.arrival_us is None
+                        else trace.arrival_us[lo:hi]))
+
+
+def mixed_trace_chunks(n_ops: int, channels: int, ways: int,
+                       read_fraction: float, *, chunk_len: int = 65536,
+                       seed: int = 0):
+    """Generator twin of :func:`mixed_trace`: yields the *identical* op
+    stream (same rng draws, same round-robin placement, same per-chip
+    parity) in ``OpTrace`` chunks without ever materialising the whole
+    trace — million-op streaming-engine inputs in O(chunk_len) memory.
+
+    The PCG64 stream draws doubles sequentially, so chunked ``random``
+    calls reproduce the single-shot draw; round-robin placement revisits
+    a chip every ``channels * ways`` ops, so the per-chip parity counter
+    of ``_finalize`` closes to ``(t // (channels * ways)) % 2``."""
+    if chunk_len < 1:
+        raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+    rng = np.random.default_rng(seed)
+    period = channels * ways
+    for lo in range(0, n_ops, chunk_len):
+        hi = min(lo + chunk_len, n_ops)
+        t = np.arange(lo, hi)
+        cls = np.where(rng.random(hi - lo) < read_fraction, READ, WRITE)
+        yield OpTrace(
+            cls=cls.astype(np.int32),
+            channel=(t % channels).astype(np.int32),
+            way=((t // channels) % ways).astype(np.int32),
+            parity=((t // period) % 2).astype(np.int32),
+            channels=channels, ways=ways)
+
+
 def hot_cold_trace(n_ops: int, channels: int, ways: int,
                    read_fraction: float = 0.7, hot_fraction: float = 0.8,
                    hot_share: float = 0.25, seed: int = 0) -> OpTrace:

@@ -116,6 +116,149 @@ def _kernel_indexed_energy(idx_ref, mats_ref, g_ref, arr_ref, e_ref, s0_ref,
     acc_ref[...] = acc
 
 
+def _kernel_fused(nsteps_ref, mats_ref, g_ref, idx_ref, arr_ref, s0_ref,
+                  out_ref, *, gather: bool, with_arrivals: bool):
+    """Fused many-trace megakernel: lanes are whole *traces* (one design
+    point), not design points of one trace.  Every lane folds its own
+    op-class sequence ``idx[:, lane]`` against the one shared matrix
+    dictionary, so a fleet of traces is a single ``pallas_call``:
+
+    * per-step per-lane matrix selection is either a row gather
+      (``gather=True``, the interpret/CPU path — O(N²·BL) per step) or
+      a one-hot ``dot_general`` against the flattened dictionary
+      (``gather=False``, the MXU-friendly TPU form, where vector-index
+      gathers do not lower).  Both are *exact*: the one-hot contraction
+      reproduces the gathered matrix bit-for-bit because its products
+      are 1·x and 0·x = ±0.0 and x + (-0.0) = x;
+    * index M (the appended (max,+) identity with a NEG origin template
+      and zero arrival) is the padding op: shorter lanes run it past
+      their own length as an exact state no-op, so no masking is needed;
+    * ``nsteps_ref`` (SMEM scalar prefetch, one entry per lane block)
+      bounds the fold at the longest lane *in this block* — lanes sorted
+      longest-first mean short-trace blocks exit early instead of
+      spinning the global maximum.
+    """
+    mats = mats_ref[...]          # [M1, N, N] shared dictionary
+    g = g_ref[...]                # [M1, N] origin templates (NEG at M)
+    idx = idx_ref[...]            # [T, BL] per-lane op-class sequence
+    arr = arr_ref[...]            # [T, BL] per-lane arrivals (0 padded)
+    m1, n, _ = mats.shape
+    bl = idx.shape[-1]
+    t_steps = nsteps_ref[pl.program_id(0)]
+
+    if gather:
+        # lane-major state [BL, N]: the per-step gather lands directly in
+        # the layout the matvec consumes, so the only transposes are one
+        # on entry and one on exit.  Folding past t_steps up to the next
+        # unroll multiple is exact (padding op = (max,+) identity, NEG
+        # origin template), so the loop body unrolls to amortise the
+        # interpret-mode per-iteration dispatch.
+        unroll = 4
+
+        def step(t, s):
+            it = jax.lax.dynamic_index_in_dim(idx, t, 0, keepdims=False)
+            a = jnp.take(mats, it, axis=0)                    # [BL, N, N]
+            s2 = jnp.max(a + s[:, None, :], axis=2)
+            if not with_arrivals:  # all-zero arrivals are dominated by
+                return s2          # the baked origin column: skip the ops
+            gt = jnp.take(g, it, axis=0)                      # [BL, N]
+            at = jax.lax.dynamic_index_in_dim(arr, t, 0, keepdims=False)
+            return jnp.maximum(s2, gt + at[:, None])
+
+        def block(k, s):
+            for u in range(unroll):
+                s = step(k * unroll + u, s)
+            return s
+
+        n_blocks = (t_steps + unroll - 1) // unroll
+        out_ref[...] = jax.lax.fori_loop(0, n_blocks, block,
+                                         s0_ref[...].T).T
+        return
+
+    flat = mats.reshape(m1, n * n)
+    lanes_iota = jax.lax.broadcasted_iota(jnp.int32, (m1, bl), 0)
+
+    def select(table, it):
+        """[M1, D] table -> [D, BL] per-lane rows via one-hot contraction
+        (the MXU-friendly TPU form, where vector-index gathers do not
+        lower).  Exact: the products are 1*x and 0*x = +/-0.0 and
+        x + (-0.0) = x, so it reproduces the gathered rows bit-for-bit."""
+        onehot = (lanes_iota == it[None, :]).astype(jnp.float32)
+        return jax.lax.dot_general(table, onehot, (((0,), (0,)), ((), ())),
+                                   precision=jax.lax.Precision.HIGHEST)
+
+    def step(t, s):
+        it = jax.lax.dynamic_index_in_dim(idx, t, 0, keepdims=False)  # [BL]
+        a = select(flat, it).reshape(n, n, bl)
+        s2 = jnp.max(a + s[None, :, :], axis=1)
+        if not with_arrivals:
+            return s2
+        gt = select(g, it)                                            # [N, BL]
+        at = jax.lax.dynamic_index_in_dim(arr, t, 0, keepdims=False)  # [BL]
+        return jnp.maximum(s2, gt + at[None, :])
+
+    out_ref[...] = jax.lax.fori_loop(0, t_steps, step, s0_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_lanes", "interpret",
+                                             "with_arrivals"))
+def maxplus_fold_many_kernel(
+    mats: jax.Array,      # [M+1, N, N] shared dictionary, identity at M
+    gvec: jax.Array,      # [M+1, N] origin templates, NEG row at M
+    idx: jax.Array,       # [B, T] int32 per-lane sequence (M = pad no-op)
+    arrivals: jax.Array,  # [B, T] float32 per-lane arrivals (0 = none)
+    s0: jax.Array,        # [N] shared initial state
+    lengths: jax.Array,   # [B] int32 true op count per lane
+    *,
+    block_lanes: int = 128,
+    interpret: bool = True,
+    with_arrivals: bool = True,
+) -> jax.Array:
+    """Folded states [B, N] for B independent traces in one launch (see
+    ``_kernel_fused``).  Lanes should arrive sorted longest-first so the
+    per-block fold bound ``max(lengths[block])`` tracks each block's own
+    longest lane."""
+    m1, n, _ = mats.shape
+    b, t = idx.shape
+    tpad = (-t) % 4   # the unrolled fold may read past t_steps up to the
+    if tpad:          # next multiple of 4 — pad time with the identity op
+        idx = jnp.pad(idx, ((0, 0), (0, tpad)), constant_values=m1 - 1)
+        arrivals = jnp.pad(arrivals, ((0, 0), (0, tpad)))
+        t += tpad
+    bl = min(block_lanes, b)
+    pad = (-b) % bl
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)), constant_values=m1 - 1)
+        arrivals = jnp.pad(arrivals, ((0, pad), (0, 0)))
+        lengths = jnp.pad(lengths, (0, pad))
+    bp = b + pad
+    nsteps = jnp.max(lengths.reshape(bp // bl, bl), axis=1).astype(jnp.int32)
+
+    def tile(block):
+        return pl.BlockSpec(block, lambda i, ns: (0,) * (len(block) - 1) + (i,))
+
+    def whole(block):
+        return pl.BlockSpec(block, lambda i, ns: (0,) * len(block))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(bp // bl,),
+        in_specs=[whole((m1, n, n)), whole((m1, n)),
+                  tile((t, bl)), tile((t, bl)), tile((n, bl))],
+        out_specs=tile((n, bl)))
+    out = pl.pallas_call(
+        functools.partial(_kernel_fused, gather=interpret,
+                          with_arrivals=with_arrivals),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, bp), jnp.float32),
+        interpret=interpret)(
+            nsteps,
+            mats.astype(jnp.float32), gvec.astype(jnp.float32),
+            jnp.moveaxis(idx.astype(jnp.int32), 0, -1),
+            jnp.moveaxis(arrivals.astype(jnp.float32), 0, -1),
+            jnp.broadcast_to(s0.astype(jnp.float32)[:, None], (n, bp)))
+    return jnp.moveaxis(out, -1, 0)[:b]
+
+
 from repro.core.maxplus_form import NEG  # the one (max,+) -inf sentinel
 
 

@@ -35,13 +35,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.maxplus_form import (StateLayout, combo_arrival_offsets,
+from repro.core.maxplus_form import (NEG, StateLayout, combo_arrival_offsets,
                                      combo_matrices, end_time_from_state,
-                                     init_state, maxplus_fold_segmented,
+                                     init_state, maxplus_eye,
+                                     maxplus_fold_segmented,
                                      periodic_fold_squaring, trace_combos,
                                      transition_matrices)
 from repro.core.sim import PageOpParams
-from repro.kernels.maxplus.kernel import maxplus_fold_kernel
+from repro.kernels.maxplus.kernel import (maxplus_fold_kernel,
+                                          maxplus_fold_many_kernel)
 from repro.kernels.maxplus.ref import maxplus_fold_ref
 
 
@@ -169,6 +171,81 @@ def trace_end_time_maxplus(
                          arrivals=arrivals, gvec=gvec)
     end = end_time_from_state(np.asarray(final), layout)
     return end[0] if single else end
+
+
+def run_many_end_time_maxplus(
+    table,                     # OpClassTable (one design point)
+    traces,                    # list[OpTrace], one shared (C, W) geometry
+    *,
+    policy: str = "eager",
+    block_lanes: int = 128,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """End times (us) of B independent heterogeneous traces in ONE fused
+    Pallas launch (``maxplus_fold_many_kernel``): lanes are whole traces
+    rather than design points, folding their own op sequences against the
+    *union* combo dictionary of the fleet.  An appended (max,+) identity
+    combo (NEG origin template, zero arrival) pads short lanes as an
+    exact no-op, so mixed-length fleets need no per-bucket launches —
+    lanes sort longest-first and each lane block folds only to its own
+    longest member.  Lane count and fold length round up to the next
+    block / power-of-two so jittered fleet sizes reuse the compiled
+    program."""
+    if not traces:
+        return np.zeros((0,), np.float64)
+    geom = (traces[0].channels, traces[0].ways)
+    for tr in traces:
+        if (tr.channels, tr.ways) != geom:
+            raise ValueError(
+                "fused run_many needs one shared (channels, ways) geometry "
+                f"per call — got {geom} and {(tr.channels, tr.ways)}")
+    layout = StateLayout(*geom)
+    # union combo dictionary across the fleet, vectorised: pack each
+    # op's (class, channel, way, parity) into one integer key and let
+    # np.unique build the dictionary + per-op indices in one pass — the
+    # per-trace Python loop of ``trace_combos`` would dominate the
+    # megakernel's own wall time at fleet scale
+    keys = np.concatenate([
+        (np.asarray(tr.cls, np.int64) << 24)
+        | (np.asarray(tr.channel, np.int64) << 16)
+        | (np.asarray(tr.way, np.int64) << 8)
+        | (np.asarray(tr.parity, np.int64) & 1)
+        for tr in traces])
+    uniq, inv = np.unique(keys, return_inverse=True)
+    combos = [(int(k >> 24), int((k >> 16) & 0xFF),
+               int((k >> 8) & 0xFF), int(k & 1)) for k in uniq]
+    bounds = np.cumsum([0] + [tr.n_ops for tr in traces])
+    lane_idx = [inv[bounds[i]:bounds[i + 1]].astype(np.int32)
+                for i in range(len(traces))]
+    m = len(combos)
+    mats = np.concatenate([combo_matrices(table, combos, layout, policy),
+                           maxplus_eye(layout.n_state)[None]])
+    gvec = np.concatenate([combo_arrival_offsets(table, combos, layout,
+                                                 policy),
+                           np.full((1, layout.n_state), NEG, np.float32)])
+    order = sorted(range(len(traces)), key=lambda i: -traces[i].n_ops)
+    t_max = 1 << max(6, (traces[order[0]].n_ops - 1).bit_length())
+    b = len(traces)
+    idx = np.full((b, t_max), m, np.int32)
+    arr = np.zeros((b, t_max), np.float32)
+    lengths = np.zeros((b,), np.int32)
+    for lane, i in enumerate(order):
+        tr = traces[i]
+        idx[lane, :tr.n_ops] = lane_idx[i]
+        if tr.arrival_us is not None:
+            arr[lane, :tr.n_ops] = np.asarray(tr.arrival_us, np.float32)
+        lengths[lane] = tr.n_ops
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    final = maxplus_fold_many_kernel(
+        jnp.asarray(mats), jnp.asarray(gvec), jnp.asarray(idx),
+        jnp.asarray(arr), jnp.asarray(init_state(layout)),
+        jnp.asarray(lengths), block_lanes=block_lanes, interpret=interpret,
+        with_arrivals=bool(arr.any()))
+    end = end_time_from_state(np.asarray(final), layout)
+    out = np.empty((b,), np.float64)
+    out[np.asarray(order)] = end
+    return out
 
 
 def combo_energy_uj(table, combos, kind) -> np.ndarray:

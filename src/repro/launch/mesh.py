@@ -25,5 +25,19 @@ def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_points_mesh() -> jax.sharding.Mesh | None:
+    """1-D ``("points",)`` mesh over every device — the design-point /
+    batch-row sharding axis of the simulator sweeps (DESIGN.md §2.7).
+    Returns None with a single device so the sweep entry points fall
+    back to their plain vmap path instead of paying shard_map overhead
+    for nothing.  A function, like the meshes above, so importing never
+    touches JAX device state (``--xla_force_host_platform_device_count``
+    must win the race)."""
+    n = len(jax.devices())
+    if n < 2:
+        return None
+    return jax.make_mesh((n,), ("points",))
+
+
 def mesh_chip_count(mesh: jax.sharding.Mesh) -> int:
     return int(mesh.devices.size)

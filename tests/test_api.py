@@ -31,7 +31,9 @@ def _cfg(channels=2, ways=4, cell=CellType.MLC):
 #: intentional API change must update this snapshot (and the DESIGN.md
 #: §2.5 / README migration table alongside it).
 API_SNAPSHOT = {
-    "CacheInfo": "(hits: 'int', misses: 'int', entries: 'int') -> None",
+    "CacheInfo": "(hits: 'int', misses: 'int', entries: 'int', "
+                 "evictions: 'int' = 0, max_entries: 'int | None' = None) "
+                 "-> None",
     "CapabilityError": "<class>",
     "EngineCaps": "(name: 'str', heterogeneous: 'bool', "
                   "batched_tables: 'bool', energy: 'bool', "
@@ -53,7 +55,8 @@ API_SNAPSHOT = {
                  "sched_policy: 'str | None' = None) -> None",
     "Simulator": "(config: 'SSDConfig | None' = None, *, "
                  "table: 'OpClassTable | None' = None, "
-                 "kind: 'InterfaceKind | str | None' = None)",
+                 "kind: 'InterfaceKind | str | None' = None, "
+                 "max_cache_entries: 'int | None' = 512)",
     "engine_capabilities": "() -> 'dict[str, EngineCaps]'",
     "get_engine": "(name: 'str') -> 'Engine'",
     "register_engine": "(name: 'str', *, heterogeneous: 'bool', "
@@ -70,11 +73,13 @@ API_SNAPSHOT = {
     "sweep_steady_bandwidth_mb_s":
         "(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, "
         "data_bytes, ways, n_pages: 'int' = 512, batched: 'bool' = False, "
-        "engine: 'str' = 'scan') -> 'jax.Array'",
+        "engine: 'str' = 'scan', shard: 'bool | None' = None) "
+        "-> 'jax.Array'",
     "sweep_tables": "(tables, trace: 'OpTrace', *, "
                     "policy: 'Policy' = 'eager', engine: 'str' = 'prefix', "
                     "segment_len: 'int | None' = 64, "
-                    "combine: 'str' = 'chain') -> 'np.ndarray'",
+                    "combine: 'str' = 'chain', "
+                    "shard: 'bool | None' = None) -> 'np.ndarray'",
 }
 
 SIMULATOR_METHODS = {
@@ -83,11 +88,14 @@ SIMULATOR_METHODS = {
     "run_many": "(self, traces, *, policy: 'Policy | None' = None, "
                 "objective: 'Objective' = 'end_time', "
                 "engine: 'str | None' = None, "
-                "segment_len: 'int | None' = 64) -> 'list[SimResult]'",
+                "segment_len: 'int | None' = 64, "
+                "shard: 'bool | None' = None) -> 'list[SimResult]'",
+    "run_stream": "(self, chunks, *, policy: 'Policy | None' = None, "
+                  "objective: 'Objective' = 'end_time') -> 'SimResult'",
     "sweep": "(self, tables, trace: 'OpTrace', *, "
              "policy: 'Policy | None' = None, engine: 'str' = 'prefix', "
-             "segment_len: 'int | None' = 64, combine: 'str' = 'chain') "
-             "-> 'np.ndarray'",
+             "segment_len: 'int | None' = 64, combine: 'str' = 'chain', "
+             "shard: 'bool | None' = None) -> 'np.ndarray'",
     "cache_info": "(self) -> 'CacheInfo'",
 }
 
@@ -121,13 +129,16 @@ def test_api_surface_snapshot():
 def test_registry_names_and_capabilities():
     caps = api.engine_capabilities()
     assert api.registered_engines() == ("oracle", "pallas", "prefix",
-                                        "scan", "squaring")
+                                        "scan", "squaring", "streaming")
     assert caps["scan"].heterogeneous and caps["scan"].jittable
     assert caps["prefix"].batched_tables and caps["prefix"].energy
     assert not caps["squaring"].heterogeneous
     assert not caps["squaring"].batched_tables
     assert caps["pallas"].batched_tables and not caps["pallas"].jittable
     assert not caps["oracle"].batched_tables
+    assert caps["streaming"].heterogeneous and caps["streaming"].jittable
+    assert caps["streaming"].arrivals
+    assert not caps["streaming"].batched_tables
     for cap in caps.values():          # every engine accumulates energy
         assert cap.energy
         assert cap.name in cap.describe()
@@ -267,9 +278,11 @@ def test_jit_cache_hits_on_repeated_queries():
     sim = api.Simulator(_cfg())
     trace = tr.mixed_trace(100, 2, 4, 0.5, seed=3)
     r1 = sim.run(trace)
-    assert sim.cache_info() == api.CacheInfo(hits=0, misses=1, entries=1)
+    assert sim.cache_info() == api.CacheInfo(hits=0, misses=1, entries=1,
+                                             max_entries=512)
     r2 = sim.run(trace)
-    assert sim.cache_info() == api.CacheInfo(hits=1, misses=1, entries=1)
+    assert sim.cache_info() == api.CacheInfo(hits=1, misses=1, entries=1,
+                                             max_entries=512)
     assert r1.end_us == r2.end_us
     # a different length in the same power-of-two bucket is also a hit
     sim.run(tr.mixed_trace(120, 2, 4, 0.5, seed=4))
@@ -278,7 +291,39 @@ def test_jit_cache_hits_on_repeated_queries():
     sim.run(trace, policy="batched")
     assert sim.cache_info().misses == 2
     sim.cache_clear()
-    assert sim.cache_info() == api.CacheInfo(hits=0, misses=0, entries=0)
+    assert sim.cache_info() == api.CacheInfo(hits=0, misses=0, entries=0,
+                                             max_entries=512)
+
+
+def test_jit_cache_lru_bound():
+    """The closure cache is LRU-bounded: ``max_cache_entries`` caps the
+    live entries, evicting least-recently-used closures (a long-lived
+    serving session over many geometries no longer grows without
+    bound), and recently-hit entries survive eviction."""
+    with pytest.raises(ValueError, match="max_cache_entries"):
+        api.Simulator(_cfg(), max_cache_entries=0)
+    sim = api.Simulator(_cfg(), max_cache_entries=2)
+    t1 = tr.mixed_trace(16, 2, 4, 0.5, seed=1)    # bucket 64
+    t2 = tr.mixed_trace(100, 2, 4, 0.5, seed=2)   # bucket 128
+    t3 = tr.mixed_trace(300, 2, 4, 0.5, seed=3)   # bucket 512
+    sim.run(t1)
+    sim.run(t2)
+    sim.run(t1)                                    # t1 now most-recent
+    assert sim.cache_info() == api.CacheInfo(hits=1, misses=2, entries=2,
+                                             evictions=0, max_entries=2)
+    sim.run(t3)                                    # evicts t2's closure
+    assert sim.cache_info().evictions == 1
+    assert sim.cache_info().entries == 2
+    sim.run(t1)                                    # survived (recently used)
+    assert sim.cache_info().hits == 2
+    sim.run(t2)                                    # was evicted: a miss
+    assert sim.cache_info().misses == 4
+    # unbounded sessions never evict
+    unb = api.Simulator(_cfg(), max_cache_entries=None)
+    for t in (t1, t2, t3):
+        unb.run(t)
+    assert unb.cache_info() == api.CacheInfo(hits=0, misses=3, entries=3,
+                                             evictions=0, max_entries=None)
 
 
 def test_simulator_for_config_is_shared():
@@ -317,6 +362,68 @@ def test_run_many_matches_per_trace_run():
     # empty batches return empty for every objective (no index crash)
     assert sim.run_many([]) == []
     assert sim.run_many([], objective="energy") == []
+
+
+def test_run_many_compiles_only_populated_buckets():
+    """The bucket grid is derived from the traces present: only
+    populated (channels, length-bucket) groups build a closure, and the
+    batch dimension pads to a power of two so batch-size jitter between
+    calls reuses the compiled fold instead of recompiling per group
+    size."""
+    sim = api.Simulator(_cfg(), max_cache_entries=None)
+    # lengths 20/40/50 share bucket 64; 100 lands in bucket 128 — the
+    # empty 256/512/... buckets must not cost a compile
+    traces = [tr.mixed_trace(n, 2, 4, 0.5, seed=i)
+              for i, n in enumerate((20, 40, 50, 100))]
+    sim.run_many(traces, shard=False)
+    info = sim.cache_info()
+    assert info.misses == 2                 # exactly the populated groups
+    assert info.hits == 0
+    # same shape again: pure hits
+    sim.run_many(traces, shard=False)
+    assert sim.cache_info() == api.CacheInfo(hits=2, misses=2, entries=2)
+    # growing a group within its padded power-of-two batch (3 -> 4
+    # traces in bucket 64, both pad to batch 4) is still a hit
+    sim.run_many(traces + [tr.mixed_trace(30, 2, 4, 0.5, seed=9)],
+                 shard=False)
+    assert sim.cache_info() == api.CacheInfo(hits=4, misses=2, entries=2)
+    # crossing the power of two (5 traces in bucket 64 pad to batch 8)
+    # is one new closure for that group only
+    more = traces + [tr.mixed_trace(25 + i, 2, 4, 0.5, seed=20 + i)
+                     for i in range(2)]
+    sim.run_many(more, shard=False)
+    assert sim.cache_info() == api.CacheInfo(hits=5, misses=3, entries=3)
+
+
+def test_run_many_pallas_megakernel_single_launch():
+    """``engine="pallas"`` serves a heterogeneous fleet as one fused
+    megakernel launch per (channels, ways) geometry over the union
+    combo dictionary — results match the per-trace runs across mixed
+    lengths (identity-padded lanes) and both policies."""
+    sim = api.Simulator.for_config(_cfg())
+    traces = [tr.mixed_trace(n, 2, 4, 0.5, seed=i)
+              for i, n in enumerate((33, 100, 257, 100, 64, 12))]
+    for policy in ("eager", "batched"):
+        results = sim.run_many(traces, policy=policy, engine="pallas")
+        for t, r in zip(traces, results):
+            want = simulate_trace_ref(sim.table, t, policy)
+            assert abs(r.end_us - want) <= 1e-3 * t.n_ops + 1e-5 * want, \
+                (t.n_ops, policy)
+            assert r.engine == "pallas"
+    # arrival-aware fleets run through the same fused launch
+    rng = np.random.default_rng(11)
+    atr = [dataclasses.replace(
+               t, arrival_us=np.sort(rng.uniform(0, 2000.0, t.n_ops))
+               .astype(np.float32))
+           for t in traces[:3]]
+    for t, r in zip(atr, sim.run_many(atr, engine="pallas")):
+        single = sim.run(t)
+        assert abs(r.end_us - single.end_us) <= 1e-3 * single.end_us
+    # mixed geometries split into one launch per (channels, ways) group
+    mixed = [tr.mixed_trace(48, 2, 4, 0.5, seed=1),
+             tr.mixed_trace(48, 1, 8, 0.5, seed=2)]
+    for t, r in zip(mixed, sim.run_many(mixed, engine="pallas")):
+        assert r.end_us == pytest.approx(sim.run(t).end_us, rel=1e-4)
 
 
 # --- policy validation (the silent-fallthrough fix) -------------------------

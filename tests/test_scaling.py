@@ -1,0 +1,204 @@
+"""Fleet-scale simulation paths (DESIGN.md §2.7): the constant-memory
+streaming engine (chunk-size invariance by construction), the chunked
+trace generators, and the shard_map sweep paths (multi-device parts run
+in a subprocess with a forced 8-device host platform)."""
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import trace as tr
+from repro.core.nand import CellType
+from repro.core.sim import SSDConfig
+
+
+def _sim(channels, ways):
+    return api.Simulator(SSDConfig(cell=CellType.MLC, channels=channels,
+                                   ways=ways))
+
+
+def _trace(channels, ways, *, arrivals, seed, n_ops=144):
+    t = tr.mixed_trace(n_ops, channels, ways, 0.6, seed=seed)
+    if arrivals:
+        rng = np.random.default_rng(seed + 1)
+        t = dataclasses.replace(
+            t, arrival_us=np.sort(rng.uniform(0.0, 40.0 * n_ops, n_ops))
+            .astype(np.float32))
+    return t
+
+
+# --- chunk-size invariance ---------------------------------------------------
+
+
+@pytest.mark.parametrize("ways", [1, 2, 4, 8, 16])
+@pytest.mark.parametrize("policy", ["eager", "batched"])
+def test_streaming_chunk_size_invariance(ways, policy):
+    """The streaming fold carries the *concrete* scan state between
+    fixed-size chunks, so end time, energy sums and per-op completions
+    (hence p50/p99 request latency) are bit-identical across chunk
+    sizes AND to the scan engine — invariance by construction, not by
+    tolerance.  Grid: channels 1-4 x ways 1-16 x both policies x
+    arrivals on/off."""
+    for channels in (1, 2, 4):
+        for arrivals in (False, True):
+            sim = _sim(channels, ways)
+            t = _trace(channels, ways, arrivals=arrivals,
+                       seed=channels * 31 + ways)
+            batched = policy == "batched"
+            scan = api.get_engine("scan")
+            stream = api.get_engine("streaming")
+            end_ref, comp_ref = scan.completions(sim, t, batched=batched)
+            _, sums_ref = scan.energy_sums(sim, t, sim.kind,
+                                           batched=batched,
+                                           segment_len=None)
+            for chunk in (64, 256, 1024):
+                end, comp = stream.completions(sim, t, batched=batched,
+                                               segment_len=chunk)
+                assert end == end_ref, (channels, arrivals, chunk)
+                assert np.array_equal(comp, comp_ref), \
+                    (channels, arrivals, chunk)
+                for q in (50, 99):
+                    assert np.percentile(comp, q) == \
+                        np.percentile(comp_ref, q)
+                end_e, sums = stream.energy_sums(sim, t, sim.kind,
+                                                 batched=batched,
+                                                 segment_len=chunk)
+                assert end_e == end_ref
+                assert np.array_equal(sums, sums_ref), \
+                    (channels, arrivals, chunk)
+
+
+def test_run_stream_matches_run():
+    """``Simulator.run_stream`` over an iterator of chunks reproduces
+    the one-shot ``run`` result exactly — end time, bandwidth, busy
+    accounting and the energy breakdown — without ever materialising
+    the full trace."""
+    sim = _sim(2, 4)
+    t = _trace(2, 4, arrivals=False, seed=7, n_ops=500)
+    whole = sim.run(t, objective="all")
+    for chunk in (64, 128, 499, 512):
+        res = sim.run_stream(tr.iter_trace_chunks(t, chunk),
+                             objective="all")
+        assert res.end_us == whole.end_us, chunk
+        assert res.mb_s == pytest.approx(whole.mb_s)
+        assert res.n_ops == whole.n_ops
+        assert res.payload_bytes == whole.payload_bytes
+        np.testing.assert_allclose(res.channel_busy_us,
+                                   whole.channel_busy_us, rtol=1e-9)
+        assert res.energy.total_j == whole.energy.total_j
+        assert res.engine == "streaming"
+    # policy threads through; empty iterators raise like empty traces
+    assert sim.run_stream(tr.iter_trace_chunks(t, 64),
+                          policy="batched").end_us \
+        == sim.run(t, policy="batched").end_us
+    with pytest.raises(ValueError, match="empty trace"):
+        sim.run_stream(iter(()))
+    with pytest.raises(ValueError, match="unknown objective"):
+        sim.run_stream(tr.iter_trace_chunks(t, 64), objective="latency")
+
+
+def test_streaming_rejects_mid_stream_geometry_change():
+    sim = _sim(2, 4)
+    chunks = [tr.mixed_trace(32, 2, 4, 0.5, seed=0),
+              tr.mixed_trace(32, 4, 4, 0.5, seed=1)]
+    with pytest.raises(ValueError, match="channel"):
+        sim.run_stream(iter(chunks))
+
+
+def test_iter_trace_chunks_slices_faithfully():
+    t = _trace(2, 4, arrivals=True, seed=3, n_ops=100)
+    with pytest.raises(ValueError, match="chunk_len"):
+        next(tr.iter_trace_chunks(t, 0))
+    parts = list(tr.iter_trace_chunks(t, 33))
+    assert [p.n_ops for p in parts] == [33, 33, 33, 1]
+    for field in ("cls", "channel", "way", "parity", "arrival_us"):
+        cat = np.concatenate([np.asarray(getattr(p, field))
+                              for p in parts])
+        np.testing.assert_array_equal(cat, np.asarray(getattr(t, field)),
+                                      err_msg=field)
+
+
+def test_mixed_trace_chunks_generator_matches_whole_trace():
+    """The generator twin of ``mixed_trace`` draws the same rng stream
+    chunk-by-chunk, so concatenating its chunks reproduces the one-shot
+    trace bit-for-bit at any chunk length — million-op streaming inputs
+    never need the whole trace in memory."""
+    whole = tr.mixed_trace(1000, 2, 4, 0.3, seed=9)
+    for chunk_len in (100, 256, 999, 2048):
+        parts = list(tr.mixed_trace_chunks(1000, 2, 4, 0.3,
+                                           chunk_len=chunk_len, seed=9))
+        assert sum(p.n_ops for p in parts) == 1000
+        for field in ("cls", "channel", "way", "parity"):
+            cat = np.concatenate([np.asarray(getattr(p, field))
+                                  for p in parts])
+            np.testing.assert_array_equal(
+                cat, np.asarray(getattr(whole, field)),
+                err_msg=f"{field}@{chunk_len}")
+
+
+# --- shard_map sweeps (forced 8-device host) --------------------------------
+
+
+def test_shard_map_matches_vmap_subprocess_8dev():
+    """Every sharded entry point equals its single-device vmap path on a
+    forced 8-device host: sweep_tables (scan + prefix), the homogeneous
+    steady sweep (scan + squaring), and the packed run_many batch —
+    including batch sizes that do not divide the device count (the
+    leading axis pads to a device multiple and slices back)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax
+        assert len(jax.devices()) == 8
+        import repro.api as api
+        from repro.core import trace as tr
+        from repro.core.nand import CellType
+        from repro.core.sim import SSDConfig
+
+        sim = api.Simulator(SSDConfig(cell=CellType.MLC, channels=2, ways=4))
+        t = tr.mixed_trace(120, 2, 4, 0.5, seed=1)
+        for b in (5, 8, 11):                 # non-multiples pad + slice
+            tabs = [sim.table] * b
+            for eng in ("scan", "prefix"):
+                a = np.asarray(api.sweep_tables(tabs, t, engine=eng,
+                                                shard=True))
+                v = np.asarray(api.sweep_tables(tabs, t, engine=eng,
+                                                shard=False))
+                assert a.shape == (b,) and np.array_equal(a, v), (eng, b)
+        n = 11
+        args = (np.full(n, 0.2), np.full(n, 0.1), np.linspace(20, 40, n),
+                np.full(n, 200.0), np.full(n, 600.0), np.full(n, 1.0),
+                np.full(n, 4096.0), np.full(n, 4, np.int32))
+        for eng in ("scan", "squaring"):
+            a = np.asarray(api.sweep_steady_bandwidth_mb_s(
+                *args, n_pages=64, engine=eng, shard=True))
+            v = np.asarray(api.sweep_steady_bandwidth_mb_s(
+                *args, n_pages=64, engine=eng, shard=False))
+            assert np.array_equal(a, v), eng
+        traces = [tr.mixed_trace(m, 2, 4, 0.5, seed=s)
+                  for s, m in enumerate((37, 64, 100, 128, 200, 55, 90,
+                                         10, 73, 44))]
+        a = [r.end_us for r in sim.run_many(traces, shard=True)]
+        v = [r.end_us for r in sim.run_many(traces, shard=False)]
+        assert a == v, (a, v)
+        # streaming smoke on the multi-device host (engine is per-chunk
+        # jit, unsharded — must be unaffected by the device count)
+        res = sim.run_stream(tr.mixed_trace_chunks(2048, 2, 4, 0.5,
+                                                   chunk_len=256, seed=2))
+        one = sim.run(tr.mixed_trace(2048, 2, 4, 0.5, seed=2))
+        assert res.end_us == one.end_us
+        print("SHARD_SWEEP_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "SHARD_SWEEP_OK" in r.stdout, r.stdout + r.stderr
