@@ -1,0 +1,130 @@
+"""Benchmark: reliability and tail latency (DESIGN.md §2.8).
+
+The paper's drive is fresh silicon; a deployed drive spends most of its
+life worn.  This section measures what the reliability layer adds on
+top of the request-level serving model: the p99/p99.9-vs-offered-load
+curves of a worn drive (with and without hedged reads), the
+p99-vs-wear degradation curve, and the degraded-mode bandwidth /
+remap-op accounting under program faults.
+
+Three gates run even under ``--smoke``:
+
+* **faulty cross-engine agreement** — scan / prefix / pallas /
+  streaming must agree < 1e-3 with the oracle on a fault-extended
+  trace (the surcharge threads five independent implementations of the
+  recurrence);
+* **hedged p99 win** — under the frozen retry-storm configuration
+  (~3% of reads draw a >= 500 us retry ladder), hedging every read
+  must cut the p99 request latency, not just move it;
+* **monotone degradation** — p99 must be non-decreasing in wear.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.api import (FaultSpec, Simulator, SSDConfig, apply_faults,
+                       poisson_stream)
+from repro.core.nand import CellType
+from repro.core.trace import mixed_trace
+from repro.core.sim_ref import simulate_trace_ref
+
+# The frozen retry-storm gate configuration (tests/test_faults.py pins
+# the same numbers): at wear 1.0, p_retry = 3e-5/1e-3 = 3% of reads
+# draw a geometric retry ladder starting at 500 us — rare enough that
+# primary+duplicate double-storms (p^2) stay out of the p99, common
+# enough that the unhedged p99 IS a storm.
+STORM = dict(wear=1.0, rber_worn=3e-5, max_retries=4,
+             retry_step_us=(500.0, 1000.0, 2000.0, 4000.0))
+STORM_SEED = 7
+
+
+def _agreement_gate(sim: Simulator, n_ops: int) -> float:
+    """Max rel disagreement of every fault-capable engine vs the oracle
+    on a fault-extended mixed trace."""
+    spec = FaultSpec(wear=0.95, jitter_us=2.0, prog_fail_prob=0.02,
+                     seed=17)
+    trace, _, _ = apply_faults(
+        mixed_trace(n_ops, sim.config.channels, sim.config.ways, 0.7,
+                    seed=3),
+        spec, sim.table)
+    assert np.any(np.asarray(trace.extra_us) > 0.0)
+    ref = simulate_trace_ref(sim.table, trace, "eager")
+    tol_abs = 1e-3 * trace.n_ops + 1e-5 * ref
+    agree = 0.0
+    for engine in ("scan", "prefix", "pallas", "streaming"):
+        got = sim.run(trace, engine=engine).end_us
+        assert abs(got - ref) <= tol_abs, \
+            f"{engine} disagrees on faulty trace: {got} vs {ref}"
+        agree = max(agree, abs(got - ref) / ref)
+    return agree
+
+
+def run(small: bool = False) -> list[dict]:
+    n_req = 200 if small else 1000
+    interarrivals = (600.0, 300.0) if small else (900.0, 600.0, 300.0,
+                                                  150.0)
+    rows: list[dict] = []
+    cfg = SSDConfig(cell=CellType.MLC, channels=4, ways=4)
+    sim = Simulator.for_config(cfg)
+
+    # --- tail latency vs offered load, worn drive, +- hedging ------------
+    worn = FaultSpec(seed=STORM_SEED, **STORM)
+    hedged = dataclasses.replace(worn, hedge_fraction=1.0,
+                                 hedge_after_us=250.0)
+    for ia in interarrivals:
+        load = poisson_stream(n_req, ia, seed=2)
+        for tag, spec in (("unhedged", worn), ("hedged", hedged)):
+            res = sim.run(load, faults=spec)
+            rows.append({"name": f"rel/p99_us/ia{ia:g}/{tag}",
+                         "value": round(res.p99_us, 1), "paper": "-"})
+            rows.append({"name": f"rel/p99_9_us/ia{ia:g}/{tag}",
+                         "value": round(res.p99_9_us, 1), "paper": "-"})
+
+    # --- the hedging gate (smoke too): frozen storm seed -----------------
+    load = poisson_stream(max(n_req, 400), 600.0, seed=2)
+    ru = sim.run(load, faults=worn)
+    rh = sim.run(load, faults=hedged)
+    assert int(ru.retry_hist[1:].sum()) > 0, "storm seed drew no storms"
+    assert rh.p99_us <= ru.p99_us, \
+        f"hedged p99 {rh.p99_us} did not beat unhedged {ru.p99_us}"
+    rows.append({"name": "rel/hedged_p99_over_unhedged",
+                 "value": round(rh.p99_us / ru.p99_us, 4), "paper": "<=1"})
+
+    # --- p99 vs wear (monotone gate, smoke too) --------------------------
+    prev = -1.0
+    for wear in (0.0, 0.25, 0.5, 0.75, 1.0):
+        spec = FaultSpec(seed=STORM_SEED, **{**STORM, "wear": wear})
+        res = sim.run(load, faults=spec)
+        assert res.p99_us >= prev - 1e-9, \
+            f"p99 fell with wear: {res.p99_us} < {prev} at wear {wear}"
+        prev = res.p99_us
+        rows.append({"name": f"rel/p99_us_vs_wear/{wear:g}",
+                     "value": round(res.p99_us, 1), "paper": "-"})
+
+    # --- degraded-mode bandwidth + remap accounting ----------------------
+    t = mixed_trace(2000 if small else 20000, 4, 4, 0.5, seed=9)
+    fresh = sim.run(t)
+    degraded = sim.run(t, faults=FaultSpec(
+        wear=1.0, rber_worn=2e-4, prog_fail_prob=0.01,
+        erase_fail_prob=0.05, seed=5))
+    assert degraded.n_remap_ops > 0
+    assert degraded.end_us >= fresh.end_us
+    rows.append({"name": "rel/degraded_over_fresh_mb_s",
+                 "value": round(degraded.mb_s / fresh.mb_s, 4),
+                 "paper": "<=1"})
+    rows.append({"name": "rel/remap_ops_per_kop",
+                 "value": round(1e3 * degraded.n_remap_ops / t.n_ops, 2),
+                 "paper": "-"})
+    rows.append({"name": "rel/retry_reads_per_kop",
+                 "value": round(1e3 * int(degraded.retry_hist[1:].sum())
+                                / t.n_ops, 2),
+                 "paper": "-"})
+
+    # --- faulty cross-engine agreement gate (smoke too) ------------------
+    agree = _agreement_gate(sim, 400 if small else 2000)
+    rows.append({"name": "rel/faulty_engine_max_rel_disagreement",
+                 "value": f"{agree:.1e}", "paper": "<1e-3"})
+    return rows

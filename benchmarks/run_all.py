@@ -106,8 +106,8 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import (api_bench, freq, roofline, scale_bench,
-                            sched_bench, sweep_bench, tables)
+    from benchmarks import (api_bench, freq, reliability_bench, roofline,
+                            scale_bench, sched_bench, sweep_bench, tables)
 
     t0 = time.perf_counter()
     sections = [
@@ -132,6 +132,11 @@ def main() -> None:
         # megakernel >= 2x over per-trace launches and million-op
         # constant-memory streaming in full runs only
         _section("scale", lambda: scale_bench.run(small=args.smoke)),
+        # reliability + tail latency (DESIGN.md §2.8); gates (smoke too):
+        # faulty-trace cross-engine agreement < 1e-3, hedged p99 <=
+        # unhedged under the frozen retry-storm seed, p99 monotone in wear
+        _section("reliability",
+                 lambda: reliability_bench.run(small=args.smoke)),
     ]
     _check_speedups(sections, args.smoke)
 

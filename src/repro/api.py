@@ -19,8 +19,17 @@ Latency under load (request-level workloads, DESIGN.md §2.6)::
     res = sim.run(load, sched_policy="least_loaded")   # dynamic dispatch
     print(res.p50_us, res.p99_us)
 
+Reliability and tail latency (DESIGN.md §2.8)::
+
+    from repro.api import FaultSpec
+
+    worn = FaultSpec(wear=0.8, hedge_fraction=0.3, seed=7)
+    res = sim.run(load, faults=worn)            # retries, remaps, hedges
+    print(res.p99_9_us, res.n_remap_ops, res.retry_hist)
+
 See DESIGN.md §2.5 for the request/response model, the engine registry
-and the cache keying; §2.6 for workloads and scheduling policies.
+and the cache keying; §2.6 for workloads and scheduling policies; §2.8
+for the fault model and its determinism contract.
 """
 
 from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
@@ -31,11 +40,12 @@ from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
                             steady_channel_bandwidth_mb_s,
                             sweep_steady_bandwidth_mb_s, sweep_tables)
 from repro.core.energy import EnergyBreakdown
+from repro.core.faults import FaultSampler, FaultSpec
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sched import (DYNAMIC_POLICIES, LoweredWorkload,
-                              SCHED_POLICIES, STATIC_POLICIES, lower_static,
-                              policy_is_dynamic)
+                              SCHED_POLICIES, STATIC_POLICIES, apply_faults,
+                              lower_static, policy_is_dynamic)
 from repro.core.sim import PageOpParams, SSDConfig
 from repro.core.trace import (OpClassTable, OpTrace, READ, WRITE,
                               op_class_table, workload_trace)
@@ -43,7 +53,7 @@ from repro.core.workload import (RequestStream, build_workload,
                                  bursty_stream, checkpoint_requests,
                                  closed_loop_stream, datapipe_requests,
                                  kvoffload_requests, multi_tenant,
-                                 poisson_stream)
+                                 poisson_stream, with_hedges)
 
 __all__ = [
     # the session API proper
@@ -59,6 +69,8 @@ __all__ = [
     "checkpoint_requests", "closed_loop_stream", "datapipe_requests",
     "kvoffload_requests", "lower_static", "multi_tenant",
     "policy_is_dynamic", "poisson_stream",
+    # the reliability layer (DESIGN.md §2.8)
+    "FaultSampler", "FaultSpec", "apply_faults", "with_hedges",
     # the types a request/result is made of
     "CellType", "EnergyBreakdown", "InterfaceKind", "OpClassTable",
     "OpTrace", "PageOpParams", "READ", "SSDConfig", "WRITE",

@@ -65,6 +65,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import warnings
 from typing import Literal, Protocol, runtime_checkable
 
 import jax
@@ -74,8 +75,10 @@ import numpy as np
 from repro.core import sched as _sched
 from repro.core import sim as _sim
 from repro.core import trace as _trace
+from repro.core import workload as _workload
 from repro.core.energy import (EnergyBreakdown, breakdown_from_sums,
                                op_phase_energy_uj)
+from repro.core.faults import FaultSampler, FaultSpec
 from repro.core.interface import InterfaceKind
 from repro.core.sched import LoweredWorkload
 from repro.core.sim import (MAX_WAYS, PageOpParams, Policy, SSDConfig,
@@ -197,10 +200,21 @@ def _payload_latencies(lowered: LoweredWorkload, completion_us,
                        stream: RequestStream) -> np.ndarray:
     """Per-request latencies restricted to *payload* requests: hedged
     duplicates are transport, not requests — a duplicate queueing
-    behind its primary must not inflate the reported tail.  (The
-    first-response-wins latency *credit* is conservatively not modeled:
-    the primary's own completion is the reported bound.)"""
-    lat = lowered.request_latencies(completion_us)
+    behind its primary must not inflate the reported tail.  When the
+    stream links duplicates to their primaries (``hedge_of``, the
+    ``with_hedges`` builder), the first response wins: the primary is
+    credited with ``min(own done, duplicate done)`` — the whole point
+    of hedging (DESIGN.md §2.8).  Unlinked legacy duplicates keep the
+    conservative bound (the primary's own completion)."""
+    comp = np.asarray(completion_us, np.float64)
+    done = np.zeros(len(lowered.request_arrival_us), np.float64)
+    np.maximum.at(done, lowered.request_id, comp)
+    if stream.hedge_of is not None:
+        h = np.asarray(stream.hedge_of, np.int64)
+        link = h >= 0
+        if link.any():
+            np.minimum.at(done, h[link], done[link])
+    lat = done - np.asarray(lowered.request_arrival_us, np.float64)
     pay = stream.payload_mask()
     return lat if pay.all() else lat[pay]
 
@@ -212,10 +226,18 @@ def _op_arrivals(trace: OpTrace) -> np.ndarray:
     return np.asarray(trace.arrival_us, np.float32)
 
 
+def _op_extras(trace: OpTrace) -> np.ndarray:
+    """Per-op reliability surcharge array (zeros = fault-free)."""
+    if trace.extra_us is None:
+        return np.zeros(trace.n_ops, np.float32)
+    return np.asarray(trace.extra_us, np.float32)
+
+
 def _trace_args(trace: OpTrace):
     return (jnp.asarray(trace.cls), jnp.asarray(trace.channel),
             jnp.asarray(trace.way), jnp.asarray(trace.parity),
-            jnp.asarray(_op_arrivals(trace)))
+            jnp.asarray(_op_arrivals(trace)),
+            jnp.asarray(_op_extras(trace)))
 
 
 def _pad_trace_np(trace: OpTrace, t_bucket: int):
@@ -230,6 +252,7 @@ def _pad_trace_np(trace: OpTrace, t_bucket: int):
             np.pad(np.asarray(trace.way), (0, pad)),
             np.pad(np.asarray(trace.parity), (0, pad)),
             np.pad(_op_arrivals(trace), (0, pad)),
+            np.pad(_op_extras(trace), (0, pad)),
             valid)
 
 
@@ -238,15 +261,15 @@ def _padded_trace_args(trace: OpTrace, t_bucket: int):
 
 
 def _steady_channel_args(op: PageOpParams, ways, n_pages: int):
-    """(table columns, cls zeros, way, parity, arrival zeros) of a
-    single-channel round-robin stream over one op class — shared by
-    every engine with the homogeneous-pattern capability."""
+    """(table columns, cls zeros, way, parity, arrival zeros, extra
+    zeros) of a single-channel round-robin stream over one op class —
+    shared by every engine with the homogeneous-pattern capability."""
     scalars = _op_scalars(op)
     way, parity = _sim._steady_pattern(n_pages, jnp.asarray(ways, jnp.int32))
     zeros = jnp.zeros((n_pages,), jnp.int32)
     zeros_f = jnp.zeros((n_pages,), jnp.float32)
     table = tuple(x[None] for x in scalars) + (jnp.zeros((1,), jnp.float32),)
-    return table, zeros, way, parity, zeros_f
+    return table, zeros, way, parity, zeros_f, zeros_f
 
 
 def _stacked_table_args(tables: list[OpClassTable]):
@@ -293,9 +316,13 @@ class _EngineBase:
         self._unsupported("per-op completion times", "completions")
 
     def dispatch_run(self, sim: "Simulator", cls, arrival_us, *,
-                     n_channels: int, n_ways: int, rule: str):
+                     n_channels: int, n_ways: int, rule: str,
+                     extra_us=None, retired=None):
         """Joint dispatch+simulate under a dynamic sched policy; returns
-        (end_us, completion[T], channel[T], way[T], parity[T])."""
+        (end_us, completion[T], channel[T], way[T], parity[T]).
+        ``extra_us`` / ``retired`` are the reliability-layer inputs:
+        per-op surcharges and the bad-block mask the dispatch rule must
+        never place an op on (DESIGN.md §2.8)."""
         self._unsupported("dynamic dispatch policies", "dispatch_run")
 
 
@@ -326,14 +353,21 @@ class ScanEngine(_EngineBase):
         return float(end), np.asarray(comp, np.float64)[: trace.n_ops]
 
     def dispatch_run(self, sim, cls, arrival_us, *, n_channels, n_ways,
-                     rule):
+                     rule, extra_us=None, retired=None):
         fn = sim._closure(
-            ("scan-dispatch", n_channels, n_ways, len(cls), rule),
+            ("scan-dispatch", n_channels, n_ways, len(cls), rule,
+             extra_us is not None, retired is not None),
             lambda: functools.partial(
                 _sim.dispatch_trace, *sim._targs,
                 n_channels=n_channels, n_ways=n_ways, rule=rule))
+        kw = {}
+        if extra_us is not None:
+            kw["extra_us"] = jnp.asarray(extra_us, jnp.float32)
+        if retired is not None:
+            kw["retired"] = jnp.asarray(retired, bool)
         end, comp, chan, way, par = fn(jnp.asarray(cls, jnp.int32),
-                                       jnp.asarray(arrival_us, jnp.float32))
+                                       jnp.asarray(arrival_us, jnp.float32),
+                                       **kw)
         return (float(end), np.asarray(comp, np.float64),
                 np.asarray(chan), np.asarray(way), np.asarray(par))
 
@@ -355,10 +389,10 @@ class ScanEngine(_EngineBase):
         return np.asarray(end)
 
     def steady_channel_end(self, op, ways, *, n_pages, batched):
-        table, zeros, way, parity, arr = _steady_channel_args(
+        table, zeros, way, parity, arr, ext = _steady_channel_args(
             op, ways, n_pages)
         return _sim.trace_end_time(
-            *table, zeros, zeros, way, parity, arr,
+            *table, zeros, zeros, way, parity, arr, ext,
             n_channels=1, batched=batched)
 
     def sweep_steady(self, scalars, data_bytes, ways, *, n_pages, batched):
@@ -403,10 +437,10 @@ class PrefixEngine(_EngineBase):
         return np.asarray(end)
 
     def steady_channel_end(self, op, ways, *, n_pages, batched):
-        table, zeros, way, parity, arr = _steady_channel_args(
+        table, zeros, way, parity, arr, ext = _steady_channel_args(
             op, ways, n_pages)
         return _sim.trace_end_time_prefix(
-            *table, zeros, zeros, way, parity, arr,
+            *table, zeros, zeros, way, parity, arr, ext,
             n_channels=1, n_ways=MAX_WAYS, batched=batched)
 
 
@@ -428,6 +462,13 @@ class SquaringEngine(_EngineBase):
             raise CapabilityError(
                 "engine 'squaring' folds a fixed period matrix — per-op "
                 f"arrivals break periodicity (arrival-aware engines: {okay})")
+        if trace.extra_us is not None and np.any(trace.extra_us > 0):
+            okay = ", ".join(sorted(
+                n for n, e in _REGISTRY.items() if e.caps.arrivals))
+            raise CapabilityError(
+                "engine 'squaring' folds a fixed period matrix — per-op "
+                "reliability surcharges (extra_us) break periodicity "
+                f"(fault-aware engines: {okay})")
         if (trace.channels != 1
                 or np.any(cls != cls[0])
                 or np.any(np.asarray(trace.channel) != 0)
@@ -626,7 +667,17 @@ class SimRequest:
     also accepts ``sched_policy``: static policies lower offline to a
     trace any engine can evaluate; dynamic policies need an engine with
     the ``dispatch`` capability (enforced by the registry) and produce
-    per-request latency percentiles on the result."""
+    per-request latency percentiles on the result.
+
+    ``faults`` attaches a :class:`repro.core.faults.FaultSpec`
+    (DESIGN.md §2.8): read-retry/jitter surcharges and program-fault
+    remap ops are sampled once, host-side, and rewritten into the
+    placed trace before the engine fold, so every engine answers the
+    same faulty trace bit-deterministically given ``(query, spec)``.
+    On workload queries a spec with ``hedge_fraction > 0`` also hedges
+    the stream (``workload.with_hedges``) before lowering; a bare-trace
+    query has no requests to hedge, so only the per-op fault channel
+    applies."""
 
     trace: OpTrace | None = None
     policy: Policy | None = None        # None -> the session's default
@@ -635,6 +686,7 @@ class SimRequest:
     segment_len: int | None = 64        # prefix-engine chunk size
     workload: RequestStream | None = None
     sched_policy: str | None = None     # None -> "stripe" (workload only)
+    faults: FaultSpec | None = None     # None -> fault-free
 
     def __post_init__(self):
         if (self.trace is None) == (self.workload is None):
@@ -645,6 +697,15 @@ class SimRequest:
                 raise ValueError("sched_policy applies to workload "
                                  "requests (the trace is already placed)")
             _sched.policy_is_dynamic(self.sched_policy)   # validates
+        if self.faults is not None and not isinstance(self.faults,
+                                                      FaultSpec):
+            raise ValueError(
+                f"faults= takes a FaultSpec, got {type(self.faults).__name__}")
+        if (self.faults is not None and self.trace is not None
+                and self.trace.extra_us is not None):
+            raise ValueError(
+                "trace already carries extra_us — faults were already "
+                "applied (attach the FaultSpec OR pre-apply, not both)")
         if self.policy is not None:
             policy_is_batched(self.policy)
         if self.objective not in OBJECTIVES:
@@ -662,7 +723,17 @@ class SimResult:
     e.g. all-hedged duplicates).  Workload queries additionally carry
     per-request latencies (when the serving engine emits per-op
     completions — scan / oracle / every dynamic dispatch; the log-depth
-    engines answer makespan-only and leave it None)."""
+    engines answer makespan-only and leave it None).  Fault-injected
+    queries additionally carry the sampled ``retry_hist`` (retry-count
+    histogram over read ops) and ``n_remap_ops`` (program-fault remap
+    writes inserted by the rewrite pass).
+
+    Percentile properties are guarded: a pN on fewer than
+    ``100 / (100 - N)`` requests (e.g. p99 on < 100, p99.9 on < 1000)
+    is below the percentile resolution — it clamps to the max observed
+    latency and emits a ``RuntimeWarning`` instead of silently
+    interpolating a tail that was never sampled; an empty latency
+    stream answers NaN."""
 
     end_us: float
     mb_s: float | None
@@ -673,25 +744,48 @@ class SimResult:
     payload_bytes: int
     request_lat_us: np.ndarray | None = None   # [R] per-request latency
     sched_policy: str | None = None            # workload queries only
+    retry_hist: np.ndarray | None = None       # [max_retries+1] counts
+    n_remap_ops: int = 0                       # program-fault remap writes
 
     @property
     def channel_occupancy(self) -> np.ndarray:
         """Per-channel bus busy fraction of the makespan."""
         return self.channel_busy_us / max(self.end_us, 1e-30)
 
+    def _latency_percentile(self, q: float) -> float | None:
+        """Guarded percentile (see class docstring): clamps to the max
+        latency (with a RuntimeWarning) when the stream is too short to
+        resolve the requested tail; NaN on an empty stream."""
+        if self.request_lat_us is None:
+            return None
+        lat = np.asarray(self.request_lat_us, np.float64)
+        if lat.size == 0:
+            return float("nan")
+        # resolving pN needs >= 100/(100-N) samples: below that the
+        # order statistic for the tail does not exist yet
+        if lat.size * (100.0 - q) < 100.0:
+            warnings.warn(
+                f"p{q:g} on {lat.size} request(s) is below the percentile "
+                "resolution — clamping to the max observed latency",
+                RuntimeWarning, stacklevel=3)
+            return float(np.max(lat))
+        return float(np.percentile(lat, q))
+
     @property
     def p50_us(self) -> float | None:
         """Median request latency (workload queries with completions)."""
-        if self.request_lat_us is None:
-            return None
-        return float(np.percentile(self.request_lat_us, 50))
+        return self._latency_percentile(50)
 
     @property
     def p99_us(self) -> float | None:
         """99th-percentile request latency."""
-        if self.request_lat_us is None:
-            return None
-        return float(np.percentile(self.request_lat_us, 99))
+        return self._latency_percentile(99)
+
+    @property
+    def p99_9_us(self) -> float | None:
+        """99.9th-percentile request latency — the retry-storm tail the
+        reliability layer exists to measure (DESIGN.md §2.8)."""
+        return self._latency_percentile(99.9)
 
     def describe(self) -> str:
         occ = "/".join(f"{x:.2f}" for x in self.channel_occupancy)
@@ -836,12 +930,23 @@ class Simulator:
             raise CapabilityError(
                 f"engine {eng.caps.name!r} cannot consume arrival-aware "
                 f"traces (engines that can: {okay})")
+        # faults ride the same per-op side-channel machinery as arrivals,
+        # so the capability row is shared
+        if ((request.faults is not None and not request.faults.is_zero
+             or trace is not None and trace.extra_us is not None
+             and np.any(trace.extra_us > 0)) and not eng.caps.arrivals):
+            okay = ", ".join(n for n in registered_engines()
+                             if _REGISTRY[n].caps.arrivals)
+            raise CapabilityError(
+                f"engine {eng.caps.name!r} cannot consume fault-extended "
+                f"traces (engines that can: {okay})")
         return eng, batched
 
     def _result(self, trace: OpTrace, end_us: float, engine: str,
                 energy: EnergyBreakdown | None,
                 request_lat_us: np.ndarray | None = None,
-                sched_policy: str | None = None) -> SimResult:
+                sched_policy: str | None = None,
+                sampler: FaultSampler | None = None) -> SimResult:
         table = self.table
         payload = trace.total_bytes(table)
         busy = np.bincount(
@@ -854,7 +959,10 @@ class Simulator:
             mb_s=(payload / end_us) if payload > 0 else None,
             channel_busy_us=busy, energy=energy, engine=engine,
             n_ops=trace.n_ops, payload_bytes=payload,
-            request_lat_us=request_lat_us, sched_policy=sched_policy)
+            request_lat_us=request_lat_us, sched_policy=sched_policy,
+            retry_hist=(None if sampler is None
+                        else sampler.retry_hist.copy()),
+            n_remap_ops=0 if sampler is None else sampler.n_remap_ops)
 
     def _breakdown(self, sums, end_us: float, trace: OpTrace):
         return breakdown_from_sums(
@@ -881,6 +989,10 @@ class Simulator:
             raise ValueError("empty trace: no ops to simulate")
         trace.validate_against(self.table)
         eng, batched = self._resolve(request, trace)
+        sampler = None
+        if request.faults is not None:
+            trace, _, sampler = _sched.apply_faults(
+                trace, request.faults, self.table)
         energy = None
         if request.objective in ("energy", "all"):
             end, sums = eng.energy_sums(
@@ -891,7 +1003,8 @@ class Simulator:
         else:
             end_us = eng.end_time(self, trace, batched=batched,
                                   segment_len=request.segment_len)
-        return self._result(trace, end_us, eng.caps.name, energy)
+        return self._result(trace, end_us, eng.caps.name, energy,
+                            sampler=sampler)
 
     def _run_workload(self, request: SimRequest) -> SimResult:
         """Workload queries: lower the request stream through the
@@ -912,6 +1025,14 @@ class Simulator:
                 f"RequestStream.op_cls out of range: max "
                 f"{int(np.max(stream.op_cls))} >= table.n_classes "
                 f"{self.table.n_classes}")
+        spec = request.faults
+        if spec is not None and spec.hedge_fraction > 0.0:
+            # the spec's mitigation half: hedge payload reads before the
+            # scheduler sees the stream, so duplicates flow through the
+            # same lowering/dispatch as everything else
+            stream = _workload.with_hedges(
+                stream, spec.hedge_fraction,
+                after_us=spec.hedge_after_us or 0.0, seed=spec.seed)
         policy_s = request.sched_policy or "stripe"
         eng, batched = self._resolve(request)
         channels, ways = self.config.channels, self.config.ways
@@ -924,14 +1045,43 @@ class Simulator:
                     "policy; 'batched' rounds are fixed at build time "
                     "and only exist for static lowerings")
             cls, arrival, req_id, payload = request_ops(stream)
+            extra = retired = sampler = None
+            if spec is not None:
+                # dynamic faults sample on the op-class sequence alone
+                # (placement is decided in-fold): retry/jitter surcharges
+                # ride extra_us, a program fault inserts its remap write
+                # right after the failed op, and retired blocks become a
+                # dispatch constraint via the retired mask
+                sampler = FaultSampler(spec, channels, ways, self.table)
+                extra, write_fail, _ = sampler.sample(cls)
+                fail = np.flatnonzero(write_fail)
+                if len(fail):
+                    ins = fail + 1
+                    n = len(cls)
+                    new_of_old = np.arange(n) + np.searchsorted(
+                        ins, np.arange(n), "right")
+                    cls = np.insert(cls, ins, cls[fail])
+                    arrival = np.insert(arrival, ins, arrival[fail])
+                    req_id = np.insert(req_id, ins, req_id[fail])
+                    extra = np.insert(extra, ins, 0.0).astype(np.float32)
+                    pay2 = np.insert(payload, ins, payload[fail])
+                    # the failed original keeps its bus/cell cost but the
+                    # byte credit moves to the remap — totals conserved
+                    pay2[new_of_old[fail]] = False
+                    payload = pay2
+                    sampler.n_remap_ops += len(fail)
+                if sampler.retired.any():
+                    retired = sampler.retired
             end, comp, chan, way, par = eng.dispatch_run(
                 self, cls, arrival, n_channels=channels, n_ways=ways,
-                rule=policy_s)
+                rule=policy_s, extra_us=extra, retired=retired)
             trace = OpTrace(
                 cls=np.asarray(cls, np.int32), channel=chan, way=way,
                 parity=par, channels=channels, ways=ways,
                 payload=None if payload.all() else payload,
-                arrival_us=arrival)
+                arrival_us=arrival,
+                extra_us=(None if extra is None
+                          else np.asarray(extra, np.float32)))
             lowered = LoweredWorkload(
                 trace=trace, request_id=req_id,
                 request_arrival_us=np.asarray(stream.arrival_us,
@@ -945,9 +1095,17 @@ class Simulator:
                 energy = self._breakdown(
                     self._linear_energy_sums(trace, self.kind), end, trace)
             return self._result(trace, end, eng.caps.name, energy,
-                                request_lat_us=lat, sched_policy=policy_s)
+                                request_lat_us=lat, sched_policy=policy_s,
+                                sampler=sampler)
         lowered = _sched.lower_static(stream, channels, ways, policy_s)
         trace = lowered.trace
+        sampler = None
+        if spec is not None:
+            trace, rid2, sampler = _sched.apply_faults(
+                trace, spec, self.table, request_id=lowered.request_id)
+            lowered = LoweredWorkload(
+                trace=trace, request_id=rid2,
+                request_arrival_us=lowered.request_arrival_us)
         trace.validate_against(self.table)
         energy = None
         lat = None
@@ -965,7 +1123,8 @@ class Simulator:
                 segment_len=request.segment_len)
             energy = self._breakdown(sums, end_e, trace)
         return self._result(trace, end_us, eng.caps.name, energy,
-                            request_lat_us=lat, sched_policy=policy_s)
+                            request_lat_us=lat, sched_policy=policy_s,
+                            sampler=sampler)
 
     def run_many(self, traces, *, policy: Policy | None = None,
                  objective: Objective = "end_time",
@@ -1051,7 +1210,7 @@ class Simulator:
                         mesh, functools.partial(
                             _sim.trace_end_time_masked_many, *self._targs,
                             n_channels=channels, batched=batched),
-                        n_sharded=6))
+                        n_sharded=7))
             ends[idxs] = np.asarray(
                 fn(*(jnp.asarray(s) for s in stacked)))[: len(idxs)]
         return self._many_results(traces, ends, name, objective)
@@ -1286,10 +1445,10 @@ def sweep_steady_bandwidth_mb_s(cmd_us, pre_us, slot_us, post_lo_us,
 
 
 __all__ = [
-    "CacheInfo", "CapabilityError", "Engine", "EngineCaps", "OBJECTIVES",
-    "Objective", "Policy", "RequestStream", "SimRequest", "SimResult",
-    "Simulator", "engine_capabilities", "get_engine", "register_engine",
-    "registered_engines", "simulator_for", "steady_bandwidth_mb_s",
-    "steady_channel_bandwidth_mb_s", "sweep_steady_bandwidth_mb_s",
-    "sweep_tables",
+    "CacheInfo", "CapabilityError", "Engine", "EngineCaps", "FaultSpec",
+    "OBJECTIVES", "Objective", "Policy", "RequestStream", "SimRequest",
+    "SimResult", "Simulator", "engine_capabilities", "get_engine",
+    "register_engine", "registered_engines", "simulator_for",
+    "steady_bandwidth_mb_s", "steady_channel_bandwidth_mb_s",
+    "sweep_steady_bandwidth_mb_s", "sweep_tables",
 ]

@@ -127,14 +127,22 @@ def ready_offset_us(cmd_us: float, pre_us: float, way: int,
 def op_matrix(layout: StateLayout, *, cmd_us: float, pre_us: float,
               slot_us: float, ctrl_us: float, arb_us: float, post_us: float,
               channel: int, way: int, policy: str = "eager",
-              arrival_us: float = 0.0) -> np.ndarray:
+              arrival_us: float = 0.0, extra_us: float = 0.0) -> np.ndarray:
     """(max,+) step matrix of one op on (channel, way).
 
     ``arrival_us`` enters through the origin column: the op's ready time
     is max(base, arrival) + ready_offset, so the origin source carries
     ``arrival + ready_offset``.  At arrival 0 the origin candidate is
     dominated by every real source (state values are >= 0), leaving
-    zero-arrival traces numerically identical to the pre-arrival form."""
+    zero-arrival traces numerically identical to the pre-arrival form.
+
+    ``extra_us`` is the op's reliability surcharge (DESIGN.md §2.8): it
+    extends the op's *chip* occupancy (chip = bus' + post + extra) — an
+    additive per-op shift that stays inside the (max,+) algebra.
+    Retries re-run the sense inside the die, so neither the channel bus
+    nor the serial controller is held: one retry-stormed read delays
+    its own request and later ops on the same chip, never the channel
+    or the FCFS issue stage."""
     n = layout.n_state
     a = np.full((n, n), NEG, np.float32)
     for r in range(n):
@@ -155,11 +163,11 @@ def op_matrix(layout: StateLayout, *, cmd_us: float, pre_us: float,
         sources = {bus: 0.0, chip: cmd_us + pre_us}
     sources[ctrl] = max(sources.get(ctrl, NEG), 0.0)
     sources[origin] = arrival_us + ready_off
-    for row, extra in ((bus, slot_us), (ctrl, ctrl_us),
-                       (chip, slot_us + post_us)):
+    for row, tail in ((bus, slot_us), (ctrl, ctrl_us),
+                      (chip, slot_us + extra_us + post_us)):
         a[row, :] = NEG
         for col, off in sources.items():
-            a[row, col] = arb_us + off + extra
+            a[row, col] = arb_us + off + tail
     return a
 
 
@@ -236,6 +244,25 @@ def combo_arrival_offsets(table, combos, layout: StateLayout,
         g[m, layout.ctrl] = arb + ready_off + float(table.ctrl_us[k])
         g[m, layout.chip(c, w)] = arb + ready_off + slot + post
     return g
+
+
+def combo_written_rows(combos, layout: StateLayout) -> np.ndarray:
+    """[M, N] float32 mask: 1.0 on the state rows the per-op reliability
+    surcharge *shifts* (op combo m's chip only — retries re-run the
+    sense in the die, so the bus, serial-ctrl and round-start rows are
+    never extended), 0.0 elsewhere.
+
+    This is how the surcharge (``OpTrace.extra_us``, DESIGN.md §2.8)
+    enters the dictionary-matrix folds without exploding the dictionary
+    to one matrix per op: a fold step becomes
+    ``s' = max(A_m (x) s, arr + g[m]) + wrows[m] * extra_t`` — the
+    shifted chip row moves by the op's extra (exactly the scan
+    recurrence, where chip = bus' + post + extra), untouched rows add
+    0.0 (exact)."""
+    wr = np.zeros((len(combos), layout.n_state), np.float32)
+    for m, (_, c, w, _) in enumerate(combos):
+        wr[m, layout.chip(c, w)] = 1.0
+    return wr
 
 
 
@@ -367,6 +394,7 @@ def structured_segment_products(
     way: jax.Array,          # [T] int32
     parity: jax.Array,       # [T] int32
     arrival_us: jax.Array | None = None,   # [T] float32 request arrivals
+    extra_us: jax.Array | None = None,     # [T] float32 reliability add-on
     *,
     channels: int,
     ways: int,
@@ -388,7 +416,13 @@ def structured_segment_products(
     (DESIGN.md §2.6), so the segment products compose arrival effects
     across segments exactly like every other (max,+) source.  None (or
     all-zero) arrivals reproduce the pre-arrival products bit-for-bit
-    (state rows dominate the zero-shifted origin row)."""
+    (state rows dominate the zero-shifted origin row).
+
+    ``extra_us`` (the per-op reliability surcharge, DESIGN.md §2.8)
+    extends the op's chip row only (chip = bus' + post + extra); the
+    bus and serial-ctrl rows are never extended — retries re-run the
+    sense inside the die.  None / all-zero extras add +0.0 — exact,
+    bit-for-bit."""
     layout = StateLayout(channels, ways)
     n = layout.n_state
     t_steps = cls.shape[0]
@@ -397,6 +431,8 @@ def structured_segment_products(
     pad = n_seg * seg - t_steps
     if arrival_us is None:
         arrival_us = jnp.zeros((t_steps,), jnp.float32)
+    if extra_us is None:
+        extra_us = jnp.zeros((t_steps,), jnp.float32)
 
     def cols(x, fill=0):
         x = jnp.pad(jnp.asarray(x), (0, pad), constant_values=fill)
@@ -414,13 +450,14 @@ def structured_segment_products(
     w = cols(jnp.asarray(way, jnp.int32))
     par = cols(jnp.asarray(parity, jnp.int32))
     arr = cols(jnp.asarray(arrival_us, jnp.float32))
+    ext = cols(jnp.asarray(extra_us, jnp.float32))
     valid = cols(jnp.ones((t_steps,), bool), fill=False)
     ready_off = ((w + 1).astype(jnp.float32) * cmd_us[k] if batched
                  else cmd_us[k]) + pre_us[k]
     xs = (c, c * ways + w,
           jnp.where(valid, c, channels),               # drop-sentinels
           jnp.where(valid, c * ways + w, channels * ways),
-          (w == 0) & valid, valid, ready_off, arr,
+          (w == 0) & valid, valid, ready_off, arr, ext,
           slot_us[k], ctrl_us[k], arb_us[k],
           jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k]))
 
@@ -435,7 +472,8 @@ def structured_segment_products(
 
     def step(state, op):
         bus, chip, ctl, rs = state
-        c, cw, ci, cwi, first, ok, rd, arr_t, slot, ctru, arb, post = op
+        (c, cw, ci, cwi, first, ok, rd, arr_t, ext_t, slot, ctru, arb,
+         post) = op
         bus_c = jnp.take_along_axis(bus, c[:, None, None], axis=1)[:, 0]
         arr_row = origin_row[None, :] + arr_t[:, None]   # [S, N]
         if batched:
@@ -451,7 +489,8 @@ def structured_segment_products(
         start = jnp.maximum(jnp.maximum(bus_c, ready), ctl) + arb[:, None]
         new_bus = start + slot[:, None]
         bus = bus.at[lane, ci].set(new_bus, mode="drop")
-        chip = chip.at[lane, cwi].set(new_bus + post[:, None], mode="drop")
+        chip = chip.at[lane, cwi].set(
+            new_bus + post[:, None] + ext_t[:, None], mode="drop")
         ctl = jnp.where(ok[:, None], start + ctru[:, None], ctl)
         return (bus, chip, ctl, rs), None
 

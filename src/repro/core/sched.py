@@ -33,6 +33,13 @@ is what gates SSD scalability; this module makes it a policy axis:
 
 Engines advertise dynamic support through the ``dispatch`` capability
 in the ``repro.core.api`` registry.
+
+The reliability layer (DESIGN.md §2.8) enters here as a trace-rewrite
+pass: :func:`apply_faults` samples a :class:`repro.core.faults.FaultSpec`
+against a placed ``OpTrace`` — read-retry/jitter surcharges land in
+``extra_us`` and program faults insert remap writes targeting the next
+non-retired way (bad-block retirement is also a dispatch constraint for
+the dynamic policies, which never place an op on a retired way).
 """
 
 from __future__ import annotations
@@ -41,6 +48,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.faults import FaultSampler, FaultSpec
 from repro.core.trace import OpTrace, _finalize
 from repro.core.workload import RequestStream, request_ops
 
@@ -103,8 +111,29 @@ def lower_static(stream: RequestStream, channels: int, ways: int,
         way = slots % ways
         chan = (slots // ways) % channels
     if not payload.all():
-        # hedged duplicates: primary's placement, one channel over
-        chan = np.where(payload, chan, (chan + 1) % channels)
+        hof = (np.full(stream.n_requests, -1, np.int64)
+               if stream.hedge_of is None
+               else np.asarray(stream.hedge_of, np.int64))
+        h = hof[req_id]                             # primary request per op
+        is_h = h >= 0
+        # duplicates without an explicit primary link: legacy adjacency
+        # rule (their stagnant slot is the preceding payload op's)
+        chan = np.where(~payload & ~is_h, (chan + 1) % channels, chan)
+        if is_h.any():
+            # hedge_of-linked duplicates mirror op j of their primary
+            # request shifted one channel AND one way.  The channel
+            # shift is the replica-read rule; the way shift keeps the
+            # duplicate off the chip the stripe is about to reuse for
+            # the *next* payload op — without it every duplicate queues
+            # on exactly that chip and (FCFS issue being serial through
+            # the controller) convoys the whole stream, inverting the
+            # mitigation it exists to provide.
+            reps = np.asarray(stream.n_pages, np.int64)
+            starts = np.cumsum(reps) - reps         # [R] first-op index
+            pos = np.arange(len(cls)) - starts[req_id]
+            src = starts[np.clip(h, 0, None)] + pos
+            chan = np.where(is_h, (chan[src] + 1) % channels, chan)
+            way = np.where(is_h, (way[src] + 1) % ways, way)
     # _finalize owns the MLC per-chip page-parity derivation (the one
     # definition every trace builder shares); arrivals ride on top
     trace = dataclasses.replace(
@@ -114,3 +143,49 @@ def lower_static(stream: RequestStream, channels: int, ways: int,
     return LoweredWorkload(
         trace=trace, request_id=req_id,
         request_arrival_us=np.asarray(stream.arrival_us, np.float32))
+
+
+def apply_faults(trace: OpTrace, spec: FaultSpec, table=None, *,
+                 sampler: FaultSampler | None = None,
+                 request_id: np.ndarray | None = None
+                 ) -> tuple[OpTrace, np.ndarray | None, FaultSampler]:
+    """Rewrite a placed ``OpTrace`` under a :class:`FaultSpec`
+    (DESIGN.md §2.8): read-retry + jitter surcharges land in
+    ``extra_us`` and each program fault inserts a remap write right
+    after the failed op, targeting the next non-retired way on the same
+    channel (the failed original keeps its bus/cell cost but loses its
+    payload byte credit to the remap, so byte totals are conserved).
+
+    Returns ``(trace2, request_id2, sampler)`` — ``request_id2`` is the
+    op→request map with remap ops inheriting their request (None in,
+    None out), and the returned sampler carries the accumulated
+    ``retry_hist`` / ``n_remap_ops`` / ``retired`` state (pass it back
+    in for chunked streams so every chunk draws from the same PCG64
+    position).  ``table`` (the OpClassTable) is required only when
+    ``spec.retry_step_us`` is None, to price a retry as one re-read of
+    its own op class."""
+    if trace.extra_us is not None:
+        raise ValueError(
+            "trace already carries extra_us — faults were already applied "
+            "(apply_faults must run once per stream)")
+    if sampler is None:
+        sampler = FaultSampler(spec, trace.channels, trace.ways, table)
+    payload = trace.payload
+    if payload is None and spec.prog_fail_prob > 0.0:
+        # byte conservation needs an explicit mask once remaps can strip
+        # a failed write's credit (None means "all payload")
+        payload = np.ones(trace.n_ops, bool)
+    cls2, ch2, w2, par2, arr2, ext2, pay2, rid2 = sampler.rewrite(
+        np.asarray(trace.cls), np.asarray(trace.channel),
+        np.asarray(trace.way), np.asarray(trace.parity),
+        arrival=trace.arrival_us, payload=payload, request_id=request_id)
+    trace2 = OpTrace(
+        cls=cls2.astype(np.int32), channel=ch2.astype(np.int32),
+        way=w2.astype(np.int32), parity=par2.astype(np.int32),
+        channels=trace.channels, ways=trace.ways,
+        payload=(None if pay2 is None or pay2.all()
+                 else np.asarray(pay2, bool)),
+        arrival_us=(None if arr2 is None
+                    else np.asarray(arr2, np.float32)),
+        extra_us=np.asarray(ext2, np.float32))
+    return trace2, rid2, sampler

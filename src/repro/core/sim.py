@@ -245,11 +245,21 @@ def _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
     entry point (plain and energy-carrying) folds.  The op tuple carries
     the request arrival time: the ready base is maxed with it before the
     command-issue offset, so an op can never start before its request
-    arrives (arrival 0 = the old back-to-back behaviour, bit-for-bit)."""
+    arrives (arrival 0 = the old back-to-back behaviour, bit-for-bit).
+    It also carries the op's reliability surcharge ``ext`` (read-retry +
+    jitter time sampled outside the fold, DESIGN.md §2.8): each retry
+    re-runs the *sense* inside the die, so ``ext`` extends the op's chip
+    occupancy (its release, and hence its completion) — never the
+    channel bus and never the serial controller.  A retry storm
+    therefore delays its own request and later ops on the *same chip*,
+    but cannot head-of-line-block the channel or the FCFS issue stage —
+    which is exactly what lets a hedged duplicate on another chip
+    overtake it.  Adding 0.0 is exact in float32, so a fault-free
+    vector reproduces the old state bit-for-bit."""
 
     def step(state, op):
         bus_free, chip_free, ctrl_free, round_start = state
-        k, c, w, par, arr = op
+        k, c, w, par, arr, ext = op
         cmd = cmd_us[k]
         round_start = jnp.where(
             w == 0, round_start.at[c].set(bus_free[c]), round_start)
@@ -264,7 +274,7 @@ def _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
         new_bus = start + slot_us[k]
         post = jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k])
         bus_free = bus_free.at[c].set(new_bus)
-        chip_free = chip_free.at[c, w].set(new_bus + post)
+        chip_free = chip_free.at[c, w].set(new_bus + post + ext)
         return (bus_free, chip_free, start + ctrl_us[k], round_start)
 
     return step
@@ -279,10 +289,10 @@ def _trace_scan_init(n_channels):
     )
 
 
-def _trace_ops(cls, channel, way, parity, arrival):
+def _trace_ops(cls, channel, way, parity, arrival, extra):
     return (cls.astype(jnp.int32), channel.astype(jnp.int32),
             way.astype(jnp.int32), parity.astype(jnp.int32),
-            arrival.astype(jnp.float32))
+            arrival.astype(jnp.float32), extra.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
@@ -299,6 +309,7 @@ def trace_end_time(
     way: jax.Array,          # [T] int32
     parity: jax.Array,       # [T] int32 page parity (MLC lower/upper)
     arrival_us: jax.Array,   # [T] float32 request arrival per op (0 = t0)
+    extra_us: jax.Array,     # [T] float32 reliability surcharge (0 = none)
     n_channels: int,
     batched: bool,
 ) -> jax.Array:
@@ -307,7 +318,7 @@ def trace_end_time(
                          ctrl_us, arb_us, batched)
     (bus_free, chip_free, _, _), _ = jax.lax.scan(
         lambda s, op: (upd(s, op), None), _trace_scan_init(n_channels),
-        _trace_ops(cls, channel, way, parity, arrival_us))
+        _trace_ops(cls, channel, way, parity, arrival_us, extra_us))
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
 
 
@@ -326,6 +337,7 @@ def trace_end_time_energy(
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
     arrival_us: jax.Array,   # [T]
+    extra_us: jax.Array,     # [T]
     n_channels: int,
     batched: bool,
 ) -> tuple[jax.Array, jax.Array]:
@@ -337,28 +349,31 @@ def trace_end_time_energy(
 
     def step(carry, op):
         state, acc = carry
-        k, c, w, par, arr = op
+        k, c, w, par, arr, ext = op
         return (upd(state, op), acc + e_op_uj[k, par % 2]), None
 
     init = (_trace_scan_init(n_channels),
             jnp.zeros((e_op_uj.shape[-1],), jnp.float32))
     ((bus_free, chip_free, _, _), acc), _ = jax.lax.scan(
-        step, init, _trace_ops(cls, channel, way, parity, arrival_us))
+        step, init,
+        _trace_ops(cls, channel, way, parity, arrival_us, extra_us))
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), acc
 
 
 def _trace_end_time_masked_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, arrival, valid, n_channels, batched):
+        cls, channel, way, parity, arrival, extra, valid, n_channels,
+        batched):
     upd = _trace_step_fn(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,
                          ctrl_us, arb_us, batched)
 
     def step(state, op):
-        k, c, w, par, arr, ok = op
-        new = upd(state, (k, c, w, par, arr))
+        k, c, w, par, arr, ext, ok = op
+        new = upd(state, (k, c, w, par, arr, ext))
         return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state), None
 
-    ops = _trace_ops(cls, channel, way, parity, arrival) + (valid.astype(bool),)
+    ops = _trace_ops(cls, channel, way, parity, arrival, extra) \
+        + (valid.astype(bool),)
     (bus_free, chip_free, _, _), _ = jax.lax.scan(
         step, _trace_scan_init(n_channels), ops)
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
@@ -378,6 +393,7 @@ def trace_end_time_masked(
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
     arrival_us: jax.Array,   # [T]
+    extra_us: jax.Array,     # [T]
     valid: jax.Array,        # [T] bool; False = padding (state no-op)
     n_channels: int,
     batched: bool,
@@ -389,7 +405,8 @@ def trace_end_time_masked(
     ``repro.core.api`` session cache serves repeated queries from."""
     return _trace_end_time_masked_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, arrival_us, valid, n_channels, batched)
+        cls, channel, way, parity, arrival_us, extra_us, valid, n_channels,
+        batched)
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
@@ -406,6 +423,7 @@ def trace_end_time_masked_many(
     way: jax.Array,          # [B, T]
     parity: jax.Array,       # [B, T]
     arrival_us: jax.Array,   # [B, T]
+    extra_us: jax.Array,     # [B, T]
     valid: jax.Array,        # [B, T]
     n_channels: int,
     batched: bool,
@@ -415,10 +433,10 @@ def trace_end_time_masked_many(
     heterogeneous traces padded to a shared length bucket evaluate in
     one vmapped masked fold."""
     return jax.vmap(
-        lambda a, b, c, d, e, v: _trace_end_time_masked_impl(
+        lambda a, b, c, d, e, x, v: _trace_end_time_masked_impl(
             cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
-            arb_us, a, b, c, d, e, v, n_channels, batched)
-    )(cls, channel, way, parity, arrival_us, valid)
+            arb_us, a, b, c, d, e, x, v, n_channels, batched)
+    )(cls, channel, way, parity, arrival_us, extra_us, valid)
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "batched"))
@@ -435,6 +453,7 @@ def trace_completions(
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
     arrival_us: jax.Array,   # [T]
+    extra_us: jax.Array,     # [T]
     n_channels: int,
     batched: bool,
 ) -> tuple[jax.Array, jax.Array]:
@@ -449,12 +468,12 @@ def trace_completions(
 
     def step(state, op):
         new = upd(state, op)
-        _, c, w, _, _ = op
+        _, c, w, _, _, _ = op
         return new, new[1][c, w]                  # chip_free[c, w]
 
     (bus_free, chip_free, _, _), comp = jax.lax.scan(
         step, _trace_scan_init(n_channels),
-        _trace_ops(cls, channel, way, parity, arrival_us))
+        _trace_ops(cls, channel, way, parity, arrival_us, extra_us))
     return jnp.maximum(jnp.max(bus_free), jnp.max(chip_free)), comp
 
 
@@ -472,6 +491,7 @@ def trace_completions_masked(
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
     arrival_us: jax.Array,   # [T]
+    extra_us: jax.Array,     # [T]
     valid: jax.Array,        # [T] bool; False = padding (state no-op)
     n_channels: int,
     batched: bool,
@@ -485,12 +505,12 @@ def trace_completions_masked(
                          ctrl_us, arb_us, batched)
 
     def step(state, op):
-        k, c, w, par, arr, ok = op
-        new = upd(state, (k, c, w, par, arr))
+        k, c, w, par, arr, ext, ok = op
+        new = upd(state, (k, c, w, par, arr, ext))
         new = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state)
         return new, new[1][c, w]                  # chip_free[c, w]
 
-    ops = _trace_ops(cls, channel, way, parity, arrival_us) \
+    ops = _trace_ops(cls, channel, way, parity, arrival_us, extra_us) \
         + (valid.astype(bool),)
     (bus_free, chip_free, _, _), comp = jax.lax.scan(
         step, _trace_scan_init(n_channels), ops)
@@ -512,6 +532,7 @@ def trace_chunk_fold(
     way: jax.Array,          # [L]
     parity: jax.Array,       # [L]
     arrival_us: jax.Array,   # [L]
+    extra_us: jax.Array,     # [L]
     valid: jax.Array,        # [L] bool; False = padding (state no-op)
     bus_free: jax.Array,     # [C]        carried occupancy state
     chip_free: jax.Array,    # [C, MAX_WAYS]
@@ -537,13 +558,13 @@ def trace_chunk_fold(
 
     def step(carry, op):
         state, acc = carry
-        k, c, w, par, arr, ok = op
-        new = upd(state, (k, c, w, par, arr))
+        k, c, w, par, arr, ext, ok = op
+        new = upd(state, (k, c, w, par, arr, ext))
         new = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state)
         acc = acc + jnp.where(ok, e_op_uj[k, par % 2], 0.0)
         return (new, acc), new[1][c, w]           # chip_free[c, w]
 
-    ops = _trace_ops(cls, channel, way, parity, arrival_us) \
+    ops = _trace_ops(cls, channel, way, parity, arrival_us, extra_us) \
         + (valid.astype(bool),)
     init = ((bus_free, chip_free, ctrl_free, round_start), energy_acc)
     (state, acc), comp = jax.lax.scan(step, init, ops)
@@ -577,6 +598,8 @@ def dispatch_trace(
     n_channels: int,
     n_ways: int,
     rule: str = "least_loaded",
+    extra_us: jax.Array | None = None,   # [T] reliability surcharge
+    retired: jax.Array | None = None,    # [C, W] bool bad-block mask
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Joint dispatch + simulate fold (DESIGN.md §2.6): the carried
     occupancy row *drives* the channel/way assignment, one decision per
@@ -601,29 +624,44 @@ def dispatch_trace(
     bandwidth accounting and the oracles replay it exactly.  Dispatch
     is FCFS in trace order under the ``eager`` issue policy (a strict
     ``batched`` round loop has no meaning when rounds are not fixed at
-    build time)."""
+    build time).
+
+    ``extra_us`` extends the op's chip occupancy / completion like the
+    replay engines (DESIGN.md §2.8; never the channel bus or the serial
+    controller); ``retired`` marks bad-block chips
+    the dispatcher must never choose — their horizon is +inf under
+    ``least_loaded`` and they are masked out of ``earliest_ready``'s
+    way choice (each channel must keep >= 1 live way, which the
+    ``FaultSampler`` retirement draw guarantees)."""
     if rule not in DISPATCH_RULES:
         raise ValueError(f"unknown dispatch rule {rule!r} "
                          f"(one of {', '.join(DISPATCH_RULES)})")
     least_loaded = rule == "least_loaded"
+    if extra_us is None:
+        extra_us = jnp.zeros_like(arrival_us, dtype=jnp.float32)
+    if retired is None:
+        retired = jnp.zeros((n_channels, n_ways), bool)
+    retired = jnp.asarray(retired, bool)
+    inf = jnp.asarray(jnp.inf, jnp.float32)
 
     def step(state, op):
         bus_free, chip_free, ctrl_free, counts = state
-        k, arr = op
+        k, arr, ext = op
         if least_loaded:
-            horizon = jnp.maximum(chip_free, bus_free[:, None])
+            horizon = jnp.where(retired, inf,
+                                jnp.maximum(chip_free, bus_free[:, None]))
             flat = jnp.argmin(horizon.reshape(-1))
             c, w = flat // n_ways, flat % n_ways
         else:
             c = jnp.argmin(bus_free)
-            w = jnp.argmin(chip_free[c])
+            w = jnp.argmin(jnp.where(retired[c], inf, chip_free[c]))
         par = counts[c, w] % 2
         ready = jnp.maximum(chip_free[c, w], arr) + cmd_us[k] + pre_us[k]
         start = (jnp.maximum(jnp.maximum(bus_free[c], ready), ctrl_free)
                  + arb_us[k])
         new_bus = start + slot_us[k]
         post = jnp.where(par % 2 == 0, post_lo_us[k], post_hi_us[k])
-        comp = new_bus + post
+        comp = new_bus + post + ext
         state = (bus_free.at[c].set(new_bus),
                  chip_free.at[c, w].set(comp),
                  start + ctrl_us[k],
@@ -636,7 +674,8 @@ def dispatch_trace(
             jnp.asarray(0.0, jnp.float32),
             jnp.zeros((n_channels, n_ways), jnp.int32))
     (bus_free, chip_free, _, _), (comp, chan, way, par) = jax.lax.scan(
-        step, init, (cls.astype(jnp.int32), arrival_us.astype(jnp.float32)))
+        step, init, (cls.astype(jnp.int32), arrival_us.astype(jnp.float32),
+                     extra_us.astype(jnp.float32)))
     end = jnp.maximum(jnp.max(bus_free), jnp.max(chip_free))
     return end, comp, chan, way, par
 
@@ -648,13 +687,13 @@ def dispatch_trace(
 
 def _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, arrival, n_channels, n_ways, batched,
-        segment_len, combine):
+        cls, channel, way, parity, arrival, extra, n_channels, n_ways,
+        batched, segment_len, combine):
     from repro.core import maxplus_form as mf  # deferred: mf imports us
 
     prods = mf.structured_segment_products(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, arrival,
+        cls, channel, way, parity, arrival, extra,
         channels=n_channels, ways=n_ways, batched=batched,
         segment_len=segment_len if segment_len is not None else 1)
     layout = mf.StateLayout(n_channels, n_ways)
@@ -688,6 +727,7 @@ def trace_end_time_prefix(
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
     arrival_us: jax.Array,   # [T]
+    extra_us: jax.Array,     # [T]
     n_channels: int,
     n_ways: int,
     batched: bool,
@@ -713,8 +753,8 @@ def trace_end_time_prefix(
     depth dense form."""
     return _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, arrival_us, n_channels, n_ways, batched,
-        segment_len, combine)
+        cls, channel, way, parity, arrival_us, extra_us, n_channels,
+        n_ways, batched, segment_len, combine)
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "n_ways",
@@ -734,6 +774,7 @@ def trace_end_time_prefix_energy(
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
     arrival_us: jax.Array,   # [T]
+    extra_us: jax.Array,     # [T]
     n_channels: int,
     n_ways: int,
     batched: bool,
@@ -748,8 +789,8 @@ def trace_end_time_prefix_energy(
 
     end = _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
-        cls, channel, way, parity, arrival_us, n_channels, n_ways, batched,
-        segment_len, combine)
+        cls, channel, way, parity, arrival_us, extra_us, n_channels,
+        n_ways, batched, segment_len, combine)
     seg = mf.structured_segment_energy(
         e_op_uj, cls, parity,
         segment_len=segment_len if segment_len is not None else 1)
@@ -772,6 +813,7 @@ def trace_end_time_prefix_batch(
     way: jax.Array,          # [T]
     parity: jax.Array,       # [T]
     arrival_us: jax.Array,   # [T]
+    extra_us: jax.Array,     # [T]
     n_channels: int,
     n_ways: int,
     batched: bool,
@@ -785,8 +827,8 @@ def trace_end_time_prefix_batch(
     batch)."""
     return jax.vmap(
         lambda *t: _trace_end_time_prefix_impl(
-            *t, cls, channel, way, parity, arrival_us, n_channels, n_ways,
-            batched, segment_len, combine)
+            *t, cls, channel, way, parity, arrival_us, extra_us,
+            n_channels, n_ways, batched, segment_len, combine)
     )(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us)
 
 
@@ -849,13 +891,14 @@ def trace_end_time_batch(
     way: jax.Array,
     parity: jax.Array,
     arrival_us: jax.Array,
+    extra_us: jax.Array,
     n_channels: int,
     batched: bool,
 ) -> jax.Array:
     """[B] completion times — the scan engine vmapped over tables."""
     return jax.vmap(
         lambda *t: trace_end_time(
-            *t, cls, channel, way, parity, arrival_us,
+            *t, cls, channel, way, parity, arrival_us, extra_us,
             n_channels=n_channels, batched=batched)
     )(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us)
 
@@ -980,7 +1023,7 @@ def _sweep_scan_jit(
         end = trace_end_time(
             cmd[None], pre[None], slot[None], lo[None], hi[None],
             ctrl[None], zero_k, zeros_i, zeros_i, way, parity, zeros_f,
-            n_channels=1, batched=batched)
+            zeros_f, n_channels=1, batched=batched)
         return (n_pages * nbytes) / end
 
     return jax.vmap(one)(cmd_us, pre_us, slot_us, post_lo_us, post_hi_us,

@@ -28,10 +28,17 @@ def _trace_event_loop(table, trace, policy, per_op=None) -> float:
     ``per_op(k, parity, completion_us)`` after each op's state update
     when given.  Request arrivals (``trace.arrival_us``) lower-bound the
     ready base: an op's command cannot issue before its request arrives
-    (absent/zero arrivals reproduce the back-to-back loop exactly)."""
+    (absent/zero arrivals reproduce the back-to-back loop exactly).
+    The per-op reliability surcharge (``trace.extra_us``, read retries +
+    jitter, DESIGN.md §2.8) extends the op's *chip* occupancy — retries
+    re-run the sense inside the die, so neither the channel bus nor the
+    serial controller is held, and a retry storm only delays its own
+    request and later ops on the same chip (absent/zero extras add
+    +0.0 — exact)."""
     batched = policy_is_batched(policy)   # typos raise, never fall through
     c_count, w_count = trace.channels, trace.ways
     arrival = trace.arrival_us
+    extra = trace.extra_us
     bus_free = [0.0] * c_count
     chip_free = [[0.0] * w_count for _ in range(c_count)]
     ctrl_free = 0.0
@@ -42,6 +49,7 @@ def _trace_event_loop(table, trace, policy, per_op=None) -> float:
         w = int(trace.way[t])
         par = int(trace.parity[t])
         arr = 0.0 if arrival is None else float(arrival[t])
+        ext = 0.0 if extra is None else float(extra[t])
         if w == 0:
             round_start[c] = bus_free[c]
         if batched:
@@ -54,7 +62,7 @@ def _trace_event_loop(table, trace, policy, per_op=None) -> float:
         bus_free[c] = start + table.slot_us[k]
         ctrl_free = start + table.ctrl_us[k]
         post = table.post_lo_us[k] if par % 2 == 0 else table.post_hi_us[k]
-        chip_free[c][w] = bus_free[c] + post
+        chip_free[c][w] = bus_free[c] + post + ext
         if per_op is not None:
             per_op(k, par, chip_free[c][w])
     return float(max(max(bus_free), max(max(row) for row in chip_free)))
@@ -123,7 +131,7 @@ def simulate_trace_matfold_ref(table, trace, policy: str = "eager",
 
     layout = StateLayout(trace.channels, trace.ways)
     combos, idx = trace_combos(trace)
-    if trace.arrival_us is None:
+    if trace.arrival_us is None and trace.extra_us is None:
         mats = combo_matrices(table, combos, layout, policy)
         per_op = [mats[int(m)] for m in idx]
     else:
@@ -141,7 +149,10 @@ def simulate_trace_matfold_ref(table, trace, policy: str = "eager",
                 post_us=float(table.post_lo_us[k] if par == 0
                               else table.post_hi_us[k]),
                 channel=c, way=w, policy=policy,
-                arrival_us=float(trace.arrival_us[t])))
+                arrival_us=(0.0 if trace.arrival_us is None
+                            else float(trace.arrival_us[t])),
+                extra_us=(0.0 if trace.extra_us is None
+                          else float(trace.extra_us[t]))))
     prods = []
     for lo in range(0, trace.n_ops, segment_len):
         p = maxplus_eye(layout.n_state).astype(np.float64)

@@ -59,6 +59,12 @@ class OpTrace:
     ``arrival_us`` carries per-op request arrival times (float32 us;
     None = back-to-back, the pre-request-layer behaviour): every engine
     lower-bounds an op's ready time by its arrival (DESIGN.md §2.6).
+    ``extra_us`` carries per-op additive reliability latency — read
+    retries and jitter sampled outside the fold by ``repro.core.faults``
+    (float32 us; None = fault-free): every engine extends the op's chip
+    occupancy — and hence its completion — by it (DESIGN.md §2.8; the
+    channel bus and serial controller are not extended, because retries
+    re-run the sense inside the die).
 
     Construction validates the geometry indices: an out-of-range
     channel/way used to scatter silently with ``mode="drop"`` semantics
@@ -73,6 +79,7 @@ class OpTrace:
     ways: int
     payload: np.ndarray | None = None      # bool [T]; None = all payload
     arrival_us: np.ndarray | None = None   # float32 [T]; None = all zero
+    extra_us: np.ndarray | None = None     # float32 [T]; None = all zero
 
     def __post_init__(self):
         n = len(self.cls)
@@ -80,7 +87,7 @@ class OpTrace:
             if len(getattr(self, name)) != n:
                 raise ValueError(f"OpTrace.{name} has length "
                                  f"{len(getattr(self, name))}, cls has {n}")
-        for name in ("payload", "arrival_us"):
+        for name in ("payload", "arrival_us", "extra_us"):
             arr = getattr(self, name)
             if arr is not None and len(arr) != n:
                 raise ValueError(f"OpTrace.{name} has length {len(arr)}, "
@@ -99,6 +106,8 @@ class OpTrace:
                     else f"OpTrace.{name} must be non-negative, got {lo}")
         if self.arrival_us is not None and float(np.min(self.arrival_us)) < 0:
             raise ValueError("OpTrace.arrival_us must be non-negative")
+        if self.extra_us is not None and float(np.min(self.extra_us)) < 0:
+            raise ValueError("OpTrace.extra_us must be non-negative")
 
     @property
     def n_ops(self) -> int:
@@ -213,29 +222,76 @@ def mixed_trace(n_ops: int, channels: int, ways: int, read_fraction: float,
     return _finalize(cls, chan, way, channels, ways)
 
 
-def iter_trace_chunks(trace: OpTrace, chunk_len: int):
+def _rewrite_chunk(sampler, cls, channel, way, parity, channels, ways,
+                   payload, arrival) -> OpTrace:
+    """Run one chunk of op arrays through a carried ``FaultSampler`` and
+    pack the rewrite into an ``OpTrace`` (chunked == one-shot because the
+    sampler draws from one PCG64 stream regardless of chunk boundaries,
+    DESIGN.md §2.8)."""
+    if payload is None and sampler.spec.prog_fail_prob > 0.0:
+        # byte conservation needs an explicit mask once remaps can strip
+        # a failed write's credit — mirror sched.apply_faults exactly
+        payload = np.ones(len(cls), bool)
+    c2, ch2, w2, par2, arr2, ext2, pay2, _ = sampler.rewrite(
+        cls, channel, way, parity, arrival=arrival, payload=payload)
+    return OpTrace(
+        cls=np.asarray(c2, np.int32), channel=np.asarray(ch2, np.int32),
+        way=np.asarray(w2, np.int32), parity=np.asarray(par2, np.int32),
+        channels=channels, ways=ways, payload=pay2,
+        arrival_us=(None if arr2 is None
+                    else np.asarray(arr2, np.float32)),
+        extra_us=np.asarray(ext2, np.float32))
+
+
+def iter_trace_chunks(trace: OpTrace, chunk_len: int, *, faults=None,
+                      table: OpClassTable | None = None):
     """Yield ``trace`` as consecutive ``OpTrace`` chunks of at most
     ``chunk_len`` ops — the materialised-trace adapter for the
     constant-memory streaming engine (DESIGN.md §2.7).  Chunks carry the
-    same geometry and slice ``payload``/``arrival_us`` alongside the op
-    arrays, so concatenating them reconstructs the trace exactly."""
+    same geometry and slice ``payload``/``arrival_us``/``extra_us``
+    alongside the op arrays, so concatenating them reconstructs the
+    trace exactly.
+
+    With ``faults`` (a :class:`repro.core.faults.FaultSpec`), each chunk
+    is rewritten through one carried sampler: the concatenated chunks
+    are bit-identical to ``repro.core.sched.apply_faults`` applied to
+    the whole trace (remap inserts may make a chunk longer than
+    ``chunk_len``).  ``table`` is required when the spec charges retries
+    as per-class re-reads (``retry_step_us=None``)."""
     if chunk_len < 1:
         raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+    sampler = None
+    if faults is not None:
+        if trace.extra_us is not None:
+            raise ValueError("trace already carries extra_us; refusing to "
+                             "re-apply faults")
+        from repro.core.faults import FaultSampler
+        sampler = FaultSampler(faults, trace.channels, trace.ways,
+                               table=table)
     for lo in range(0, trace.n_ops, chunk_len):
         hi = min(lo + chunk_len, trace.n_ops)
+        payload = None if trace.payload is None else trace.payload[lo:hi]
+        arrival = (None if trace.arrival_us is None
+                   else trace.arrival_us[lo:hi])
+        if sampler is not None:
+            yield _rewrite_chunk(sampler, trace.cls[lo:hi],
+                                 trace.channel[lo:hi], trace.way[lo:hi],
+                                 trace.parity[lo:hi], trace.channels,
+                                 trace.ways, payload, arrival)
+            continue
         yield OpTrace(
             cls=trace.cls[lo:hi], channel=trace.channel[lo:hi],
             way=trace.way[lo:hi], parity=trace.parity[lo:hi],
             channels=trace.channels, ways=trace.ways,
-            payload=(None if trace.payload is None
-                     else trace.payload[lo:hi]),
-            arrival_us=(None if trace.arrival_us is None
-                        else trace.arrival_us[lo:hi]))
+            payload=payload, arrival_us=arrival,
+            extra_us=(None if trace.extra_us is None
+                      else trace.extra_us[lo:hi]))
 
 
 def mixed_trace_chunks(n_ops: int, channels: int, ways: int,
                        read_fraction: float, *, chunk_len: int = 65536,
-                       seed: int = 0):
+                       seed: int = 0, faults=None,
+                       table: OpClassTable | None = None):
     """Generator twin of :func:`mixed_trace`: yields the *identical* op
     stream (same rng draws, same round-robin placement, same per-chip
     parity) in ``OpTrace`` chunks without ever materialising the whole
@@ -244,21 +300,34 @@ def mixed_trace_chunks(n_ops: int, channels: int, ways: int,
     The PCG64 stream draws doubles sequentially, so chunked ``random``
     calls reproduce the single-shot draw; round-robin placement revisits
     a chip every ``channels * ways`` ops, so the per-chip parity counter
-    of ``_finalize`` closes to ``(t // (channels * ways)) % 2``."""
+    of ``_finalize`` closes to ``(t // (channels * ways)) % 2``.
+
+    With ``faults`` attached, every chunk is additionally rewritten
+    through one carried :class:`repro.core.faults.FaultSampler` — the
+    fault draws come from ``faults.seed``'s own PCG64 streams (disjoint
+    from the op-mix stream above), so the concatenated output is
+    bit-identical to ``apply_faults(mixed_trace(...), faults, table)``."""
     if chunk_len < 1:
         raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
     rng = np.random.default_rng(seed)
+    sampler = None
+    if faults is not None:
+        from repro.core.faults import FaultSampler
+        sampler = FaultSampler(faults, channels, ways, table=table)
     period = channels * ways
     for lo in range(0, n_ops, chunk_len):
         hi = min(lo + chunk_len, n_ops)
         t = np.arange(lo, hi)
         cls = np.where(rng.random(hi - lo) < read_fraction, READ, WRITE)
-        yield OpTrace(
-            cls=cls.astype(np.int32),
-            channel=(t % channels).astype(np.int32),
-            way=((t // channels) % ways).astype(np.int32),
-            parity=((t // period) % 2).astype(np.int32),
-            channels=channels, ways=ways)
+        chan = (t % channels).astype(np.int32)
+        way = ((t // channels) % ways).astype(np.int32)
+        par = ((t // period) % 2).astype(np.int32)
+        if sampler is not None:
+            yield _rewrite_chunk(sampler, cls.astype(np.int32), chan, way,
+                                 par, channels, ways, None, None)
+            continue
+        yield OpTrace(cls=cls.astype(np.int32), channel=chan, way=way,
+                      parity=par, channels=channels, ways=ways)
 
 
 def hot_cold_trace(n_ops: int, channels: int, ways: int,
@@ -293,17 +362,20 @@ def checkpoint_trace(nbytes: int, cfg: SSDConfig,
 
 
 def datapipe_trace(nbytes: int, cfg: SSDConfig, hedge_fraction: float = 0.0,
-                   seed: int = 0, max_ops: int = 4096) -> OpTrace:
+                   seed: int = 0, max_ops: int = 4096,
+                   hedge_after_us: float = 0.0) -> OpTrace:
     """Data-pipeline refill: way-interleaved shard reads; a
-    ``hedge_fraction`` of reads is re-issued on the next channel
-    (straggler hedging duplicates traffic, it does not replace it).
-    Request stream from ``repro.core.workload.datapipe_requests``
-    lowered by ``stripe`` (regression-pinned)."""
+    ``hedge_fraction`` of reads is re-issued on the next channel after
+    ``hedge_after_us`` (straggler hedging duplicates traffic, it does
+    not replace it).  Request stream from
+    ``repro.core.workload.datapipe_requests`` lowered by ``stripe``
+    (regression-pinned at ``hedge_after_us=0``)."""
     from repro.core import sched, workload
     return sched.lower_static(
         workload.datapipe_requests(nbytes, cfg,
                                    hedge_fraction=hedge_fraction,
-                                   seed=seed, max_ops=max_ops),
+                                   seed=seed, max_ops=max_ops,
+                                   hedge_after_us=hedge_after_us),
         cfg.channels, cfg.ways).trace
 
 

@@ -44,6 +44,10 @@ class RequestStream:
 
     ``payload`` marks requests that deliver user bytes (False = hedged
     duplicates: they occupy resources but the first response wins).
+    ``hedge_of`` links each hedged duplicate to its primary request
+    (-1 = not a hedge): the static lowering mirrors the primary's
+    placement and the query layer resolves first-response-wins latency
+    through it (None = no hedges, or legacy adjacent-duplicate streams).
     ``stream`` is the issuing client/tenant id — latency percentiles
     can be split per tenant after simulation."""
 
@@ -52,6 +56,7 @@ class RequestStream:
     n_pages: np.ndarray             # int32 [R], >= 1
     stream: np.ndarray              # int32 [R]
     payload: np.ndarray | None = None   # bool [R]; None = all payload
+    hedge_of: np.ndarray | None = None  # int32 [R]; -1 = not a hedge
 
     def __post_init__(self):
         r = len(self.arrival_us)
@@ -60,8 +65,10 @@ class RequestStream:
                 raise ValueError(f"RequestStream.{name} has length "
                                  f"{len(getattr(self, name))}, "
                                  f"arrival_us has {r}")
-        if self.payload is not None and len(self.payload) != r:
-            raise ValueError("RequestStream.payload length mismatch")
+        for name in ("payload", "hedge_of"):
+            arr = getattr(self, name)
+            if arr is not None and len(arr) != r:
+                raise ValueError(f"RequestStream.{name} length mismatch")
         if r == 0:
             return
         if float(np.min(self.arrival_us)) < 0:
@@ -73,6 +80,25 @@ class RequestStream:
             raise ValueError("n_pages must be >= 1")
         if int(np.min(self.op_cls)) < 0:
             raise ValueError("op_cls must be non-negative")
+        if self.hedge_of is not None:
+            h = np.asarray(self.hedge_of, np.int64)
+            bad = (h < -1) | (h >= r) | (h == np.arange(r))
+            if bad.any():
+                raise ValueError(
+                    "hedge_of entries must be -1 or another request index")
+            linked = h >= 0
+            if linked.any():
+                n_pages = np.asarray(self.n_pages, np.int64)
+                if np.any(n_pages[linked] != n_pages[h[linked]]):
+                    raise ValueError(
+                        "a hedge duplicate must match its primary's "
+                        "n_pages (it mirrors the primary op-for-op)")
+
+    def hedge_mask(self) -> np.ndarray:
+        """[R] True where the request is a linked hedge duplicate."""
+        if self.hedge_of is None:
+            return np.zeros(self.n_requests, bool)
+        return np.asarray(self.hedge_of, np.int64) >= 0
 
     @property
     def n_requests(self) -> int:
@@ -175,13 +201,29 @@ def multi_tenant(streams) -> RequestStream:
     """Merge streams into one arrival-ordered workload.  Stream ids are
     re-tagged by position so per-tenant latency splits stay unambiguous
     even when inputs share an id.  Merge is stable: equal arrivals keep
-    the input order (earlier stream first)."""
+    the input order (earlier stream first).  ``hedge_of`` links are
+    remapped through the merge permutation (they never cross streams)."""
     streams = list(streams)
     if not streams:
         raise ValueError("multi_tenant needs at least one stream")
     arrival = np.concatenate([s.arrival_us for s in streams])
     order = np.argsort(arrival, kind="stable")
     cat = lambda xs: np.concatenate(xs)[order]  # noqa: E731
+    hedge_of = None
+    if any(s.hedge_of is not None for s in streams):
+        # local primary index -> global pre-sort index -> post-sort index
+        offsets = np.cumsum([0] + [s.n_requests for s in streams])
+        h_g = np.concatenate([
+            np.where(np.asarray(s.hedge_of, np.int64) >= 0,
+                     np.asarray(s.hedge_of, np.int64) + off, -1)
+            if s.hedge_of is not None
+            else np.full(s.n_requests, -1, np.int64)
+            for s, off in zip(streams, offsets)])
+        inv = np.empty(len(order), np.int64)
+        inv[order] = np.arange(len(order))
+        h_s = h_g[order]
+        hedge_of = np.where(h_s >= 0, inv[np.clip(h_s, 0, None)],
+                            -1).astype(np.int32)
     return RequestStream(
         arrival_us=np.asarray(arrival, np.float32)[order],
         op_cls=cat([s.op_cls for s in streams]),
@@ -189,7 +231,57 @@ def multi_tenant(streams) -> RequestStream:
         stream=cat([np.full(s.n_requests, i, np.int32)
                     for i, s in enumerate(streams)]),
         payload=(None if all(s.payload is None for s in streams)
-                 else cat([s.payload_mask() for s in streams])))
+                 else cat([s.payload_mask() for s in streams])),
+        hedge_of=hedge_of)
+
+
+def with_hedges(stream: RequestStream, fraction: float,
+                after_us: float = 0.0, seed: int = 0) -> RequestStream:
+    """Hedge a fraction of payload reads: each selected request gets a
+    non-payload duplicate (``hedge_of`` = its primary) arriving
+    ``after_us`` later — the straggler-mitigation knob of DESIGN.md
+    §2.8.  First response wins, so the duplicate delivers no new bytes;
+    the query layer takes the min over {primary, duplicate} completion.
+    ``after_us=0`` inserts each duplicate right after its primary,
+    reproducing the legacy adjacent-duplicate layout bit-for-bit."""
+    if fraction <= 0.0 or stream.n_requests == 0:
+        return stream
+    r = stream.n_requests
+    rng = np.random.default_rng(seed)
+    draw = rng.random(r)
+    hedged = ((draw < fraction) & (np.asarray(stream.op_cls) == READ)
+              & stream.payload_mask() & ~stream.hedge_mask())
+    if not hedged.any():
+        return stream
+    reps = 1 + hedged.astype(np.int64)
+    new_of_old = np.cumsum(reps) - reps             # old idx -> new idx
+    r2 = int(reps.sum())
+    src = np.repeat(np.arange(r), reps)             # source request/slot
+    is_dup = np.zeros(r2, bool)
+    is_dup[new_of_old[hedged] + 1] = True
+    arrival = np.asarray(stream.arrival_us, np.float64)[src]
+    arrival[is_dup] += float(after_us)
+    hedge_of = np.where(is_dup, new_of_old[src], -1)
+    if stream.hedge_of is not None:                 # carry existing links
+        old = np.asarray(stream.hedge_of, np.int64)[src]
+        hedge_of = np.where(~is_dup & (old >= 0),
+                            new_of_old[np.clip(old, 0, None)], hedge_of)
+    payload = np.asarray(stream.payload_mask())[src] & ~is_dup
+    # restore arrival order (after_us can push a duplicate past later
+    # arrivals); the stable sort keeps a zero-offset duplicate glued
+    # right after its primary, and hedge_of rides the permutation
+    order = np.argsort(arrival, kind="stable")
+    inv = np.empty(r2, np.int64)
+    inv[order] = np.arange(r2)
+    h_s = hedge_of[order]
+    return RequestStream(
+        arrival_us=arrival[order].astype(np.float32),
+        op_cls=np.asarray(stream.op_cls, np.int32)[src][order],
+        n_pages=np.asarray(stream.n_pages, np.int32)[src][order],
+        stream=np.asarray(stream.stream, np.int32)[src][order],
+        payload=None if payload.all() else payload[order],
+        hedge_of=np.where(h_s >= 0, inv[np.clip(h_s, 0, None)],
+                          -1).astype(np.int32))
 
 
 def request_ops(stream: RequestStream
@@ -232,20 +324,19 @@ def checkpoint_requests(nbytes: int, cfg: SSDConfig,
 
 def datapipe_requests(nbytes: int, cfg: SSDConfig,
                       hedge_fraction: float = 0.0, seed: int = 0,
-                      max_ops: int = 4096) -> RequestStream:
+                      max_ops: int = 4096,
+                      hedge_after_us: float = 0.0) -> RequestStream:
     """Data-pipeline refill: one read request per page; a
-    ``hedge_fraction`` of reads is followed by a non-payload duplicate
+    ``hedge_fraction`` of reads gets a non-payload duplicate
     (straggler hedging — first response wins, so the duplicate delivers
     no new bytes and the static lowering mirrors its primary's
-    placement shifted one channel)."""
+    placement shifted one channel).  ``hedge_after_us`` delays each
+    duplicate's arrival past its primary's (0 = fire together, the
+    legacy layout bit-for-bit — see ``with_hedges``)."""
     n = _bucket(_pages(nbytes, nand_chip(cfg.cell).page_data_bytes), max_ops)
-    rng = np.random.default_rng(seed)
-    hedged = rng.random(n) < hedge_fraction
-    payload = np.ones(n + int(hedged.sum()), bool)
-    payload[np.cumsum(1 + hedged.astype(np.int64)) [hedged] - 1] = False
-    t = len(payload)
-    return _stream(np.zeros(t), np.full(t, READ), 1, 0,
-                   payload=None if payload.all() else payload)
+    base = _stream(np.zeros(n), np.full(n, READ), 1, 0)
+    return with_hedges(base, hedge_fraction, after_us=hedge_after_us,
+                       seed=seed)
 
 
 def kvoffload_requests(read_bytes_per_token: int, cfg: SSDConfig,

@@ -50,32 +50,43 @@ def _kernel_periodic(mats_ref, s0_ref, out_ref, *, t_steps: int, period: int):
         s0_ref[...])
 
 
-def _arrival_step(mats, g, arr, i, t, s):
-    """One trace-indexed step with the arrival max-in: the (max,+)
-    matvec, then s' = max(A_i ⊗ s, g[i] + arrival[t]) — the augmented
-    origin-column contribution of DESIGN.md §2.6 (s[origin] = 0, so the
-    per-op arrival never needs its own matrix in the dictionary).  Zero
-    arrivals are the identity of the extra max: A_i already bakes the
-    zero-arrival origin column."""
+def _arrival_step(mats, g, arr, w, ext, i, t, s):
+    """One trace-indexed step with the arrival max-in and the fault
+    surcharge: the (max,+) matvec, then
+    ``s' = max(A_i ⊗ s, g[i] + arrival[t]) + w[i] * extra[t]`` — the
+    augmented origin-column contribution of DESIGN.md §2.6 plus the
+    written-rows shift of §2.8 (read-retry/jitter latency extends the
+    op's chip occupancy; the bus and serial-ctrl rows are never
+    extended).  Zero arrivals are
+    the identity of the extra max (A_i already bakes the zero-arrival
+    origin column); zero extras add +0.0 to every row — exact, NEG
+    included — so fault-free traces stay bit-identical."""
     s = _maxplus_step(mats, i, s)
     gt = jax.lax.dynamic_index_in_dim(g, i, 0, keepdims=False)   # [N, BL]
     at = jax.lax.dynamic_index_in_dim(arr, t, 0, keepdims=False)  # [1]
-    return jnp.maximum(s, gt + at)
+    s = jnp.maximum(s, gt + at)
+    wt = jax.lax.dynamic_index_in_dim(w, i, 0, keepdims=False)   # [N, BL]
+    et = jax.lax.dynamic_index_in_dim(ext, t, 0, keepdims=False)  # [1]
+    return s + wt * et
 
 
-def _kernel_indexed(idx_ref, mats_ref, g_ref, arr_ref, s0_ref, out_ref, *,
-                    t_steps: int):
+def _kernel_indexed(idx_ref, mats_ref, g_ref, arr_ref, w_ref, ext_ref,
+                    s0_ref, out_ref, *, t_steps: int):
     """Heterogeneous trace: gather A[idx[t]] per step.  ``idx_ref`` is the
     scalar-prefetch operand — it lives in SMEM and is available before
     the body runs, so the dynamic gather index is a scalar load.
-    ``g_ref`` [M, N, BL] holds the per-combo origin-column templates and
-    ``arr_ref`` [T, 1] the per-op arrivals (see ``_arrival_step``)."""
+    ``g_ref`` [M, N, BL] holds the per-combo origin-column templates,
+    ``arr_ref`` [T, 1] the per-op arrivals, ``w_ref`` [M, N, BL] the
+    per-combo written-rows masks and ``ext_ref`` [T, 1] the per-op
+    fault surcharges (see ``_arrival_step``)."""
     mats = mats_ref[...]          # [M, N, N, BL]
     g = g_ref[...]                # [M, N, BL]
     arr = arr_ref[...]            # [T, 1]
+    w = w_ref[...]                # [M, N, BL]
+    ext = ext_ref[...]            # [T, 1]
     out_ref[...] = jax.lax.fori_loop(
         0, t_steps,
-        lambda t, s: _arrival_step(mats, g, arr, idx_ref[t], t, s),
+        lambda t, s: _arrival_step(mats, g, arr, w, ext, idx_ref[t], t, s),
         s0_ref[...])
 
 
@@ -98,26 +109,30 @@ def _kernel_periodic_energy(mats_ref, e_ref, s0_ref, out_ref, acc_ref, *,
     acc_ref[...] = acc
 
 
-def _kernel_indexed_energy(idx_ref, mats_ref, g_ref, arr_ref, e_ref, s0_ref,
-                           out_ref, acc_ref, *, t_steps: int):
+def _kernel_indexed_energy(idx_ref, mats_ref, g_ref, arr_ref, w_ref, ext_ref,
+                           e_ref, s0_ref, out_ref, acc_ref, *, t_steps: int):
     """Trace-indexed fold accumulating ``E[idx[t]]`` next to the (max,+)
-    matvec — matrix, origin-template and energy gathers all share the
-    same SMEM scalar index."""
+    matvec — matrix, origin-template, written-rows and energy gathers
+    all share the same SMEM scalar index."""
     mats = mats_ref[...]          # [M, N, N, BL]
     g = g_ref[...]                # [M, N, BL]
     arr = arr_ref[...]            # [T, 1]
+    w = w_ref[...]                # [M, N, BL]
+    ext = ext_ref[...]            # [T, 1]
     energy = e_ref[...]           # [M, NP, BL]
     s, acc = jax.lax.fori_loop(
         0, t_steps,
-        lambda t, c: (_arrival_step(mats, g, arr, idx_ref[t], t, c[0]),
+        lambda t, c: (_arrival_step(mats, g, arr, w, ext, idx_ref[t], t,
+                                    c[0]),
                       _energy_step(energy, idx_ref[t], c[1])),
         (s0_ref[...], jnp.zeros(acc_ref.shape, acc_ref.dtype)))
     out_ref[...] = s
     acc_ref[...] = acc
 
 
-def _kernel_fused(nsteps_ref, mats_ref, g_ref, idx_ref, arr_ref, s0_ref,
-                  out_ref, *, gather: bool, with_arrivals: bool):
+def _kernel_fused(nsteps_ref, mats_ref, g_ref, w_ref, idx_ref, arr_ref,
+                  ext_ref, s0_ref, out_ref, *, gather: bool,
+                  with_arrivals: bool, with_faults: bool):
     """Fused many-trace megakernel: lanes are whole *traces* (one design
     point), not design points of one trace.  Every lane folds its own
     op-class sequence ``idx[:, lane]`` against the one shared matrix
@@ -130,9 +145,14 @@ def _kernel_fused(nsteps_ref, mats_ref, g_ref, idx_ref, arr_ref, s0_ref,
       gathers do not lower).  Both are *exact*: the one-hot contraction
       reproduces the gathered matrix bit-for-bit because its products
       are 1·x and 0·x = ±0.0 and x + (-0.0) = x;
-    * index M (the appended (max,+) identity with a NEG origin template
-      and zero arrival) is the padding op: shorter lanes run it past
-      their own length as an exact state no-op, so no masking is needed;
+    * index M (the appended (max,+) identity with a NEG origin template,
+      a zero written-rows mask and zero arrival/extra) is the padding
+      op: shorter lanes run it past their own length as an exact state
+      no-op, so no masking is needed;
+    * ``with_faults`` gates the per-op fault-surcharge shift
+      ``s += w[idx[t]] * extra[t]`` on the written rows (DESIGN.md
+      §2.8); fault-free fleets skip the ops entirely, and zero extras
+      are exact (+0.0) when only some lanes carry faults;
     * ``nsteps_ref`` (SMEM scalar prefetch, one entry per lane block)
       bounds the fold at the longest lane *in this block* — lanes sorted
       longest-first mean short-trace blocks exit early instead of
@@ -140,8 +160,10 @@ def _kernel_fused(nsteps_ref, mats_ref, g_ref, idx_ref, arr_ref, s0_ref,
     """
     mats = mats_ref[...]          # [M1, N, N] shared dictionary
     g = g_ref[...]                # [M1, N] origin templates (NEG at M)
+    w = w_ref[...]                # [M1, N] written-rows masks (0 at M)
     idx = idx_ref[...]            # [T, BL] per-lane op-class sequence
     arr = arr_ref[...]            # [T, BL] per-lane arrivals (0 padded)
+    ext = ext_ref[...]            # [T, BL] per-lane surcharges (0 padded)
     m1, n, _ = mats.shape
     bl = idx.shape[-1]
     t_steps = nsteps_ref[pl.program_id(0)]
@@ -151,19 +173,26 @@ def _kernel_fused(nsteps_ref, mats_ref, g_ref, idx_ref, arr_ref, s0_ref,
         # the layout the matvec consumes, so the only transposes are one
         # on entry and one on exit.  Folding past t_steps up to the next
         # unroll multiple is exact (padding op = (max,+) identity, NEG
-        # origin template), so the loop body unrolls to amortise the
-        # interpret-mode per-iteration dispatch.
+        # origin template, zero written rows), so the loop body unrolls
+        # to amortise the interpret-mode per-iteration dispatch.
         unroll = 4
 
         def step(t, s):
             it = jax.lax.dynamic_index_in_dim(idx, t, 0, keepdims=False)
             a = jnp.take(mats, it, axis=0)                    # [BL, N, N]
             s2 = jnp.max(a + s[:, None, :], axis=2)
-            if not with_arrivals:  # all-zero arrivals are dominated by
-                return s2          # the baked origin column: skip the ops
-            gt = jnp.take(g, it, axis=0)                      # [BL, N]
-            at = jax.lax.dynamic_index_in_dim(arr, t, 0, keepdims=False)
-            return jnp.maximum(s2, gt + at[:, None])
+            if with_arrivals:  # all-zero arrivals are dominated by the
+                # baked origin column: skip the ops when absent
+                gt = jnp.take(g, it, axis=0)                  # [BL, N]
+                at = jax.lax.dynamic_index_in_dim(arr, t, 0,
+                                                  keepdims=False)
+                s2 = jnp.maximum(s2, gt + at[:, None])
+            if with_faults:
+                wt = jnp.take(w, it, axis=0)                  # [BL, N]
+                et = jax.lax.dynamic_index_in_dim(ext, t, 0,
+                                                  keepdims=False)
+                s2 = s2 + wt * et[:, None]
+            return s2
 
         def block(k, s):
             for u in range(unroll):
@@ -191,11 +220,15 @@ def _kernel_fused(nsteps_ref, mats_ref, g_ref, idx_ref, arr_ref, s0_ref,
         it = jax.lax.dynamic_index_in_dim(idx, t, 0, keepdims=False)  # [BL]
         a = select(flat, it).reshape(n, n, bl)
         s2 = jnp.max(a + s[None, :, :], axis=1)
-        if not with_arrivals:
-            return s2
-        gt = select(g, it)                                            # [N, BL]
-        at = jax.lax.dynamic_index_in_dim(arr, t, 0, keepdims=False)  # [BL]
-        return jnp.maximum(s2, gt + at[None, :])
+        if with_arrivals:
+            gt = select(g, it)                                        # [N, BL]
+            at = jax.lax.dynamic_index_in_dim(arr, t, 0, keepdims=False)
+            s2 = jnp.maximum(s2, gt + at[None, :])
+        if with_faults:
+            wt = select(w, it)                                        # [N, BL]
+            et = jax.lax.dynamic_index_in_dim(ext, t, 0, keepdims=False)
+            s2 = s2 + wt * et[None, :]
+        return s2
 
     out_ref[...] = jax.lax.fori_loop(0, t_steps, step, s0_ref[...])
 
@@ -210,6 +243,8 @@ def maxplus_fold_many_kernel(
     s0: jax.Array,        # [N] shared initial state
     lengths: jax.Array,   # [B] int32 true op count per lane
     *,
+    extras: jax.Array | None = None,  # [B, T] per-lane fault surcharges
+    wvec: jax.Array | None = None,    # [M+1, N] written-rows, 0 row at M
     block_lanes: int = 128,
     interpret: bool = True,
     with_arrivals: bool = True,
@@ -217,19 +252,28 @@ def maxplus_fold_many_kernel(
     """Folded states [B, N] for B independent traces in one launch (see
     ``_kernel_fused``).  Lanes should arrive sorted longest-first so the
     per-block fold bound ``max(lengths[block])`` tracks each block's own
-    longest lane."""
+    longest lane.  ``extras`` (with its ``wvec`` written-rows mask)
+    carries per-op reliability surcharges; omitted, the fault shift is
+    compiled out and fault-free fleets are untouched."""
     m1, n, _ = mats.shape
     b, t = idx.shape
+    with_faults = extras is not None
+    if extras is None:
+        extras = jnp.zeros((b, t), jnp.float32)
+    if wvec is None:
+        wvec = jnp.zeros((m1, n), jnp.float32)
     tpad = (-t) % 4   # the unrolled fold may read past t_steps up to the
     if tpad:          # next multiple of 4 — pad time with the identity op
         idx = jnp.pad(idx, ((0, 0), (0, tpad)), constant_values=m1 - 1)
         arrivals = jnp.pad(arrivals, ((0, 0), (0, tpad)))
+        extras = jnp.pad(extras, ((0, 0), (0, tpad)))
         t += tpad
     bl = min(block_lanes, b)
     pad = (-b) % bl
     if pad:
         idx = jnp.pad(idx, ((0, pad), (0, 0)), constant_values=m1 - 1)
         arrivals = jnp.pad(arrivals, ((0, pad), (0, 0)))
+        extras = jnp.pad(extras, ((0, pad), (0, 0)))
         lengths = jnp.pad(lengths, (0, pad))
     bp = b + pad
     nsteps = jnp.max(lengths.reshape(bp // bl, bl), axis=1).astype(jnp.int32)
@@ -242,19 +286,23 @@ def maxplus_fold_many_kernel(
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1, grid=(bp // bl,),
-        in_specs=[whole((m1, n, n)), whole((m1, n)),
-                  tile((t, bl)), tile((t, bl)), tile((n, bl))],
+        in_specs=[whole((m1, n, n)), whole((m1, n)), whole((m1, n)),
+                  tile((t, bl)), tile((t, bl)), tile((t, bl)),
+                  tile((n, bl))],
         out_specs=tile((n, bl)))
     out = pl.pallas_call(
         functools.partial(_kernel_fused, gather=interpret,
-                          with_arrivals=with_arrivals),
+                          with_arrivals=with_arrivals,
+                          with_faults=with_faults),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, bp), jnp.float32),
         interpret=interpret)(
             nsteps,
             mats.astype(jnp.float32), gvec.astype(jnp.float32),
+            wvec.astype(jnp.float32),
             jnp.moveaxis(idx.astype(jnp.int32), 0, -1),
             jnp.moveaxis(arrivals.astype(jnp.float32), 0, -1),
+            jnp.moveaxis(extras.astype(jnp.float32), 0, -1),
             jnp.broadcast_to(s0.astype(jnp.float32)[:, None], (n, bp)))
     return jnp.moveaxis(out, -1, 0)[:b]
 
@@ -272,6 +320,8 @@ def maxplus_fold_kernel(
     energy: jax.Array | None = None,  # [B, M, P] per-op phase energies (uJ)
     arrivals: jax.Array | None = None,  # [t_steps] per-op request arrivals
     gvec: jax.Array | None = None,      # [B, M, N] origin-column templates
+    extras: jax.Array | None = None,    # [t_steps] per-op fault surcharges
+    wvec: jax.Array | None = None,      # [B, M, N] written-rows masks
     block_lanes: int = 128,
     interpret: bool = True,
 ) -> jax.Array | tuple[jax.Array, jax.Array]:
@@ -284,12 +334,15 @@ def maxplus_fold_kernel(
     arrival times: each step additionally maxes ``gvec[idx[t]] +
     arrivals[t]`` into the state — the augmented origin-column form of
     DESIGN.md §2.6, keeping the matrix dictionary per-combo instead of
-    per-op.  Omitted, they default to identity values (zero arrivals /
-    NEG templates)."""
+    per-op.  ``extras``/``wvec`` carry per-op reliability surcharges
+    shifting each op's written rows after the max-in (DESIGN.md §2.8).
+    Omitted, they default to identity values (zero arrivals / NEG
+    templates / zero extras / zero masks)."""
     b, m, n, _ = mats.shape
-    if (arrivals is not None or gvec is not None) and idx is None:
-        raise ValueError("arrivals/gvec need the trace-indexed path "
-                         "(pass idx)")
+    if (arrivals is not None or gvec is not None or extras is not None
+            or wvec is not None) and idx is None:
+        raise ValueError("arrivals/gvec/extras/wvec need the trace-indexed "
+                         "path (pass idx)")
     bl = min(block_lanes, b)
     pad = (-b) % bl
     if pad:
@@ -299,6 +352,8 @@ def maxplus_fold_kernel(
             energy = jnp.pad(energy, ((0, pad), (0, 0), (0, 0)))
         if gvec is not None:
             gvec = jnp.pad(gvec, ((0, pad), (0, 0), (0, 0)))
+        if wvec is not None:
+            wvec = jnp.pad(wvec, ((0, pad), (0, 0), (0, 0)))
     bp = mats.shape[0]
     mats_l = jnp.moveaxis(mats, 0, -1)   # [M, N, N, B]
     s0_l = jnp.moveaxis(s0, 0, -1)       # [N, B]
@@ -324,16 +379,24 @@ def maxplus_fold_kernel(
     in_specs = [spec((m, n, n, bl))]
     operands = [mats_l]
     if idx is not None:
-        # the arrival max-in runs unconditionally on the indexed path —
-        # identity defaults keep zero-arrival traces bit-identical
+        # the arrival max-in and fault shift run unconditionally on the
+        # indexed path — identity defaults keep zero-arrival/zero-fault
+        # traces bit-identical
         if gvec is None:
             g_l = jnp.full((m, n, bp), NEG, jnp.float32)
         else:
             g_l = jnp.moveaxis(gvec, 0, -1)            # [M, N, B]
         arr2d = (jnp.zeros((t_steps, 1), jnp.float32) if arrivals is None
                  else arrivals.astype(jnp.float32).reshape(t_steps, 1))
-        in_specs += [spec((m, n, bl)), spec_whole((t_steps, 1))]
-        operands += [g_l, arr2d]
+        if wvec is None:
+            w_l = jnp.zeros((m, n, bp), jnp.float32)
+        else:
+            w_l = jnp.moveaxis(wvec, 0, -1)            # [M, N, B]
+        ext2d = (jnp.zeros((t_steps, 1), jnp.float32) if extras is None
+                 else extras.astype(jnp.float32).reshape(t_steps, 1))
+        in_specs += [spec((m, n, bl)), spec_whole((t_steps, 1)),
+                     spec((m, n, bl)), spec_whole((t_steps, 1))]
+        operands += [g_l, arr2d, w_l, ext2d]
     if energy is not None:
         in_specs.append(spec((m, np_, bl)))
         operands.append(e_l)

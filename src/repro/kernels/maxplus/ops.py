@@ -36,9 +36,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.maxplus_form import (NEG, StateLayout, combo_arrival_offsets,
-                                     combo_matrices, end_time_from_state,
-                                     init_state, maxplus_eye,
-                                     maxplus_fold_segmented,
+                                     combo_matrices, combo_written_rows,
+                                     end_time_from_state, init_state,
+                                     maxplus_eye, maxplus_fold_segmented,
                                      periodic_fold_squaring, trace_combos,
                                      transition_matrices)
 from repro.core.sim import PageOpParams
@@ -47,33 +47,51 @@ from repro.kernels.maxplus.kernel import (maxplus_fold_kernel,
 from repro.kernels.maxplus.ref import maxplus_fold_ref
 
 
-def _augment_arrivals(mats, gvec, idx, arrivals):
+def _augment_arrivals(mats, gvec, idx, arrivals, wvec=None, extras=None):
     """[B, T, N, N] per-op matrices with the arrival origin column maxed
-    in — the dense expansion the segmented strategy folds when a trace
-    carries arrivals (the sequential kernel keeps the compact per-combo
-    dictionary and maxes ``gvec[idx[t]] + arrivals[t]`` per step
-    instead).  The origin row is the last layout row by construction."""
+    in and the fault surcharge added to the written rows — the dense
+    expansion the segmented strategy folds when a trace carries arrivals
+    or per-op extras (the sequential kernel keeps the compact per-combo
+    dictionary and applies ``gvec[idx[t]] + arrivals[t]`` /
+    ``wvec[idx[t]] * extras[t]`` per step instead).  The origin row is
+    the last layout row by construction.  Adding ``extras[t]`` uniformly
+    across a written row commutes bit-exactly with the row max (rounding
+    is monotone), so the dense form reproduces the per-step one."""
     per = jnp.take(mats, idx, axis=1)                       # [B, T, N, N]
-    cand = jnp.take(gvec, idx, axis=1) + arrivals[None, :, None]
-    return per.at[..., -1].set(jnp.maximum(per[..., -1], cand))
+    if arrivals is not None:
+        cand = jnp.take(gvec, idx, axis=1) + arrivals[None, :, None]
+        per = per.at[..., -1].set(jnp.maximum(per[..., -1], cand))
+    if extras is not None:
+        shift = jnp.take(wvec, idx, axis=1) * extras[None, :, None]
+        per = per + shift[..., None]                        # all columns
+    return per
 
 
 def maxplus_fold(mats, s0, *, t_steps: int, idx=None, use_kernel: bool = True,
                  interpret: bool | None = None, strategy: str = "sequential",
-                 segment_len: int = 64, arrivals=None, gvec=None):
+                 segment_len: int = 64, arrivals=None, gvec=None,
+                 extras=None, wvec=None):
     """Fold dispatch: ``strategy`` picks the evaluation shape (see module
     docstring); ``use_kernel=False`` runs the jnp sequential reference.
-    ``arrivals`` [T] + ``gvec`` [B, M, N] make the fold arrival-aware
-    (trace-indexed path only; DESIGN.md §2.6)."""
-    if arrivals is not None and idx is None:
-        raise ValueError("arrivals need the trace-indexed path (pass idx)")
+    ``arrivals`` [T] + ``gvec`` [B, M, N] make the fold arrival-aware;
+    ``extras`` [T] + ``wvec`` [B, M, N] add per-op reliability
+    surcharges on the written rows (trace-indexed path only; DESIGN.md
+    §2.6 / §2.8)."""
+    if (arrivals is not None or extras is not None) and idx is None:
+        raise ValueError("arrivals/extras need the trace-indexed path "
+                         "(pass idx)")
     if strategy == "segmented":
         if idx is None:
             idx = jnp.arange(t_steps, dtype=jnp.int32) % mats.shape[-3]
         idx = idx[:t_steps]
-        if arrivals is not None:
-            mats = _augment_arrivals(mats, gvec, idx,
-                                     jnp.asarray(arrivals, jnp.float32))
+        if arrivals is not None or extras is not None:
+            mats = _augment_arrivals(
+                mats, gvec, idx,
+                None if arrivals is None else jnp.asarray(arrivals,
+                                                          jnp.float32),
+                wvec,
+                None if extras is None else jnp.asarray(extras,
+                                                        jnp.float32))
             idx = jnp.arange(t_steps, dtype=jnp.int32)
         return maxplus_fold_segmented(mats, idx, s0,
                                       segment_len=segment_len)
@@ -93,9 +111,11 @@ def maxplus_fold(mats, s0, *, t_steps: int, idx=None, use_kernel: bool = True,
     if use_kernel:
         return maxplus_fold_kernel(mats, s0, t_steps=t_steps, idx=idx,
                                    arrivals=arrivals, gvec=gvec,
+                                   extras=extras, wvec=wvec,
                                    interpret=interpret)
     return maxplus_fold_ref(mats, s0, t_steps=t_steps, idx=idx,
-                            arrivals=arrivals, gvec=gvec)
+                            arrivals=arrivals, gvec=gvec,
+                            extras=extras, wvec=wvec)
 
 
 def channel_end_time_maxplus(
@@ -127,11 +147,14 @@ def bandwidth_maxplus_mb_s(ops, ways, *, n_pages: int = 512,
 
 
 def _combo_setup(tables, trace, policy):
-    """(layout, combos, idx, mats [B,M,N,N], s0 [B,N], arrivals, gvec)
-    shared by the trace-indexed end-time and energy entry points.
-    ``arrivals``/``gvec`` are None for back-to-back traces; an
+    """(layout, combos, idx, mats [B,M,N,N], s0 [B,N], arrivals, gvec,
+    extras, wvec) shared by the trace-indexed end-time and energy entry
+    points.  ``arrivals``/``gvec`` are None for back-to-back traces; an
     arrival-aware trace additionally gets the per-combo origin-column
-    templates of ``combo_arrival_offsets`` (DESIGN.md §2.6)."""
+    templates of ``combo_arrival_offsets`` (DESIGN.md §2.6).
+    ``extras``/``wvec`` (None for fault-free traces) carry the per-op
+    reliability surcharges and the per-combo written-rows masks they
+    shift (DESIGN.md §2.8)."""
     layout = StateLayout(trace.channels, trace.ways)
     combos, idx = trace_combos(trace)   # trace-only: shared by the batch
     mats = np.stack([combo_matrices(table, combos, layout, policy)
@@ -144,7 +167,12 @@ def _combo_setup(tables, trace, policy):
         gvec = jnp.asarray(np.stack([
             combo_arrival_offsets(table, combos, layout, policy)
             for table in tables]))
-    return layout, combos, idx, mats, s0, arrivals, gvec
+    extras = wvec = None
+    if trace.extra_us is not None:
+        extras = jnp.asarray(trace.extra_us, jnp.float32)
+        w = combo_written_rows(combos, layout)          # combo-only: shared
+        wvec = jnp.asarray(np.broadcast_to(w, (mats.shape[0],) + w.shape))
+    return layout, combos, idx, mats, s0, arrivals, gvec, extras, wvec
 
 
 def trace_end_time_maxplus(
@@ -162,13 +190,14 @@ def trace_end_time_maxplus(
     single = not isinstance(tables, (list, tuple))
     if single:
         tables = [tables]
-    layout, _, idx, mats, s0, arrivals, gvec = _combo_setup(
+    layout, _, idx, mats, s0, arrivals, gvec, extras, wvec = _combo_setup(
         tables, trace, policy)
     final = maxplus_fold(jnp.asarray(mats), jnp.asarray(s0),
                          t_steps=trace.n_ops, idx=jnp.asarray(idx),
                          use_kernel=use_kernel, interpret=interpret,
                          strategy=strategy, segment_len=segment_len,
-                         arrivals=arrivals, gvec=gvec)
+                         arrivals=arrivals, gvec=gvec,
+                         extras=extras, wvec=wvec)
     end = end_time_from_state(np.asarray(final), layout)
     return end[0] if single else end
 
@@ -228,19 +257,33 @@ def run_many_end_time_maxplus(
     b = len(traces)
     idx = np.full((b, t_max), m, np.int32)
     arr = np.zeros((b, t_max), np.float32)
+    ext = np.zeros((b, t_max), np.float32)
     lengths = np.zeros((b,), np.int32)
     for lane, i in enumerate(order):
         tr = traces[i]
         idx[lane, :tr.n_ops] = lane_idx[i]
         if tr.arrival_us is not None:
             arr[lane, :tr.n_ops] = np.asarray(tr.arrival_us, np.float32)
+        if tr.extra_us is not None:
+            ext[lane, :tr.n_ops] = np.asarray(tr.extra_us, np.float32)
         lengths[lane] = tr.n_ops
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    # fault surcharges ride a written-rows mask over the union dictionary
+    # (zero row for the padding identity); all-zero fleets compile the
+    # shift out so fault-free runs stay bit-identical
+    with_faults = bool(ext.any())
+    if with_faults:
+        wvec = np.concatenate([combo_written_rows(combos, layout),
+                               np.zeros((1, layout.n_state), np.float32)])
+        extras_arg, wvec_arg = jnp.asarray(ext), jnp.asarray(wvec)
+    else:
+        extras_arg = wvec_arg = None
     final = maxplus_fold_many_kernel(
         jnp.asarray(mats), jnp.asarray(gvec), jnp.asarray(idx),
         jnp.asarray(arr), jnp.asarray(init_state(layout)),
-        jnp.asarray(lengths), block_lanes=block_lanes, interpret=interpret,
+        jnp.asarray(lengths), extras=extras_arg, wvec=wvec_arg,
+        block_lanes=block_lanes, interpret=interpret,
         with_arrivals=bool(arr.any()))
     end = end_time_from_state(np.asarray(final), layout)
     out = np.empty((b,), np.float64)
@@ -281,8 +324,8 @@ def trace_energy_maxplus(
         tables, kinds = [tables], [kinds]
     if len(kinds) != len(tables):
         raise ValueError("need one interface kind per op-class table")
-    layout, combos, idx, mats, s0, arrivals, gvec = _combo_setup(
-        tables, trace, policy)
+    layout, combos, idx, mats, s0, arrivals, gvec, extras, wvec = \
+        _combo_setup(tables, trace, policy)
     e = np.stack([combo_energy_uj(table, combos, kind)
                   for table, kind in zip(tables, kinds)])
     if strategy == "sequential":
@@ -292,18 +335,21 @@ def trace_energy_maxplus(
             final, acc = maxplus_fold_kernel(
                 jnp.asarray(mats), jnp.asarray(s0), t_steps=trace.n_ops,
                 idx=jnp.asarray(idx), energy=jnp.asarray(e),
-                arrivals=arrivals, gvec=gvec, interpret=interpret)
+                arrivals=arrivals, gvec=gvec, extras=extras, wvec=wvec,
+                interpret=interpret)
         else:
             final = maxplus_fold_ref(jnp.asarray(mats), jnp.asarray(s0),
                                      t_steps=trace.n_ops,
                                      idx=jnp.asarray(idx),
-                                     arrivals=arrivals, gvec=gvec)
+                                     arrivals=arrivals, gvec=gvec,
+                                     extras=extras, wvec=wvec)
             acc = jnp.sum(jnp.asarray(e)[:, idx, :], axis=1)
     elif strategy == "segmented":
         final = maxplus_fold(
             jnp.asarray(mats), jnp.asarray(s0), t_steps=trace.n_ops,
             idx=jnp.asarray(idx), strategy="segmented",
-            segment_len=segment_len, arrivals=arrivals, gvec=gvec)
+            segment_len=segment_len, arrivals=arrivals, gvec=gvec,
+            extras=extras, wvec=wvec)
         acc = jnp.sum(jnp.asarray(e)[:, idx, :], axis=1)
     else:
         raise ValueError(f"unknown trace energy strategy {strategy!r} "

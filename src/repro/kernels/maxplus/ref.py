@@ -9,18 +9,24 @@ import jax.numpy as jnp
 def maxplus_fold_ref(mats: jax.Array, s0: jax.Array, *, t_steps: int,
                      idx: jax.Array | None = None,
                      arrivals: jax.Array | None = None,
-                     gvec: jax.Array | None = None) -> jax.Array:
+                     gvec: jax.Array | None = None,
+                     extras: jax.Array | None = None,
+                     wvec: jax.Array | None = None) -> jax.Array:
     """mats: [B, M, N, N]; s0: [B, N] -> [B, N] after t_steps ops.
 
     ``idx`` [t_steps] selects the matrix per step; None = periodic.
     ``arrivals`` [t_steps] + ``gvec`` [B, M, N] add the per-op
     origin-column max-in of arrival-aware traces (DESIGN.md §2.6):
-    ``s' = max(A_i (x) s, gvec[i] + arrivals[t])``."""
+    ``s' = max(A_i (x) s, gvec[i] + arrivals[t])``.
+    ``extras`` [t_steps] + ``wvec`` [B, M, N] add the per-op
+    reliability surcharge of faulty traces (DESIGN.md §2.8): after the
+    max-in, the op's written rows (wvec = 1.0 there) shift by the
+    surcharge, ``s'' = s' + wvec[i] * extras[t]``."""
     m = mats.shape[1]
     if idx is None:
         idx = jnp.arange(t_steps, dtype=jnp.int32) % m
     idx = idx.astype(jnp.int32)
-    if arrivals is None:
+    if arrivals is None and extras is None:
         def step(s, i):
             a = mats[:, i]                                   # [B, N, N]
             s = jnp.max(a + s[:, None, :], axis=-1)
@@ -29,15 +35,23 @@ def maxplus_fold_ref(mats: jax.Array, s0: jax.Array, *, t_steps: int,
         s, _ = jax.lax.scan(step, s0, idx[:t_steps])
         return s
 
+    zeros = jnp.zeros((t_steps,), s0.dtype)
+    arr2 = zeros if arrivals is None else arrivals.astype(s0.dtype)[:t_steps]
+    ext2 = zeros if extras is None else extras.astype(s0.dtype)[:t_steps]
+    if gvec is None:           # extras-only: arrival max-in must be inert
+        from repro.core.maxplus_form import NEG   # shared -inf sentinel
+        gvec = jnp.full(mats.shape[:3], NEG, s0.dtype)
+    if wvec is None:
+        wvec = jnp.zeros(mats.shape[:3], s0.dtype)
+
     def step_arr(s, op):
-        i, arr = op
+        i, arr, ext = op
         a = mats[:, i]                                       # [B, N, N]
         s = jnp.max(a + s[:, None, :], axis=-1)
-        return jnp.maximum(s, gvec[:, i] + arr), None
+        s = jnp.maximum(s, gvec[:, i] + arr)
+        return s + wvec[:, i] * ext, None
 
-    s, _ = jax.lax.scan(step_arr, s0,
-                        (idx[:t_steps],
-                         arrivals.astype(s0.dtype)[:t_steps]))
+    s, _ = jax.lax.scan(step_arr, s0, (idx[:t_steps], arr2, ext2))
     return s
 
 

@@ -46,13 +46,16 @@ API_SNAPSHOT = {
                   "engine: 'str | None' = None, "
                   "segment_len: 'int | None' = 64, "
                   "workload: 'RequestStream | None' = None, "
-                  "sched_policy: 'str | None' = None) -> None",
+                  "sched_policy: 'str | None' = None, "
+                  "faults: 'FaultSpec | None' = None) -> None",
     "SimResult": "(end_us: 'float', mb_s: 'float | None', "
                  "channel_busy_us: 'np.ndarray', "
                  "energy: 'EnergyBreakdown | None', engine: 'str', "
                  "n_ops: 'int', payload_bytes: 'int', "
                  "request_lat_us: 'np.ndarray | None' = None, "
-                 "sched_policy: 'str | None' = None) -> None",
+                 "sched_policy: 'str | None' = None, "
+                 "retry_hist: 'np.ndarray | None' = None, "
+                 "n_remap_ops: 'int' = 0) -> None",
     "Simulator": "(config: 'SSDConfig | None' = None, *, "
                  "table: 'OpClassTable | None' = None, "
                  "kind: 'InterfaceKind | str | None' = None, "
@@ -119,7 +122,8 @@ def test_api_surface_snapshot():
     for extra in ("Engine", "Policy", "Objective", "SSDConfig", "OpTrace",
                   "OpClassTable", "EnergyBreakdown", "workload_trace",
                   "RequestStream", "poisson_stream", "closed_loop_stream",
-                  "build_workload", "lower_static", "SCHED_POLICIES"):
+                  "build_workload", "lower_static", "SCHED_POLICIES",
+                  "FaultSpec", "FaultSampler", "apply_faults"):
         assert extra in api.__all__, extra
 
 

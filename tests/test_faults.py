@@ -1,0 +1,355 @@
+"""Reliability layer (DESIGN.md §2.8): wear-dependent read-retry,
+program/erase fault injection, hedged-read mitigation and degraded-mode
+QoS.  The correctness story mirrors the arrival layer's: faults reduce
+to a per-op additive surcharge plus a trace rewrite sampled *outside*
+the fold, so every engine must agree on faulty inputs to the same
+tolerance as fault-free ones, and everything must be bit-deterministic
+given (trace, FaultSpec, seed).
+
+Deliberately hypothesis-free (fixed seed grids), like
+tests/test_workload_sched.py."""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import faults as fl, sched, trace as tr, workload as wl
+from repro.core.nand import CellType
+from repro.core.sim import SSDConfig
+from repro.core.sim_ref import simulate_trace_ref
+
+
+def _sim(channels, ways):
+    return api.Simulator.for_config(
+        SSDConfig(cell=CellType.MLC, channels=channels, ways=ways))
+
+
+def _tol(ref_us, n_ops):
+    return 1e-3 * n_ops + 1e-5 * ref_us
+
+
+ZERO = api.FaultSpec(rber_fresh=0.0, rber_worn=0.0)
+# The retry-storm gate configuration (benchmarks/reliability_bench.py
+# freezes the same numbers): ~3% of reads storm with >= 500 us retry
+# ladders, load light enough that a cross-chip duplicate can overtake.
+STORM = dict(wear=1.0, rber_worn=3e-5, max_retries=4,
+             retry_step_us=(500.0, 1000.0, 2000.0, 4000.0))
+STORM_LOAD = dict(n=400, mean_interarrival_us=600.0, seed=2)
+
+
+def _storm_load():
+    return api.poisson_stream(STORM_LOAD["n"],
+                              STORM_LOAD["mean_interarrival_us"],
+                              seed=STORM_LOAD["seed"])
+
+
+# --- spec / sampler basics ---------------------------------------------------
+
+
+def test_fault_constants_pin_trace_op_classes():
+    # faults.py mirrors READ/WRITE to avoid the circular import
+    assert fl.READ == tr.READ and fl.WRITE == tr.WRITE
+
+
+def test_fault_spec_validation_and_rber_curve():
+    with pytest.raises(ValueError, match="wear"):
+        api.FaultSpec(wear=-0.1)
+    with pytest.raises(ValueError, match="prog_fail_prob"):
+        api.FaultSpec(prog_fail_prob=1.5)
+    with pytest.raises(ValueError, match="retry_step_us"):
+        api.FaultSpec(retry_step_us=(10.0, -1.0))
+    with pytest.raises(ValueError, match="max_retries"):
+        api.FaultSpec(max_retries=-1)
+    with pytest.raises(ValueError, match="hedge_after_us"):
+        api.FaultSpec(hedge_after_us=-5.0)
+    # geometric interpolation: fresh at wear 0, worn at wear 1
+    s = api.FaultSpec(wear=0.0, rber_fresh=1e-8, rber_worn=1e-4)
+    assert s.rber() == pytest.approx(1e-8)
+    assert dataclasses.replace(s, wear=1.0).rber() == pytest.approx(1e-4)
+    mid = dataclasses.replace(s, wear=0.5).rber()
+    assert 1e-8 < mid < 1e-4
+    # per-step failure probability caps at 0.95 however worn
+    assert api.FaultSpec(wear=5.0, rber_worn=1.0).p_retry_step() == 0.95
+    # the default spec is NOT zero (a fresh drive still has rber > 0);
+    # an explicitly zeroed curve is
+    assert not api.FaultSpec().is_zero
+    assert ZERO.is_zero
+    assert not dataclasses.replace(ZERO, jitter_us=1.0).is_zero
+    assert not dataclasses.replace(ZERO, prog_fail_prob=0.1).is_zero
+
+
+def test_zero_fault_spec_is_bit_identical():
+    """Acceptance pin: a zero FaultSpec reproduces the fault-free result
+    bit-for-bit on every engine — the whole layer is +0.0 when off."""
+    sim = _sim(2, 4)
+    t = tr.mixed_trace(300, 2, 4, 0.6, seed=1)
+    t2, rid, sampler = sched.apply_faults(t, ZERO, sim.table)
+    for f in ("cls", "channel", "way", "parity"):
+        np.testing.assert_array_equal(getattr(t2, f), getattr(t, f), f)
+    assert np.all(np.asarray(t2.extra_us) == 0.0)
+    assert sampler.n_remap_ops == 0 and not sampler.retired.any()
+    for engine in ("scan", "prefix", "pallas", "streaming", "oracle"):
+        assert sim.run(t, engine=engine, faults=ZERO).end_us == \
+            sim.run(t, engine=engine).end_us, engine
+    # ... and through the workload paths (static lowering + dispatch)
+    load = api.poisson_stream(80, 50.0, seed=3)
+    for policy in ("stripe", "least_loaded"):
+        a = sim.run(load, sched_policy=policy, faults=ZERO)
+        b = sim.run(load, sched_policy=policy)
+        assert a.end_us == b.end_us, policy
+        np.testing.assert_array_equal(a.request_lat_us, b.request_lat_us)
+
+
+# --- cross-engine agreement + determinism on faulty inputs -------------------
+
+
+@pytest.mark.parametrize("channels,ways", [(1, 2), (2, 4), (4, 4)])
+def test_faulty_engines_agree_and_are_deterministic(channels, ways):
+    """The faulty-trace extension of the <1e-3 cross-engine agreement
+    gate: retry/jitter surcharges thread five independent recurrence
+    implementations, and a second run must be bit-identical (all draws
+    happen outside the fold)."""
+    sim = _sim(channels, ways)
+    spec = api.FaultSpec(wear=0.9, jitter_us=3.0, seed=channels + ways)
+    t = tr.mixed_trace(240, channels, ways, 0.7, seed=ways)
+    t2, _, _ = sched.apply_faults(t, spec, sim.table)
+    assert np.any(np.asarray(t2.extra_us) > 0.0)   # the gate is real
+    ref = simulate_trace_ref(sim.table, t2)
+    tol = _tol(ref, t2.n_ops)
+    for engine in ("scan", "prefix", "pallas", "streaming"):
+        got = sim.run(t2, engine=engine).end_us
+        assert abs(got - ref) <= tol, (engine, channels, ways)
+        assert got == sim.run(t2, engine=engine).end_us, engine
+    # the same spec resampled from the spec (not the pre-built trace)
+    # is deterministic end to end
+    a = sim.run(t, faults=spec)
+    b = sim.run(t, faults=spec)
+    assert a.end_us == b.end_us
+    np.testing.assert_array_equal(a.retry_hist, b.retry_hist)
+    assert int(a.retry_hist.sum()) == int(np.sum(np.asarray(t.cls)
+                                                 == tr.READ))
+
+
+def test_faults_and_extra_us_compose_exclusively():
+    sim = _sim(2, 4)
+    t = tr.mixed_trace(64, 2, 4, 0.5, seed=0)
+    t2, _, _ = sched.apply_faults(t, api.FaultSpec(wear=1.0), sim.table)
+    # double application is refused everywhere
+    with pytest.raises(ValueError, match="already carries extra_us"):
+        sched.apply_faults(t2, ZERO, sim.table)
+    with pytest.raises(ValueError, match="already carries extra_us"):
+        list(tr.iter_trace_chunks(t2, 16, faults=ZERO, table=sim.table))
+    with pytest.raises(ValueError, match="already carries extra_us"):
+        api.SimRequest(trace=t2, faults=ZERO)
+    with pytest.raises(ValueError, match="FaultSpec"):
+        api.SimRequest(trace=t, faults="worn")
+    # negative surcharges are rejected at construction
+    with pytest.raises(ValueError, match="extra_us"):
+        dataclasses.replace(t, extra_us=np.full(64, -1.0, np.float32))
+
+
+def test_squaring_rejects_faulty_traces_but_takes_zero_specs():
+    sim = _sim(1, 4)
+    steady = tr.steady_trace(32, 1, 4, tr.READ)
+    with pytest.raises(api.CapabilityError, match="fault-extended"):
+        sim.run(steady, engine="squaring",
+                faults=api.FaultSpec(wear=1.0, seed=3))
+    assert sim.run(steady, engine="squaring", faults=ZERO).end_us == \
+        sim.run(steady, engine="squaring").end_us
+
+
+# --- chunked sampling == one-shot (satellite: streaming determinism) ---------
+
+
+def test_chunked_fault_sampling_is_bit_identical_to_one_shot():
+    """A carried FaultSampler consumes one PCG64 stream regardless of
+    chunk boundaries, so chunked rewrites concatenate to the one-shot
+    rewrite bit-for-bit — including remap inserts that change chunk
+    lengths."""
+    sim = _sim(2, 4)
+    spec = api.FaultSpec(wear=1.0, jitter_us=2.0, prog_fail_prob=0.1,
+                         erase_fail_prob=0.2, seed=5)
+    t = tr.mixed_trace(500, 2, 4, 0.4, seed=8)
+    whole, _, _ = sched.apply_faults(t, spec, sim.table)
+    for chunk_len in (33, 64, 499, 1024):
+        parts = list(tr.iter_trace_chunks(t, chunk_len, faults=spec,
+                                          table=sim.table))
+        assert sum(p.n_ops for p in parts) == whole.n_ops
+        for field in ("cls", "channel", "way", "parity", "extra_us"):
+            cat = np.concatenate([np.asarray(getattr(p, field))
+                                  for p in parts])
+            np.testing.assert_array_equal(
+                cat, np.asarray(getattr(whole, field)),
+                err_msg=f"{field}@{chunk_len}")
+        cat_pay = np.concatenate([p.payload_mask() for p in parts])
+        np.testing.assert_array_equal(cat_pay, whole.payload_mask())
+    # generator twin: mixed_trace_chunks(faults=) == apply_faults(mixed)
+    for chunk_len in (100, 1000):
+        parts = list(tr.mixed_trace_chunks(500, 2, 4, 0.4,
+                                           chunk_len=chunk_len, seed=8,
+                                           faults=spec, table=sim.table))
+        for field in ("cls", "channel", "way", "parity", "extra_us"):
+            cat = np.concatenate([np.asarray(getattr(p, field))
+                                  for p in parts])
+            np.testing.assert_array_equal(
+                cat, np.asarray(getattr(whole, field)),
+                err_msg=f"gen:{field}@{chunk_len}")
+
+
+def test_incremental_sampler_matches_one_shot_draws():
+    spec = api.FaultSpec(wear=1.0, jitter_us=1.0, prog_fail_prob=0.3,
+                         retry_step_us=(100.0, 200.0), seed=9)
+    cls = tr.mixed_trace(400, 2, 4, 0.5, seed=1).cls
+    one = fl.FaultSampler(spec, 2, 4)
+    e1, f1, r1 = one.sample(cls)
+    chunked = fl.FaultSampler(spec, 2, 4)
+    es, fs, rs = zip(*(chunked.sample(cls[lo:lo + 77])
+                       for lo in range(0, 400, 77)))
+    np.testing.assert_array_equal(np.concatenate(es), e1)
+    np.testing.assert_array_equal(np.concatenate(fs), f1)
+    np.testing.assert_array_equal(np.concatenate(rs), r1)
+    np.testing.assert_array_equal(chunked.retry_hist, one.retry_hist)
+    np.testing.assert_array_equal(chunked.retired, one.retired)
+
+
+# --- program faults: remap conservation + retirement -------------------------
+
+
+def test_program_fault_remaps_conserve_bytes_and_avoid_retired_ways():
+    sim = _sim(4, 4)
+    spec = api.FaultSpec(rber_fresh=0.0, rber_worn=0.0,
+                         prog_fail_prob=1.0, erase_fail_prob=0.3, seed=4)
+    t = tr.mixed_trace(200, 4, 4, 0.5, seed=2)
+    n_writes = int(np.sum(np.asarray(t.cls) == tr.WRITE))
+    t2, _, sampler = sched.apply_faults(t, spec, sim.table)
+    # every write failed -> one remap each, inserted right after
+    assert sampler.n_remap_ops == n_writes
+    assert t2.n_ops == t.n_ops + n_writes
+    # byte conservation: the failed original keeps its bus/cell cost but
+    # its payload credit moves to the remap
+    assert t2.total_bytes(sim.table) == t.total_bytes(sim.table)
+    assert int(t2.payload_mask().sum()) == t.n_ops
+    # the remap follows its failed original on the same channel, on a
+    # non-retired way
+    fail = np.flatnonzero(~t2.payload_mask())      # the stripped originals
+    remap = fail + 1
+    np.testing.assert_array_equal(np.asarray(t2.channel)[remap],
+                                  np.asarray(t2.channel)[fail])
+    assert not sampler.retired[np.asarray(t2.channel)[remap],
+                               np.asarray(t2.way)[remap]].any()
+    # retirement always leaves >= 1 live way per channel
+    for seed in range(8):
+        s = fl.FaultSampler(dataclasses.replace(spec, erase_fail_prob=0.9,
+                                                seed=seed), 4, 4)
+        assert (~s.retired).any(axis=1).all(), seed
+    # the faulty trace still clears every engine's agreement gate
+    ref = simulate_trace_ref(sim.table, t2)
+    for engine in ("scan", "prefix", "pallas"):
+        assert abs(sim.run(t2, engine=engine).end_us - ref) <= \
+            _tol(ref, t2.n_ops), engine
+
+
+def test_least_loaded_never_dispatches_to_a_retired_way():
+    """Property over a seed grid: retired (channel, way) pairs are a
+    hard dispatch constraint for both dynamic rules."""
+    sim = _sim(2, 4)
+    scan = api.get_engine("scan")
+    for seed in range(5):
+        sampler = fl.FaultSampler(
+            dataclasses.replace(ZERO, erase_fail_prob=0.45, seed=seed),
+            2, 4)
+        if not sampler.retired.any():
+            continue
+        load = api.poisson_stream(120, 30.0, seed=seed)
+        cls, arr, _, _ = wl.request_ops(load)
+        for rule in ("least_loaded", "earliest_ready"):
+            _, _, chan, way, _ = scan.dispatch_run(
+                sim, cls, arr, n_channels=2, n_ways=4, rule=rule,
+                retired=sampler.retired)
+            hit = sampler.retired[np.asarray(chan), np.asarray(way)]
+            assert not hit.any(), (seed, rule)
+
+
+# --- percentile guard (satellite) --------------------------------------------
+
+
+def test_percentile_guard_clamps_warns_and_nans():
+    sim = _sim(2, 4)
+    res = sim.run(api.poisson_stream(10, 50.0, seed=0),
+                  sched_policy="stripe")
+    lat = np.asarray(res.request_lat_us)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")             # p50 on 10: resolvable
+        assert res.p50_us == pytest.approx(np.percentile(lat, 50))
+    for q_attr in ("p99_us", "p99_9_us"):          # p99(.9) on 10: clamped
+        with pytest.warns(RuntimeWarning, match="percentile resolution"):
+            assert getattr(res, q_attr) == float(np.max(lat))
+    # exactly at the resolution threshold: no warning
+    res100 = sim.run(api.poisson_stream(100, 50.0, seed=1),
+                     sched_policy="stripe")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert res100.p99_us == pytest.approx(
+            np.percentile(np.asarray(res100.request_lat_us), 99))
+    with pytest.warns(RuntimeWarning):
+        res100.p99_9_us                            # p99.9 needs 1000
+    # empty stream -> NaN; absent stream -> None
+    empty = dataclasses.replace(res, request_lat_us=np.zeros(0))
+    assert np.isnan(empty.p50_us) and np.isnan(empty.p99_9_us)
+    none = dataclasses.replace(res, request_lat_us=None)
+    assert none.p50_us is None and none.p99_us is None
+
+
+# --- degraded-mode QoS: wear monotonicity + the hedging win ------------------
+
+
+def test_p99_rises_monotonically_with_wear():
+    sim = _sim(4, 4)
+    load = _storm_load()
+    prev = -1.0
+    for wear in (0.0, 0.5, 0.75, 1.0):
+        spec = api.FaultSpec(seed=7, **{**STORM, "wear": wear})
+        r = sim.run(load, faults=spec)
+        assert r.p99_us >= prev - 1e-9, wear
+        prev = r.p99_us
+    assert prev > 400.0                # worn tail is a >= 500 us storm
+
+
+def test_hedged_reads_cut_the_retry_storm_p99():
+    """The mitigation gate (same numbers as BENCH_7's hedging row): a
+    hedged duplicate lands on the next (channel, way), so when the
+    primary draws a >= 500 us retry storm the duplicate's completion
+    wins the request's first-response credit."""
+    sim = _sim(4, 4)
+    load = _storm_load()
+    unhedged = sim.run(load, faults=api.FaultSpec(seed=7, **STORM))
+    hedged = sim.run(load, faults=api.FaultSpec(
+        seed=7, hedge_fraction=1.0, hedge_after_us=250.0, **STORM))
+    assert int(unhedged.retry_hist[1:].sum()) > 0  # storms happened
+    assert len(hedged.request_lat_us) == load.n_requests  # payload only
+    assert hedged.p99_us <= unhedged.p99_us
+    assert hedged.p99_us < 0.75 * unhedged.p99_us  # and clearly, not by luck
+    assert hedged.p50_us <= unhedged.p50_us * 1.25  # tail cut, not median tax
+
+
+def test_workload_faults_end_to_end_static_and_dynamic():
+    sim = _sim(2, 4)
+    load = api.poisson_stream(150, 80.0, read_fraction=0.4, seed=6)
+    spec = api.FaultSpec(wear=1.0, prog_fail_prob=0.1,
+                         erase_fail_prob=0.2, seed=3)
+    for policy in ("stripe", "least_loaded"):
+        a = sim.run(load, sched_policy=policy, faults=spec)
+        assert a.sched_policy == policy
+        assert a.n_remap_ops > 0 and a.retry_hist is not None
+        assert len(a.request_lat_us) == load.n_requests
+        b = sim.run(load, sched_policy=policy, faults=spec)
+        assert a.end_us == b.end_us, policy
+        np.testing.assert_array_equal(a.request_lat_us, b.request_lat_us)
+        assert a.n_remap_ops == b.n_remap_ops
+    # remap writes cost time: the faulty run never finishes earlier
+    clean = sim.run(load, sched_policy="stripe")
+    faulty = sim.run(load, sched_policy="stripe", faults=spec)
+    assert faulty.end_us >= clean.end_us

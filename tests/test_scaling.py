@@ -202,3 +202,58 @@ def test_shard_map_matches_vmap_subprocess_8dev():
                        text=True, env=env,
                        cwd=os.path.dirname(os.path.dirname(__file__)))
     assert "SHARD_SWEEP_OK" in r.stdout, r.stdout + r.stderr
+
+
+# --- faulty traces through the streaming paths (DESIGN.md §2.8) --------------
+
+
+def test_streaming_chunk_invariance_extends_to_faulty_traces():
+    """PR 6's invariance-by-construction gate on fault-extended traces:
+    the streaming fold carries the surcharge alongside arrivals, so end
+    time and per-op completions stay bit-identical across chunk sizes
+    and to the scan engine."""
+    from repro.core import sched
+    for channels, ways in ((1, 4), (2, 4), (4, 8)):
+        sim = _sim(channels, ways)
+        spec = api.FaultSpec(wear=0.95, jitter_us=2.0,
+                             seed=channels * 7 + ways)
+        t, _, _ = sched.apply_faults(
+            _trace(channels, ways, arrivals=True, seed=channels + ways),
+            spec, sim.table)
+        assert np.any(np.asarray(t.extra_us) > 0.0)
+        scan = api.get_engine("scan")
+        stream = api.get_engine("streaming")
+        end_ref, comp_ref = scan.completions(sim, t, batched=False)
+        for chunk in (32, 128, 1024):
+            end, comp = stream.completions(sim, t, batched=False,
+                                           segment_len=chunk)
+            assert end == end_ref, (channels, ways, chunk)
+            assert np.array_equal(comp, comp_ref), (channels, ways, chunk)
+
+
+def test_run_stream_applies_faults_identically_to_one_shot():
+    """Chunked fault sampling consumes the same PCG64 stream as the
+    one-shot rewrite, so run_stream over fault-rewriting chunk iterators
+    equals run(faults=...) exactly — end time, bandwidth (remaps strip
+    payload credit) and energy — at any chunk length."""
+    sim = _sim(2, 4)
+    spec = api.FaultSpec(wear=1.0, prog_fail_prob=0.05,
+                         erase_fail_prob=0.1, jitter_us=1.0, seed=13)
+    t = _trace(2, 4, arrivals=False, seed=21, n_ops=600)
+    whole = sim.run(t, faults=spec, objective="all")
+    assert whole.n_ops > t.n_ops          # remaps actually inserted
+    for chunk in (64, 256, 599):
+        res = sim.run_stream(
+            tr.iter_trace_chunks(t, chunk, faults=spec, table=sim.table),
+            objective="all")
+        assert res.end_us == whole.end_us, chunk
+        assert res.n_ops == whole.n_ops
+        assert res.payload_bytes == whole.payload_bytes
+        assert res.energy.total_j == whole.energy.total_j
+    # the generator twin streams the same faulty op stream
+    gen = sim.run_stream(tr.mixed_trace_chunks(
+        2048, 2, 4, 0.5, chunk_len=256, seed=2, faults=spec,
+        table=sim.table))
+    one = sim.run(tr.mixed_trace(2048, 2, 4, 0.5, seed=2), faults=spec)
+    assert gen.end_us == one.end_us
+    assert gen.payload_bytes == one.payload_bytes
