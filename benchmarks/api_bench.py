@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.api import SSDConfig, Simulator, engine_capabilities
 from repro.core.energy import breakdown_from_sums

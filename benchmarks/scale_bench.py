@@ -192,7 +192,7 @@ def run_shard(small: bool = False) -> list[dict]:
                        text=True, env=env,
                        cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
-    line = [l for l in r.stdout.splitlines() if l.startswith("SHARD_ROWS")]
+    line = [ln for ln in r.stdout.splitlines() if ln.startswith("SHARD_ROWS")]
     assert line, f"sharded sweep subprocess failed:\n{r.stdout}{r.stderr}"
     _, n_dev, t_shard, t_vmap = line[0].split()
     return [

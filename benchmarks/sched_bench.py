@@ -22,7 +22,6 @@ Two gates run even under ``--smoke``:
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.api import (Simulator, SSDConfig, bursty_stream,
                        closed_loop_stream, lower_static, multi_tenant,

@@ -6,7 +6,6 @@ and an injected failure + automatic restart along the way.
 """
 
 import argparse
-import dataclasses
 import logging
 import tempfile
 

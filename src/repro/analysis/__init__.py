@@ -1,0 +1,20 @@
+"""Static contract checker for the repro engine stack (DESIGN.md §2.9).
+
+Two layers: AST lints over the source tree (:mod:`repro.analysis.astlint`)
+and jaxpr-level invariant checks over every registered engine's canonical
+folds (:mod:`repro.analysis.jaxprs`), gated by the committed primitive
+budgets of :mod:`repro.analysis.baseline`.  CLI: ``python -m
+repro.analysis`` (:mod:`repro.analysis.cli`).
+"""
+
+from repro.analysis.findings import Finding, render_json, render_text
+
+__all__ = ["Finding", "render_json", "render_text", "run_analysis"]
+
+
+def run_analysis(*args, **kwargs):
+    """Lazy re-export of :func:`repro.analysis.cli.run_analysis` (the
+    CLI pulls in jax; keep package import light for the AST-only path)."""
+    from repro.analysis.cli import run_analysis as _run
+
+    return _run(*args, **kwargs)

@@ -1,0 +1,423 @@
+"""Layer 1: AST lints over the repro source tree (DESIGN.md §2.9).
+
+A visitor-free rule engine: every rule is a plain function over one
+parsed :class:`ModuleSource` yielding :class:`~repro.analysis.findings.
+Finding`s, registered with :func:`rule`.  Rules share two pieces of
+per-module machinery, both computed lazily and cached on the module:
+
+* an **import map** — ``import numpy as np`` / ``from repro.core import
+  sim as _sim`` / ``from repro.core.trace import simulate`` all resolve
+  attribute chains back to fully-qualified names, so a rule matches
+  ``_sim.ssd_bandwidth_mb_s(...)`` no matter how the module spelled the
+  import (this is what the old ``grep 'engine =='`` convention could
+  never do);
+* the **fold-body set** — every function or lambda passed as the body
+  of ``jax.lax.scan`` / ``associative_scan`` / ``fori_loop`` /
+  ``while_loop``, plus same-named local ``def``s (the
+  ``_trace_step_fn`` factory pattern: the returned ``step`` is folded
+  by reference).  Everything lexically inside a fold body is traced
+  per-op under ``jit`` — the rules that police the determinism and
+  host/device contracts apply there.
+
+The rule catalog (ids are stable; DESIGN.md §2.9 documents each):
+
+``rng-global``       global-state or unseeded RNG anywhere
+``rng-in-fold``      RNG construction or wall-clock reads in fold bodies
+``engine-dispatch``  string-compare engine dispatch outside the registry
+``shim-internal``    internal calls to deprecated shim entry points
+``host-in-fold``     ``float()`` / ``.item()`` / ``np.asarray`` on
+                     in-fold values
+
+Adding a rule is one function::
+
+    @rule("my-rule", "one-line description")
+    def _check_my_rule(mod: ModuleSource) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            ...
+            yield mod.finding("my-rule", node, "message")
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import functools
+import typing
+from pathlib import Path
+from typing import Callable, Iterable, Iterator
+
+from repro.analysis.findings import Finding
+
+# ---------------------------------------------------------------------------
+# Module model: parsed source + import resolution + fold-body detection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModuleSource:
+    """One parsed source file presented to every rule."""
+
+    path: Path           # absolute path on disk
+    rel: str             # repo-relative display path (posix separators)
+    tree: ast.Module
+
+    #: repo-relative paths allowed to string-dispatch on engine names —
+    #: exactly the registry module (DESIGN.md §2.5).
+    DISPATCH_ALLOWED = ("src/repro/core/api.py",)
+
+    @classmethod
+    def parse(cls, path: Path, root: Path) -> "ModuleSource":
+        text = path.read_text()
+        rel = path.relative_to(root).as_posix() if path.is_relative_to(
+            root) else path.as_posix()
+        return cls(path=path, rel=rel, tree=ast.parse(text, str(path)))
+
+    def finding(self, rule_id: str, node: ast.AST, message: str,
+                severity: str = "error") -> Finding:
+        return Finding(rule=rule_id, path=self.rel,
+                       line=getattr(node, "lineno", 0), message=message,
+                       severity=severity)
+
+    # -- import resolution --------------------------------------------------
+
+    @functools.cached_property
+    def imports(self) -> dict[str, str]:
+        """Local name -> fully-qualified name, for every import."""
+        out: dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and not node.level:
+                for a in node.names:
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+        return out
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Fully-qualified dotted name of an expression, or None when
+        the head is not an imported name (a local variable, a call
+        result, ...)."""
+        parts: list[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        head = self.imports.get(node.id)
+        if head is None:
+            return None
+        return ".".join([head] + parts[::-1])
+
+    # -- fold-body detection ------------------------------------------------
+
+    #: fully-qualified scan-like combinators -> positions of their body
+    #: callables (kwarg names listed alongside)
+    _SCAN_LIKE: typing.ClassVar[dict] = {
+        "jax.lax.scan": ((0,), ("f",)),
+        "jax.lax.associative_scan": ((0,), ("fn",)),
+        "jax.lax.fori_loop": ((2,), ("body_fun",)),
+        "jax.lax.while_loop": ((0, 1), ("cond_fun", "body_fun")),
+    }
+
+    @functools.cached_property
+    def fold_bodies(self) -> list[ast.AST]:
+        """Every FunctionDef/Lambda acting as a traced fold/step body."""
+        marked: list[ast.AST] = []
+        names: set[str] = set()
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qual = self.resolve(node.func)
+            spec = self._SCAN_LIKE.get(qual or "")
+            if spec is None:
+                continue
+            pos, kws = spec
+            cands = [node.args[i] for i in pos if i < len(node.args)]
+            cands += [kw.value for kw in node.keywords if kw.arg in kws]
+            for cand in cands:
+                if isinstance(cand, ast.Lambda):
+                    marked.append(cand)
+                elif isinstance(cand, ast.Name):
+                    names.add(cand.id)
+        if names:
+            for node in ast.walk(self.tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and node.name in names:
+                    marked.append(node)
+        return marked
+
+    def walk_fold_bodies(self) -> Iterator[ast.AST]:
+        """Every AST node lexically inside any fold body (deduplicated:
+        a lambda inside a marked function is not yielded twice)."""
+        seen: set[int] = set()
+        for body in self.fold_bodies:
+            for node in ast.walk(body):
+                if id(node) not in seen:
+                    seen.add(id(node))
+                    yield node
+
+
+def scan_paths(paths: Iterable[Path], root: Path) -> list[ModuleSource]:
+    """Parse every ``.py`` file under ``paths`` (files or directories)."""
+    mods = []
+    for p in paths:
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            mods.append(ModuleSource.parse(f, root))
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# Rule registry
+# ---------------------------------------------------------------------------
+
+RuleFn = Callable[[ModuleSource], Iterator[Finding]]
+_RULES: dict[str, tuple[str, RuleFn]] = {}
+
+
+def rule(rule_id: str, description: str):
+    """Register an AST rule under a stable id (unique)."""
+
+    def deco(fn: RuleFn) -> RuleFn:
+        if rule_id in _RULES:
+            raise ValueError(f"rule {rule_id!r} is already registered")
+        _RULES[rule_id] = (description, fn)
+        return fn
+
+    return deco
+
+
+def registered_rules() -> dict[str, str]:
+    """rule id -> one-line description, sorted."""
+    return {k: _RULES[k][0] for k in sorted(_RULES)}
+
+
+def lint_module(mod: ModuleSource,
+                only: set[str] | None = None) -> list[Finding]:
+    out: list[Finding] = []
+    for rule_id, (_, fn) in sorted(_RULES.items()):
+        if only is None or rule_id in only:
+            out.extend(fn(mod))
+    return out
+
+
+def lint_paths(paths: Iterable[Path], root: Path,
+               only: set[str] | None = None
+               ) -> tuple[list[Finding], int]:
+    """(findings, number of files scanned) over every .py under paths."""
+    mods = scan_paths(paths, root)
+    out: list[Finding] = []
+    for mod in mods:
+        out.extend(lint_module(mod, only))
+    return out, len(mods)
+
+
+# ---------------------------------------------------------------------------
+# RNG classification shared by the two RNG rules
+# ---------------------------------------------------------------------------
+
+#: numpy.random constructors that are fine *when seeded*
+_NP_SEEDED_CTORS = frozenset({
+    "default_rng", "Generator", "PCG64", "PCG64DXSM", "Philox", "MT19937",
+    "SFC64", "SeedSequence", "RandomState", "BitGenerator",
+})
+
+#: stdlib ``random`` module-level functions (all share hidden global state)
+_STDLIB_RANDOM_FNS = frozenset({
+    "betavariate", "choice", "choices", "expovariate", "gauss",
+    "getrandbits", "normalvariate", "paretovariate", "randbytes",
+    "randint", "random", "randrange", "sample", "seed", "shuffle",
+    "triangular", "uniform", "vonmisesvariate", "weibullvariate",
+})
+
+#: wall-clock reads (non-deterministic inputs a fold must never see)
+_WALL_CLOCK = frozenset({
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "datetime.date.today",
+})
+
+
+def _classify_rng_call(mod: ModuleSource,
+                       call: ast.Call) -> tuple[str, str] | None:
+    """("global" | "unseeded" | "seeded", description) for an RNG call,
+    else None."""
+    qual = mod.resolve(call.func)
+    if qual is None:
+        return None
+    if qual.startswith("numpy.random."):
+        tail = qual.rsplit(".", 1)[1]
+        if tail in _NP_SEEDED_CTORS:
+            if not call.args and not call.keywords:
+                return "unseeded", f"{qual}() with no seed"
+            return "seeded", qual
+        return "global", f"{qual} (hidden global RNG state)"
+    if qual.startswith("random.") \
+            and qual.rsplit(".", 1)[1] in _STDLIB_RANDOM_FNS:
+        return "global", f"{qual} (hidden global RNG state)"
+    if qual in ("random.Random", "random.SystemRandom"):
+        if not call.args and not call.keywords:
+            return "unseeded", f"{qual}() with no seed"
+        return "seeded", qual
+    return None
+
+
+# ---------------------------------------------------------------------------
+# The rules
+# ---------------------------------------------------------------------------
+
+
+@rule("rng-global",
+      "no global-state or unseeded RNG anywhere (determinism contract: "
+      "every random draw flows from an explicit seed)")
+def _rng_global(mod: ModuleSource) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        hit = _classify_rng_call(mod, node)
+        if hit is None or hit[0] == "seeded":
+            continue
+        kind, desc = hit
+        what = ("global-state RNG call"
+                if kind == "global" else "unseeded RNG construction")
+        yield mod.finding(
+            "rng-global", node,
+            f"{what}: {desc} — results would not be reproducible from "
+            "a seed; construct a seeded np.random.Generator instead")
+
+
+@rule("rng-in-fold",
+      "no RNG construction or wall-clock reads inside fold/step bodies "
+      "(sampling happens outside the fold; the fold stays pure)")
+def _rng_in_fold(mod: ModuleSource) -> Iterator[Finding]:
+    for node in mod.walk_fold_bodies():
+        if not isinstance(node, ast.Call):
+            continue
+        qual = mod.resolve(node.func)
+        if qual in _WALL_CLOCK:
+            yield mod.finding(
+                "rng-in-fold", node,
+                f"wall-clock read {qual} inside a fold/step body — "
+                "per-op times must be sampled outside the fold "
+                "(DESIGN.md §2.8)")
+            continue
+        if _classify_rng_call(mod, node) is not None:
+            yield mod.finding(
+                "rng-in-fold", node,
+                f"RNG use ({qual}) inside a fold/step body — engines "
+                "must stay bit-deterministic given (trace, spec, seed); "
+                "sample outside the fold and pass arrays in "
+                "(DESIGN.md §2.8)")
+
+
+_ENGINE_NAMES = frozenset({"engine", "engine_name"})
+_STR_CMP_OPS = (ast.Eq, ast.NotEq, ast.In, ast.NotIn)
+
+
+def _is_engine_expr(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Name) and node.id in _ENGINE_NAMES) or (
+        isinstance(node, ast.Attribute) and node.attr in _ENGINE_NAMES)
+
+
+def _has_str_constant(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return any(_has_str_constant(e) for e in node.elts)
+    return False
+
+
+@rule("engine-dispatch",
+      "no string-compare engine dispatch outside the repro.core.api "
+      "registry (capability rows, not ad-hoc name tests)")
+def _engine_dispatch(mod: ModuleSource) -> Iterator[Finding]:
+    if mod.rel in ModuleSource.DISPATCH_ALLOWED:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        if not any(isinstance(op, _STR_CMP_OPS) for op in node.ops):
+            continue
+        sides = [node.left] + list(node.comparators)
+        if any(_is_engine_expr(s) for s in sides) \
+                and any(_has_str_constant(s) for s in sides):
+            yield mod.finding(
+                "engine-dispatch", node,
+                "string comparison on an engine name outside the "
+                "registry — dispatch through repro.core.api "
+                "(get_engine / EngineCaps), which raises on unknown "
+                "names and keeps capabilities declared in one place")
+
+
+#: deprecated shim entry point -> its session-API replacement
+DEPRECATED_SHIMS: dict[str, str] = {
+    "repro.core.sim.channel_bandwidth_mb_s":
+        "repro.api.steady_channel_bandwidth_mb_s",
+    "repro.core.sim.ssd_bandwidth_mb_s": "repro.api.steady_bandwidth_mb_s",
+    "repro.core.sim.sweep_bandwidth_mb_s":
+        "repro.api.sweep_steady_bandwidth_mb_s",
+    "repro.core.trace.simulate": "repro.api.Simulator.run",
+    "repro.core.trace.simulate_batch": "repro.api.sweep_tables",
+    "repro.core.trace.simulate_energy":
+        "repro.api.Simulator.run(objective='energy')",
+    "repro.core.trace.trace_bandwidth_mb_s":
+        "repro.api.Simulator.run(objective='bandwidth')",
+    "repro.core.trace.workload_trace":
+        "repro.core.workload.build_workload",
+}
+
+
+@rule("shim-internal",
+      "no internal calls to deprecated shim entry points (the static "
+      "twin of the runtime DeprecationWarning-as-error filter)")
+def _shim_internal(mod: ModuleSource) -> Iterator[Finding]:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qual = mod.resolve(node.func)
+        repl = DEPRECATED_SHIMS.get(qual or "")
+        if repl is not None:
+            yield mod.finding(
+                "shim-internal", node,
+                f"call to deprecated shim {qual} — internal code uses "
+                f"the session API: {repl} (DESIGN.md §2.5)")
+
+
+_HOST_ATTR_CALLS = frozenset({"item", "tolist", "block_until_ready"})
+_HOST_NP_CALLS = frozenset({"numpy.asarray", "numpy.array",
+                            "numpy.asanyarray", "numpy.ascontiguousarray"})
+
+
+@rule("host-in-fold",
+      "no float()/.item()/np.asarray on values inside jit-reachable "
+      "fold/step bodies (host sync breaks tracing and fuses nothing)")
+def _host_in_fold(mod: ModuleSource) -> Iterator[Finding]:
+    for node in mod.walk_fold_bodies():
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Name) and node.func.id == "float" \
+                and node.func.id not in mod.imports:
+            yield mod.finding(
+                "host-in-fold", node,
+                "float() on an in-fold value — forces a host transfer "
+                "under jit (TracerArrayConversionError) or silently "
+                "constant-folds; keep the value a jax array")
+            continue
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _HOST_ATTR_CALLS and not node.args:
+            yield mod.finding(
+                "host-in-fold", node,
+                f".{node.func.attr}() on an in-fold value — host "
+                "materialisation inside a traced fold body")
+            continue
+        qual = mod.resolve(node.func)
+        if qual in _HOST_NP_CALLS:
+            yield mod.finding(
+                "host-in-fold", node,
+                f"{qual} on an in-fold value — numpy conversion inside "
+                "a traced fold body runs on host per trace, not per op; "
+                "use jnp and keep the fold pure")

@@ -1,0 +1,104 @@
+"""``python -m repro.analysis`` — the contract checker CLI.
+
+Runs both layers (AST lints over the source tree, jaxpr invariant
+checks over every registered engine), prints a text or JSON report,
+and exits non-zero on any *error* finding.  ``--baseline`` re-measures
+the per-engine primitive budgets and rewrites ``baseline.json``
+instead of gating on it (commit the result).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import astlint, baseline as _baseline, jaxprs
+from repro.analysis.findings import Finding, render_json, render_text
+
+#: directories (relative to the repo root) the AST layer lints.  Tests
+#: are deliberately excluded: fixtures *must* contain violations.
+SCAN_ROOTS: tuple[str, ...] = ("src/repro", "benchmarks", "examples")
+
+
+def repo_root() -> Path:
+    """The checkout root: src/repro/analysis/cli.py -> three up."""
+    return Path(__file__).resolve().parents[3]
+
+
+def run_analysis(
+        root: Path | None = None, *,
+        run_ast: bool = True,
+        run_jaxpr: bool = True,
+        baseline_path: Path | None = None,
+        update_baseline: bool = False,
+) -> tuple[list[Finding], dict]:
+    """Run the configured layers; return (findings, stats)."""
+    root = Path(root) if root is not None else repo_root()
+    baseline_path = baseline_path or _baseline.DEFAULT_BASELINE
+    findings: list[Finding] = []
+    stats = {"n_files": 0, "n_engine_folds": 0, "root": str(root)}
+
+    if run_ast:
+        paths = [root / sub for sub in SCAN_ROOTS if (root / sub).exists()]
+        ast_findings, n_files = astlint.lint_paths(paths, root=root)
+        findings += ast_findings
+        stats["n_files"] = n_files
+
+    if run_jaxpr:
+        folds, jp_findings = jaxprs.collect_engine_folds()
+        findings += jp_findings
+        findings += jaxprs.check_padding_identity()
+        stats["n_engine_folds"] = sum(1 for f in folds if not f.host)
+        stats["engines"] = sorted({f.engine for f in folds})
+        if update_baseline:
+            doc = _baseline.save_baseline(folds, baseline_path)
+            stats["baseline"] = {"path": str(baseline_path),
+                                 "budgets": doc["budgets"]}
+        else:
+            findings += _baseline.check_budgets(
+                folds, _baseline.load_baseline(baseline_path))
+    return findings, stats
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST lints + jaxpr invariant checks over the "
+                    "repro engine contracts (DESIGN.md §2.9).")
+    parser.add_argument("--check", action="store_true",
+                        help="gate mode (the default behaviour; the "
+                             "flag exists for CI readability)")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable report on stdout")
+    parser.add_argument("--baseline", action="store_true",
+                        help="re-measure primitive budgets and rewrite "
+                             "baseline.json instead of gating on it")
+    parser.add_argument("--baseline-path", type=Path, default=None,
+                        help="alternate baseline.json location")
+    parser.add_argument("--root", type=Path, default=None,
+                        help="repo root to lint (default: this checkout)")
+    parser.add_argument("--no-ast", action="store_true",
+                        help="skip the AST lint layer")
+    parser.add_argument("--no-jaxpr", action="store_true",
+                        help="skip the jaxpr trace layer")
+    args = parser.parse_args(argv)
+
+    findings, stats = run_analysis(
+        args.root,
+        run_ast=not args.no_ast,
+        run_jaxpr=not args.no_jaxpr,
+        baseline_path=args.baseline_path,
+        update_baseline=args.baseline)
+
+    render = render_json if args.json else render_text
+    print(render(findings, n_files=stats["n_files"],
+                 n_engines=stats["n_engine_folds"]))
+    if args.baseline and not args.json:
+        print(f"baseline written: "
+              f"{stats.get('baseline', {}).get('path', '-')}")
+    return 1 if any(f.is_error for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

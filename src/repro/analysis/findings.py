@@ -1,0 +1,68 @@
+"""Finding/report types shared by both analysis layers (DESIGN.md §2.9).
+
+A :class:`Finding` is one violation of an engine contract: AST rules
+emit them with a file/line anchor, jaxpr rules with the engine/fold
+label in place of a path.  Severity is two-valued on purpose —
+``error`` findings fail the CLI (and CI), ``info`` findings are
+advisory (e.g. a primitive-count *improvement* that suggests a baseline
+refresh) and never gate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+SEVERITIES: tuple[str, ...] = ("error", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation (or advisory note)."""
+
+    rule: str          # rule id, e.g. "rng-in-fold" / "jaxpr-dtype"
+    path: str          # file path (AST layer) or engine/fold label
+    line: int          # 1-based line (0 for non-source findings)
+    message: str
+    severity: str = "error"
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r} "
+                             f"(one of {', '.join(SEVERITIES)})")
+
+    @property
+    def is_error(self) -> bool:
+        return self.severity == "error"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.severity}: {self.message}"
+
+
+def render_text(findings: list[Finding], *, n_files: int = 0,
+                n_engines: int = 0) -> str:
+    """Human report: findings sorted by location, then a one-line
+    verdict (the line CI greps when the gate trips)."""
+    lines = [f.format() for f in sorted(
+        findings, key=lambda f: (f.path, f.line, f.rule))]
+    errors = sum(f.is_error for f in findings)
+    infos = len(findings) - errors
+    lines.append(
+        f"repro.analysis: {errors} error(s), {infos} info note(s) "
+        f"across {n_files} file(s), {n_engines} engine fold(s)")
+    return "\n".join(lines)
+
+
+def render_json(findings: list[Finding], *, n_files: int = 0,
+                n_engines: int = 0) -> str:
+    return json.dumps({
+        "errors": sum(f.is_error for f in findings),
+        "infos": sum(not f.is_error for f in findings),
+        "n_files": n_files,
+        "n_engine_folds": n_engines,
+        "findings": [f.to_dict() for f in findings],
+    }, indent=2, sort_keys=True)

@@ -130,7 +130,10 @@ class Engine(Protocol):
     jit-closure cache; engines that declare ``jittable`` use it to keep
     repeated queries compile-free.  Optional capabilities
     (``end_time_batch``, ``steady_channel_end``, ``sweep_steady``) raise
-    :class:`CapabilityError` on the base class."""
+    :class:`CapabilityError` on the base class.  Every engine must also
+    answer ``canonical_folds`` — the traceable canonical-request hook
+    the ``repro.analysis`` jaxpr layer enforces engine contracts through
+    (DESIGN.md §2.9)."""
 
     caps: EngineCaps
 
@@ -277,6 +280,24 @@ def _stacked_table_args(tables: list[OpClassTable]):
                  for f in _TABLE_FIELDS)
 
 
+def _canonical_trace(arrivals: bool = True) -> OpTrace:
+    """The canonical small request the analysis layer traces every
+    engine on (DESIGN.md §2.9): a fixed-seed mixed read/write trace on
+    2 channels x 4 ways.  With ``arrivals=True`` it carries nonzero
+    per-op arrivals *and* reliability surcharges, so the origin row and
+    the ``extra_us`` side-channel are part of the traced fold and the
+    dtype/RNG invariants cover them."""
+    t = _trace.mixed_trace(48, 2, 4, read_fraction=0.5, seed=7)
+    if not arrivals:
+        return t
+    n = t.n_ops
+    return dataclasses.replace(
+        t,
+        arrival_us=np.linspace(0.0, 40.0, n, dtype=np.float32),
+        extra_us=np.where(np.arange(n) % 7 == 0, 3.0, 0.0
+                          ).astype(np.float32))
+
+
 class _EngineBase:
     """Shared defaults: optional capabilities raise ``CapabilityError``
     naming the registered engines that *do* implement them (derived
@@ -324,6 +345,22 @@ class _EngineBase:
         per-op surcharges and the bad-block mask the dispatch rule must
         never place an op on (DESIGN.md §2.8)."""
         self._unsupported("dynamic dispatch policies", "dispatch_run")
+
+    def canonical_folds(self, sim: "Simulator"):
+        """label -> (fn, args): jax-traceable closures evaluating this
+        engine's folds on the canonical request — the hook behind the
+        ``repro.analysis`` jaxpr invariant layer (DESIGN.md §2.9), which
+        statically asserts per fold: no RNG primitives, f32 dtype
+        stability, and a primitive-count budget against the committed
+        baseline.  Pure host-Python engines return ``None`` (the AST
+        layer still lints their source).  Every registered engine MUST
+        override this — the analyzer fails loudly on engines that
+        don't, so a new engine cannot land outside the contract net."""
+        raise NotImplementedError(
+            f"engine {self.caps.name!r} exposes no canonical fold hook "
+            "(repro.analysis traces every registered engine; override "
+            "canonical_folds, returning None only for host-Python "
+            "engines)")
 
 
 @register_engine("scan", heterogeneous=True, batched_tables=True,
@@ -399,6 +436,20 @@ class ScanEngine(_EngineBase):
         return _sim._sweep_scan_jit(*scalars, data_bytes, ways,
                                     n_pages=n_pages, batched=batched)
 
+    def canonical_folds(self, sim):
+        t = _canonical_trace()
+        end = functools.partial(
+            _sim.trace_end_time_masked, *sim._targs,
+            n_channels=t.channels, batched=False)
+        disp = functools.partial(
+            _sim.dispatch_trace, *sim._targs, n_channels=t.channels,
+            n_ways=t.ways, rule="least_loaded")
+        return {
+            "end_time": (end, _padded_trace_args(t, _bucket_len(t.n_ops))),
+            "dispatch": (disp, (jnp.asarray(t.cls, jnp.int32),
+                                jnp.asarray(_op_arrivals(t)))),
+        }
+
 
 @register_engine("prefix", heterogeneous=True, batched_tables=True,
                  energy=True, jittable=True, arrivals=True)
@@ -442,6 +493,14 @@ class PrefixEngine(_EngineBase):
         return _sim.trace_end_time_prefix(
             *table, zeros, zeros, way, parity, arr, ext,
             n_channels=1, n_ways=MAX_WAYS, batched=batched)
+
+    def canonical_folds(self, sim):
+        t = _canonical_trace()
+        fn = functools.partial(
+            _sim.trace_end_time_prefix, *sim._targs,
+            n_channels=t.channels, n_ways=t.ways, batched=False,
+            segment_len=16)
+        return {"end_time": (fn, _trace_args(t))}
 
 
 @register_engine("squaring", heterogeneous=False, batched_tables=False,
@@ -515,6 +574,16 @@ class SquaringEngine(_EngineBase):
         return _sim._sweep_squaring_jit(*scalars, data_bytes, ways,
                                         n_pages=n_pages, batched=batched)
 
+    def canonical_folds(self, sim):
+        # canonical *periodic* domain: one op class, single channel,
+        # 4-way round robin (arrivals/extras break periodicity and are
+        # rejected by this engine, so the canonical request has none)
+        fn = functools.partial(
+            _sim._squaring_end_time,
+            *(sim._targs[i][_trace.READ] for i in range(6)),
+            jnp.asarray(4, jnp.int32), n_pages=64, batched=False)
+        return {"end_time": (fn, ())}
+
 
 @register_engine("pallas", heterogeneous=True, batched_tables=True,
                  energy=True, jittable=False, arrivals=True)
@@ -539,6 +608,11 @@ class PallasEngine(_EngineBase):
         from repro.kernels.maxplus.ops import trace_end_time_maxplus
         return np.asarray(trace_end_time_maxplus(
             list(tables), trace, policy=_policy_name(batched)))
+
+    def canonical_folds(self, sim):
+        from repro.kernels.maxplus.ops import trace_fold_closure
+        return {"end_time": trace_fold_closure(
+            sim.table, _canonical_trace(), policy="eager")}
 
 
 @register_engine("streaming", heterogeneous=True, batched_tables=False,
@@ -612,6 +686,15 @@ class StreamingEngine(_EngineBase):
             batched=batched, want_comp=True)
         return end, np.concatenate(comps)
 
+    def canonical_folds(self, sim):
+        t = _canonical_trace()
+        e_tab = jnp.zeros((sim.table.n_classes, 2, 1), jnp.float32)
+        fn = functools.partial(_sim.trace_chunk_fold, *sim._targs,
+                               n_channels=t.channels, batched=False)
+        args = ((e_tab,) + _padded_trace_args(t, 64)
+                + _carry_args(_sim.trace_chunk_init(t.channels, 1)))
+        return {"chunk_fold": (fn, args)}
+
 
 def _carry_args(carry):
     """Flatten the ``trace_chunk_fold`` carry back into its positional
@@ -642,6 +725,11 @@ class OracleEngine(_EngineBase):
         end, sums = simulate_trace_energy_ref(
             sim.table, trace, kind, _policy_name(batched))
         return float(end), np.asarray(sums, np.float64)
+
+    def canonical_folds(self, sim):
+        # plain-Python event loop: nothing to trace — the AST layer
+        # lints repro.core.sim_ref instead (DESIGN.md §2.9)
+        return None
 
 
 def _op_scalars(op: PageOpParams):
@@ -1156,7 +1244,7 @@ class Simulator:
         policy = policy or self.default_policy
         batched = policy_is_batched(policy)
         name = engine or "scan"
-        eng = get_engine(name)
+        get_engine(name)            # raises on unknown engine names
         traces = list(traces)
         for t in traces:
             if t.n_ops == 0:

@@ -39,7 +39,7 @@ from repro.core import nand as nand_mod
 from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import CellType, NandChipParams
 from repro.core.paper_tables import INTERFACE_ORDER, TABLE3
-from repro.core.sim import PageOpParams, page_op_params
+from repro.core.sim import page_op_params
 
 WAYS = (1, 2, 4, 8, 16)
 

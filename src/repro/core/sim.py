@@ -561,7 +561,7 @@ def trace_chunk_fold(
         k, c, w, par, arr, ext, ok = op
         new = upd(state, (k, c, w, par, arr, ext))
         new = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, state)
-        acc = acc + jnp.where(ok, e_op_uj[k, par % 2], 0.0)
+        acc = acc + jnp.where(ok, e_op_uj[k, par % 2], jnp.float32(0.0))
         return (new, acc), new[1][c, w]           # chip_free[c, w]
 
     ops = _trace_ops(cls, channel, way, parity, arrival_us, extra_us) \
@@ -854,7 +854,8 @@ def _squaring_end_time(
 
     period = 2 * MAX_WAYS
     table = tuple(jnp.reshape(x, (1,)) for x in (
-        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, 0.0))
+        cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us,
+        jnp.float32(0.0)))  # weak 0.0 would x64-promote the gathered table
 
     def block_product(n_ops: int) -> jax.Array:
         i = jnp.arange(n_ops)

@@ -8,7 +8,6 @@ plain ``[B, H, S, D]`` layout; dispatches to the Pallas kernel
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 

@@ -307,7 +307,7 @@ def maxplus_fold_many_kernel(
     return jnp.moveaxis(out, -1, 0)[:b]
 
 
-from repro.core.maxplus_form import NEG  # the one (max,+) -inf sentinel
+from repro.core.maxplus_form import NEG  # noqa: E402  the one (max,+) -inf sentinel
 
 
 @functools.partial(jax.jit, static_argnames=("t_steps", "block_lanes", "interpret"))

@@ -31,6 +31,8 @@ path, so typos raise instead of silently simulating ``eager``.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -200,6 +202,27 @@ def trace_end_time_maxplus(
                          extras=extras, wvec=wvec)
     end = end_time_from_state(np.asarray(final), layout)
     return end[0] if single else end
+
+
+def trace_fold_closure(table, trace, *, policy: str = "eager"):
+    """(fn, args): the jax-traceable core of the trace-indexed kernel
+    path — what the ``repro.analysis`` jaxpr layer traces for the
+    ``pallas`` engine (DESIGN.md §2.9).  The host-side combo-dictionary
+    build happens here, *outside* the returned closure, exactly as in
+    :func:`trace_end_time_maxplus`; the closure itself is the pure
+    ``maxplus_fold`` the registry entry folds per query (interpret
+    mode, so the pallas_call traces off-TPU)."""
+    _, _, idx, mats, s0, arrivals, gvec, extras, wvec = _combo_setup(
+        [table], trace, policy)
+    fold = functools.partial(
+        maxplus_fold, t_steps=trace.n_ops, interpret=True,
+        strategy="sequential", arrivals=arrivals, gvec=gvec,
+        extras=extras, wvec=wvec)
+
+    def fn(mats, s0, idx):
+        return fold(mats, s0, idx=idx)
+
+    return fn, (jnp.asarray(mats), jnp.asarray(s0), jnp.asarray(idx))
 
 
 def run_many_end_time_maxplus(

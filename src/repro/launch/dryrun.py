@@ -32,7 +32,6 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, get_arch
-from repro.configs.base import input_specs
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh, mesh_chip_count
 from repro.launch.steps import lower_cell

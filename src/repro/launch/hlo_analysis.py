@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import math
 import re
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",

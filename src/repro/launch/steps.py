@@ -185,10 +185,14 @@ def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
 
     if shape.kind == "prefill":
         step = make_serve_prefill(cfg, shape.seq_len)
-        in_specs = [ns(param_specs), ns(part.batch_pspecs(cfg, mesh, {"inputs": specs["inputs"]}))["inputs"]]
+        in_specs = [ns(param_specs),
+                    ns(part.batch_pspecs(
+                        cfg, mesh, {"inputs": specs["inputs"]}))["inputs"]]
         args = [params_shape, specs["inputs"]]
         if "position_ids" in specs:
-            in_specs.append(ns(part.batch_pspecs(cfg, mesh, {"position_ids": specs["position_ids"]}))["position_ids"])
+            in_specs.append(ns(part.batch_pspecs(
+                cfg, mesh,
+                {"position_ids": specs["position_ids"]}))["position_ids"])
             args.append(specs["position_ids"])
         cache_shape = jax.eval_shape(
             lambda: init_cache(cfg, shape.global_batch, shape.seq_len))

@@ -52,7 +52,8 @@ def init_rglru_block(key: jax.Array, d: int, spec: RGLRUSpec, dtype=jnp.float32)
         "wx": dense_init(kx, d, r, dtype=dtype),
         "wy": dense_init(ky, d, r, dtype=dtype),
         "wo": dense_init(ko, r, d, dtype=dtype),
-        "conv_w": (0.1 * jax.random.truncated_normal(kc, -2, 2, (spec.conv_width, r))).astype(dtype),
+        "conv_w": (0.1 * jax.random.truncated_normal(
+            kc, -2, 2, (spec.conv_width, r))).astype(dtype),
         "conv_b": jnp.zeros((r,), dtype),
         "a_gate": dense_init(ka, hd, hd, shape=(h, hd, hd), dtype=dtype),
         "a_bias": jnp.zeros((r,), dtype),
@@ -73,10 +74,12 @@ def _blockdiag(x: jax.Array, w: jax.Array, b: jax.Array, n_heads: int) -> jax.Ar
 def _gates(p: Params, spec: RGLRUSpec, x: jax.Array):
     """fp32 (log_a, beta·i·x) for the recurrence; x: [..., R]."""
     xf = x.astype(jnp.float32)
-    r_gate = jax.nn.sigmoid(
-        _blockdiag(xf, p["a_gate"].astype(jnp.float32), p["a_bias"].astype(jnp.float32), spec.n_heads))
-    i_gate = jax.nn.sigmoid(
-        _blockdiag(xf, p["x_gate"].astype(jnp.float32), p["x_bias"].astype(jnp.float32), spec.n_heads))
+    r_gate = jax.nn.sigmoid(_blockdiag(
+        xf, p["a_gate"].astype(jnp.float32),
+        p["a_bias"].astype(jnp.float32), spec.n_heads))
+    i_gate = jax.nn.sigmoid(_blockdiag(
+        xf, p["x_gate"].astype(jnp.float32),
+        p["x_bias"].astype(jnp.float32), spec.n_heads))
     log_a = -RGLRU_C * jax.nn.softplus(p["lambda"]) * r_gate
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
     return log_a, beta * i_gate * xf

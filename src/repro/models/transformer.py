@@ -22,9 +22,6 @@ completely mesh-agnostic.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -141,7 +138,8 @@ def _init_layer(cfg: ModelConfig, spec: LayerSpec, key: jax.Array) -> Params:
     k1, k2, k3 = jax.random.split(key, 3)
     p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model, jnp.float32)}
     if spec.mixer == "attn":
-        p["mixer"] = attn_mod.init_attention(k1, cfg.d_model, cfg.attn_spec(spec.window), cfg.pdtype)
+        p["mixer"] = attn_mod.init_attention(
+            k1, cfg.d_model, cfg.attn_spec(spec.window), cfg.pdtype)
     elif spec.mixer == "rglru":
         p["mixer"] = rglru_mod.init_rglru_block(k1, cfg.d_model, cfg.rglru, cfg.pdtype)
     elif spec.mixer == "mlstm":

@@ -169,7 +169,8 @@ def init_mlstm_block(key: jax.Array, d: int, spec: MLSTMSpec, dtype=jnp.float32)
     return {
         "w_up_v": dense_init(ks[0], d, di, dtype=dtype),
         "w_up_g": dense_init(ks[1], d, di, dtype=dtype),
-        "conv_w": (0.1 * jax.random.truncated_normal(ks[2], -2, 2, (spec.conv_width, di))).astype(dtype),
+        "conv_w": (0.1 * jax.random.truncated_normal(
+            ks[2], -2, 2, (spec.conv_width, di))).astype(dtype),
         "conv_b": jnp.zeros((di,), dtype),
         # per-head block-diagonal q/k/v maps (keeps the 350M budget; the
         # matrix memory mixes within heads only, as in the paper's cell)
@@ -256,7 +257,8 @@ def init_slstm_block(key: jax.Array, d: int, spec: SLSTMSpec, dtype=jnp.float32)
     ks = jax.random.split(key, 12)
     h, hd = spec.n_heads, spec.head_dim
     p: Params = {
-        "conv_w": (0.1 * jax.random.truncated_normal(ks[0], -2, 2, (spec.conv_width, d))).astype(dtype),
+        "conv_w": (0.1 * jax.random.truncated_normal(
+            ks[0], -2, 2, (spec.conv_width, d))).astype(dtype),
         "conv_b": jnp.zeros((d,), dtype),
         "gn_scale": jnp.ones((d,), jnp.float32),
     }

@@ -20,8 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import (ModelConfig, decode_step, init_cache,
-                                      prefill)
+from repro.models.transformer import ModelConfig, decode_step, prefill
 from repro.serve.sampler import SamplerConfig, sample
 
 

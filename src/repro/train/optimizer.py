@@ -120,7 +120,8 @@ def adamw_update(
         return new_master.astype(p.dtype), _store_moment(mf, md), \
             _store_moment(vf, md), new_master
 
-    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    def is_q(x):
+        return isinstance(x, dict) and set(x) == {"q", "scale"}
     masters = state.get("master") or jax.tree.map(lambda p: None, params)
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = tdef.flatten_up_to(grads)

@@ -231,7 +231,6 @@ def test_all_engines_agree_through_simulator(policy):
         end_ref, sums = simulate_trace_energy_ref(sim.table, trace,
                                                   cfg.interface, policy)
         tol = 1e-3 * trace.n_ops + 1e-5 * end_ref
-        ctrl_ref = None
         for name, caps in api.engine_capabilities().items():
             t = trace
             if not caps.heterogeneous:   # squaring: periodic domain

@@ -18,7 +18,7 @@ from repro.core.sim_ref import (simulate_channel_ref,
                                 simulate_trace_ref)
 from repro.kernels.maxplus.ops import (channel_end_time_maxplus,
                                        trace_end_time_maxplus)
-from repro.kernels.maxplus.ref import maxplus_fold_ref, maxplus_product_ref
+from repro.kernels.maxplus.ref import maxplus_product_ref
 
 
 def _tol(ref_us, n_ops):
@@ -76,7 +76,6 @@ def test_squaring_matches_scan_and_oracle(ways, policy):
 def test_scalar_prefetch_kernel_path():
     """The trace-indexed Pallas path (SMEM scalar prefetch) agrees with
     the jnp sequential reference on a batched heterogeneous fold."""
-    cfg = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
     trace = tr.mixed_trace(160, 2, 4, read_fraction=0.5, seed=5)
     tables = [tr.op_class_table(SSDConfig(interface=k, cell=c,
                                           channels=2, ways=4))

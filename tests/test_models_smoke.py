@@ -8,7 +8,7 @@ import pytest
 from repro.configs import ARCH_IDS, get_arch, smoke_batch
 from repro.launch.steps import make_train_step
 from repro.models.transformer import (decode_step, forward, init_params,
-                                      loss_fn, prefill)
+                                      prefill)
 from repro.train.optimizer import OptConfig, adamw_init
 
 

@@ -2,7 +2,6 @@
 (AbstractMesh: no devices needed)."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 

@@ -1,8 +1,6 @@
 """Equivalence of the three simulator engines + structural properties."""
 
-import math
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="property suite needs hypothesis "
@@ -12,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.interface import InterfaceKind, make_interface
 from repro.core.nand import CellType, chip
 from repro.core.sim import (PageOpParams, channel_bandwidth_mb_s,
-                            page_op_params, saturation_ways, steady_state_mb_s)
+                            page_op_params, saturation_ways)
 from repro.core.sim_ref import bandwidth_ref_mb_s, simulate_channel_ref
 from repro.kernels.maxplus.ops import channel_end_time_maxplus
 

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.energy import energy_nj_per_byte
-from repro.core.interface import InterfaceKind, make_interface
+from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.paper_tables import CLAIMS, INTERFACE_ORDER, TABLE3, TABLE4, TABLE5
 from repro.core.sim import SSDConfig, ssd_bandwidth_mb_s

@@ -10,9 +10,8 @@ from repro.configs import get_arch
 from repro.core.interface import InterfaceKind
 from repro.core.sim import SSDConfig
 from repro.storage.checkpoint import CheckpointEngine
-from repro.storage.datapipe import (FileBackedTokens, PipeState,
-                                    StripedTokenStore, SyntheticTokens,
-                                    pipeline_io_trace)
+from repro.storage.datapipe import (FileBackedTokens, StripedTokenStore,
+                                    SyntheticTokens, pipeline_io_trace)
 from repro.storage.kvoffload import plan_kv_offload
 from repro.storage.ssd_model import compare_interfaces, estimate_io, plan_geometry
 
@@ -57,7 +56,8 @@ def test_checkpoint_modeled_ssd_stall(tmp_path):
 def test_synthetic_pipeline_deterministic_resume():
     a = SyntheticTokens(1000, batch=2, seq=8, seed=1)
     it = iter(a)
-    batches = [next(it) for _ in range(5)]
+    for _ in range(5):
+        next(it)                    # advance past the first five batches
     st = a.state()
     more = [next(it) for _ in range(2)]
     b = SyntheticTokens(1000, batch=2, seq=8, seed=1)

@@ -1,6 +1,5 @@
 """Paper §4.3/§5.2 closed-form timing equations."""
 
-import math
 
 import pytest
 

@@ -17,7 +17,6 @@ from repro.core.nand import CellType
 from repro.core.sim import SSDConfig, dispatch_trace
 from repro.core.sim_ref import (simulate_trace_completions_ref,
                                 simulate_trace_ref)
-from repro.kernels.maxplus.ops import trace_end_time_maxplus
 
 
 def _tol(ref_us, n_ops):
