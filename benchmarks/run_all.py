@@ -13,7 +13,9 @@ engine and **fails on engine disagreement** — on end times (the
 phase-resolved Table 5 / mixed-trace energy totals (the matching
 asserts in ``tables.run_table5`` and ``sweep_bench.run_mixed``), and
 on the fleet-scale paths (``scale_bench``: streaming vs oracle,
-megakernel vs scan, sharded sweep == vmap) — and, in a full
+megakernel vs scan, sharded sweep == vmap), and on the FTL stage
+(``ftl_bench``: greedy WAF vs the analytic fixed point, the aging
+bandwidth cliff, GC-translated engine agreement) — and, in a full
 (non-smoke) run only, on a log-depth speedup < 1, a megakernel
 speedup < 2x, or a non-constant-memory streaming fold.
 """
@@ -106,8 +108,9 @@ def main() -> None:
 
     import jax
 
-    from benchmarks import (api_bench, freq, reliability_bench, roofline,
-                            scale_bench, sched_bench, sweep_bench, tables)
+    from benchmarks import (api_bench, freq, ftl_bench, reliability_bench,
+                            roofline, scale_bench, sched_bench, sweep_bench,
+                            tables)
 
     t0 = time.perf_counter()
     sections = [
@@ -137,6 +140,11 @@ def main() -> None:
         # unhedged under the frozen retry-storm seed, p99 monotone in wear
         _section("reliability",
                  lambda: reliability_bench.run(small=args.smoke)),
+        # FTL aging + garbage collection (DESIGN.md §2.10); gates (smoke
+        # too): greedy WAF within 10% of the analytic fixed point at
+        # every overprovisioning ratio, aged < fresh bandwidth whenever
+        # GC ran, GC-translated cross-engine agreement < 1e-3
+        _section("ftl", lambda: ftl_bench.run(small=args.smoke)),
     ]
     _check_speedups(sections, args.smoke)
 

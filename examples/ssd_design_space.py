@@ -102,6 +102,33 @@ def main():
         print(f"  QD={qd:2d}: p50 {res.p50_us:7.1f} us   "
               f"p99 {res.p99_us:7.1f} us   {res.mb_s:6.1f} MB/s")
 
+    print("\n== aging as a design axis: overprovisioning x GC policy ==")
+    print("   (FTL stage, DESIGN.md §2.10: steady-state WAF and the")
+    print("    fresh-vs-aged bandwidth cliff; overprovisioning trades")
+    print("    usable capacity for sustained write bandwidth, the victim")
+    print("    policy trades firmware complexity for WAF under skew)")
+    from repro.api import FTLSpec, aging_stream, analytic_waf
+    sim = Simulator.for_config(SSDConfig(cell=CellType.MLC, channels=2,
+                                         ways=8))
+    aged = None
+    for op in (0.12, 0.25, 0.5):
+        row = []
+        for policy in ("greedy", "lru"):
+            spec = FTLSpec(blocks=128, pages_per_block=32,
+                           overprovision=op, gc_policy=policy,
+                           precondition=True)
+            aged = sim.run(aging_stream(6000,
+                                        int(spec.logical_pages * 0.95),
+                                        hot_fraction=0.2, hot_traffic=0.8,
+                                        seed=11),
+                           ftl=spec)
+            row.append(f"{policy}: WAF {aged.waf:4.2f} "
+                       f"{aged.mb_s:5.1f} MB/s")
+        print(f"  OP {op:4.2f} (uniform analytic WAF "
+              f"{analytic_waf(1.0 / (1.0 + op)):4.2f}) : " + "   ".join(row))
+    print(f"  fresh-drive reference (OP 0.50): {aged.fresh_mb_s:5.1f} MB/s"
+          f" -> the cliff is {aged.mb_s / aged.fresh_mb_s:4.2f}x")
+
     print("\n== checkpoint-stall planning: 2.7B params (minicpm), bf16+opt ==")
     print("   (MLC tier first; fall back to an SLC tier when contention-")
     print("    limited MLC writes cannot meet the stall budget)")

@@ -27,9 +27,18 @@ Reliability and tail latency (DESIGN.md §2.8)::
     res = sim.run(load, faults=worn)            # retries, remaps, hedges
     print(res.p99_9_us, res.n_remap_ops, res.retry_hist)
 
+Aging and garbage collection (the FTL stage, DESIGN.md §2.10)::
+
+    from repro.api import FTLSpec, overwrite_stream
+
+    aged = sim.run(overwrite_stream(4096, footprint_pages=2048),
+                   ftl=FTLSpec(overprovision=0.25, precondition=True))
+    print(aged.waf, aged.mb_s, aged.fresh_mb_s)    # steady vs fresh
+
 See DESIGN.md §2.5 for the request/response model, the engine registry
 and the cache keying; §2.6 for workloads and scheduling policies; §2.8
-for the fault model and its determinism contract.
+for the fault model and its determinism contract; §2.10 for the FTL
+translation stage, WAF accounting and the GC policy registry.
 """
 
 from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
@@ -41,19 +50,24 @@ from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
                             sweep_steady_bandwidth_mb_s, sweep_tables)
 from repro.core.energy import EnergyBreakdown
 from repro.core.faults import FaultSampler, FaultSpec
+from repro.core.ftl import (FTLSpec, FTLStats, FTLTranslation, FTL_LABELS,
+                            GC_POLICIES, analytic_waf, ftl_op_class_table,
+                            select_victim)
+from repro.core.ftl import translate as ftl_translate
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sched import (DYNAMIC_POLICIES, LoweredWorkload,
                               SCHED_POLICIES, STATIC_POLICIES, apply_faults,
-                              lower_static, policy_is_dynamic)
+                              lower_ops, lower_static, policy_is_dynamic)
 from repro.core.sim import PageOpParams, SSDConfig
 from repro.core.trace import (OpClassTable, OpTrace, READ, WRITE,
                               op_class_table, workload_trace)
-from repro.core.workload import (RequestStream, build_workload,
+from repro.core.workload import (RequestStream, aging_stream, build_workload,
                                  bursty_stream, checkpoint_requests,
                                  closed_loop_stream, datapipe_requests,
                                  kvoffload_requests, multi_tenant,
-                                 poisson_stream, with_hedges)
+                                 overwrite_stream, poisson_stream,
+                                 request_lpns, with_hedges)
 
 __all__ = [
     # the session API proper
@@ -68,9 +82,14 @@ __all__ = [
     "SCHED_POLICIES", "STATIC_POLICIES", "build_workload", "bursty_stream",
     "checkpoint_requests", "closed_loop_stream", "datapipe_requests",
     "kvoffload_requests", "lower_static", "multi_tenant",
-    "policy_is_dynamic", "poisson_stream",
+    "policy_is_dynamic", "poisson_stream", "aging_stream",
+    "overwrite_stream", "request_lpns",
     # the reliability layer (DESIGN.md §2.8)
     "FaultSampler", "FaultSpec", "apply_faults", "with_hedges",
+    # the FTL stage (DESIGN.md §2.10)
+    "FTLSpec", "FTLStats", "FTLTranslation", "FTL_LABELS", "GC_POLICIES",
+    "analytic_waf", "ftl_op_class_table", "ftl_translate", "lower_ops",
+    "select_victim",
     # the types a request/result is made of
     "CellType", "EnergyBreakdown", "InterfaceKind", "OpClassTable",
     "OpTrace", "PageOpParams", "READ", "SSDConfig", "WRITE",

@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ftl as _ftl
 from repro.core import sched as _sched
 from repro.core import sim as _sim
 from repro.core import trace as _trace
@@ -115,10 +116,11 @@ class EngineCaps:
     jittable: bool        # pure-jax: Simulator caches jitted closures
     arrivals: bool = False  # arrival-aware traces (request workloads)
     dispatch: bool = False  # joint dispatch+simulate (dynamic sched policies)
+    ftl: bool = False       # FTL-translated streams (GC/erase op classes)
 
     def describe(self) -> str:
         flags = [k for k in ("heterogeneous", "batched_tables", "energy",
-                             "jittable", "arrivals", "dispatch")
+                             "jittable", "arrivals", "dispatch", "ftl")
                  if getattr(self, k)]
         return f"{self.name}: {', '.join(flags) or 'none'}"
 
@@ -150,7 +152,7 @@ _REGISTRY: dict[str, Engine] = {}
 
 def register_engine(name: str, *, heterogeneous: bool, batched_tables: bool,
                     energy: bool, jittable: bool, arrivals: bool = False,
-                    dispatch: bool = False):
+                    dispatch: bool = False, ftl: bool = False):
     """Class decorator: instantiate and register an engine under ``name``
     with its declared capability row.  Names are unique."""
 
@@ -161,7 +163,7 @@ def register_engine(name: str, *, heterogeneous: bool, batched_tables: bool,
         inst.caps = EngineCaps(name=name, heterogeneous=heterogeneous,
                                batched_tables=batched_tables, energy=energy,
                                jittable=jittable, arrivals=arrivals,
-                               dispatch=dispatch)
+                               dispatch=dispatch, ftl=ftl)
         _REGISTRY[name] = inst
         return cls
 
@@ -364,7 +366,8 @@ class _EngineBase:
 
 
 @register_engine("scan", heterogeneous=True, batched_tables=True,
-                 energy=True, jittable=True, arrivals=True, dispatch=True)
+                 energy=True, jittable=True, arrivals=True, dispatch=True,
+                 ftl=True)
 class ScanEngine(_EngineBase):
     """O(T) ``lax.scan`` fold (DESIGN.md §2.2) — the default engine.
     Session queries run the masked fold padded to length buckets, so
@@ -444,15 +447,35 @@ class ScanEngine(_EngineBase):
         disp = functools.partial(
             _sim.dispatch_trace, *sim._targs, n_channels=t.channels,
             n_ways=t.ways, rule="least_loaded")
-        return {
+        folds = {
             "end_time": (end, _padded_trace_args(t, _bucket_len(t.n_ops))),
             "dispatch": (disp, (jnp.asarray(t.cls, jnp.int32),
                                 jnp.asarray(_op_arrivals(t)))),
         }
+        if sim.config is not None:
+            # the FTL stage (DESIGN.md §2.10) reuses this same fold over
+            # the extended 7-class table: trace a small deterministic
+            # GC-injected stream so the invariant net covers it
+            spec = _ftl.FTLSpec(blocks=8, pages_per_block=8,
+                                overprovision=0.5)
+            ftab = _ftl.ftl_op_class_table(sim.config, spec)
+            ftargs = tuple(jnp.asarray(getattr(ftab, f))
+                           for f in _TABLE_FIELDS)
+            tr = _ftl.translate(
+                _workload.overwrite_stream(48, 24, seed=3), spec)
+            ft = _sched.lower_ops(tr.op_cls, tr.arrival_us,
+                                  sim.config.channels, sim.config.ways,
+                                  payload=tr.payload)
+            fend = functools.partial(
+                _sim.trace_end_time_masked, *ftargs,
+                n_channels=ft.channels, batched=False)
+            folds["ftl_end_time"] = (
+                fend, _padded_trace_args(ft, _bucket_len(ft.n_ops)))
+        return folds
 
 
 @register_engine("prefix", heterogeneous=True, batched_tables=True,
-                 energy=True, jittable=True, arrivals=True)
+                 energy=True, jittable=True, arrivals=True, ftl=True)
 class PrefixEngine(_EngineBase):
     """Segmented parallel-prefix (max,+) fold, O(L + log T) depth
     (DESIGN.md §2.3); energy rides the same chunking as segment sums."""
@@ -586,7 +609,7 @@ class SquaringEngine(_EngineBase):
 
 
 @register_engine("pallas", heterogeneous=True, batched_tables=True,
-                 energy=True, jittable=False, arrivals=True)
+                 energy=True, jittable=False, arrivals=True, ftl=True)
 class PallasEngine(_EngineBase):
     """The (max,+) Pallas matrix-fold kernel (TPU-native; interpret on
     CPU).  The step-matrix dictionary is built host-side per query, so
@@ -616,7 +639,7 @@ class PallasEngine(_EngineBase):
 
 
 @register_engine("streaming", heterogeneous=True, batched_tables=False,
-                 energy=True, jittable=True, arrivals=True)
+                 energy=True, jittable=True, arrivals=True, ftl=True)
 class StreamingEngine(_EngineBase):
     """Constant-memory chunked fold (DESIGN.md §2.7): the trace streams
     through ``sim.trace_chunk_fold`` in fixed-size masked chunks, with
@@ -704,7 +727,7 @@ def _carry_args(carry):
 
 
 @register_engine("oracle", heterogeneous=True, batched_tables=False,
-                 energy=True, jittable=False, arrivals=True)
+                 energy=True, jittable=False, arrivals=True, ftl=True)
 class OracleEngine(_EngineBase):
     """The plain-Python event loop (``repro.core.sim_ref``) — the test
     oracle, now first-class behind the same request surface."""
@@ -765,7 +788,16 @@ class SimRequest:
     On workload queries a spec with ``hedge_fraction > 0`` also hedges
     the stream (``workload.with_hedges``) before lowering; a bare-trace
     query has no requests to hedge, so only the per-op fault channel
-    applies."""
+    applies.
+
+    ``ftl`` attaches a :class:`repro.core.ftl.FTLSpec` (DESIGN.md
+    §2.10): the workload's logical addresses run through the L2P map
+    first, GC relocation and erase ops are injected into the stream,
+    and the translated stream lowers through the same scheduler and
+    engines as everything else — the result additionally reports
+    ``waf`` / ``gc_op_count`` / ``free_page_low_watermark`` /
+    ``fresh_mb_s``.  FTL queries need the ``ftl`` capability (the
+    translated stream uses the extended 7-class op table)."""
 
     trace: OpTrace | None = None
     policy: Policy | None = None        # None -> the session's default
@@ -775,11 +807,20 @@ class SimRequest:
     workload: RequestStream | None = None
     sched_policy: str | None = None     # None -> "stripe" (workload only)
     faults: FaultSpec | None = None     # None -> fault-free
+    ftl: "_ftl.FTLSpec | None" = None   # None -> address-free (no FTL)
 
     def __post_init__(self):
         if (self.trace is None) == (self.workload is None):
             raise ValueError("SimRequest needs exactly one of trace= or "
                              "workload=")
+        if self.ftl is not None:
+            if self.workload is None:
+                raise ValueError(
+                    "ftl= applies to workload requests (a placed trace "
+                    "has no logical addresses left to translate)")
+            if not isinstance(self.ftl, _ftl.FTLSpec):
+                raise ValueError(
+                    f"ftl= takes an FTLSpec, got {type(self.ftl).__name__}")
         if self.sched_policy is not None:
             if self.workload is None:
                 raise ValueError("sched_policy applies to workload "
@@ -834,6 +875,15 @@ class SimResult:
     sched_policy: str | None = None            # workload queries only
     retry_hist: np.ndarray | None = None       # [max_retries+1] counts
     n_remap_ops: int = 0                       # program-fault remap writes
+    # FTL queries only (DESIGN.md §2.10): write amplification, injected
+    # GC traffic, the free-pool low watermark, and the fresh-drive
+    # bandwidth of the same host stream (mb_s is the aged/steady-state
+    # number once GC competes for the bus)
+    waf: float | None = None                   # pages written / host pages
+    gc_op_count: int | None = None             # GC reads + writes + erases
+    free_page_low_watermark: int | None = None
+    fresh_mb_s: float | None = None            # host-only (GC-free) MB/s
+    ftl_stats: "_ftl.FTLStats | None" = None   # full FTL counter block
 
     @property
     def channel_occupancy(self) -> np.ndarray:
@@ -880,8 +930,10 @@ class SimResult:
         bw = f"{self.mb_s:.1f} MB/s" if self.mb_s is not None else "no payload"
         lat = ("" if self.request_lat_us is None else
                f", p50/p99 {self.p50_us:.0f}/{self.p99_us:.0f} us")
+        ftl = ("" if self.waf is None else
+               f", WAF {self.waf:.2f} ({self.gc_op_count} GC ops)")
         return (f"[{self.engine}] {self.n_ops} ops in "
-                f"{self.end_us / 1e3:.2f} ms, {bw}, occ {occ}{lat}")
+                f"{self.end_us / 1e3:.2f} ms, {bw}, occ {occ}{lat}{ftl}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -934,6 +986,7 @@ class Simulator:
         self._e_tables: dict[InterfaceKind, jax.Array] = {}
         self._e_tables_np: dict[InterfaceKind, np.ndarray] = {}
         self.max_cache_entries = max_cache_entries
+        self._ftl_sessions: dict[tuple, "Simulator"] = {}
         self._closures: collections.OrderedDict[tuple, object] = \
             collections.OrderedDict()
         self._hits = 0
@@ -1028,6 +1081,12 @@ class Simulator:
             raise CapabilityError(
                 f"engine {eng.caps.name!r} cannot consume fault-extended "
                 f"traces (engines that can: {okay})")
+        if request.ftl is not None and not eng.caps.ftl:
+            okay = ", ".join(n for n in registered_engines()
+                             if _REGISTRY[n].caps.ftl)
+            raise CapabilityError(
+                f"engine {eng.caps.name!r} cannot consume FTL-translated "
+                f"streams (engines that can: {okay})")
         return eng, batched
 
     def _result(self, trace: OpTrace, end_us: float, engine: str,
@@ -1094,6 +1153,148 @@ class Simulator:
         return self._result(trace, end_us, eng.caps.name, energy,
                             sampler=sampler)
 
+    def _ftl_session(self, spec: "_ftl.FTLSpec") -> "Simulator":
+        """Memoised sibling session over the 7-class FTL op table
+        (DESIGN.md §2.10) — keyed on the fields that shape the table, so
+        GC-policy / overprovisioning sweeps at fixed timing share one
+        session's jitted closures."""
+        key = (float(spec.map_us),
+               None if spec.erase_us is None else float(spec.erase_us))
+        sess = self._ftl_sessions.get(key)
+        if sess is None:
+            sess = self._ftl_sessions[key] = Simulator(
+                self.config,
+                table=_ftl.ftl_op_class_table(self.config, spec),
+                max_cache_entries=self.max_cache_entries)
+        return sess
+
+    def _run_workload_ftl(self, request: SimRequest) -> SimResult:
+        """FTL workload queries (DESIGN.md §2.10): the host stream runs
+        through the L2P translation stage first — GC relocation and
+        erase ops are injected on free-pool pressure and every op gets
+        an FTL op class carrying the firmware map cost — then the
+        translated stream lowers through the same scheduler / engine
+        machinery as any other workload (all ops, GC included, compete
+        for placement slots and bus time).  A second host-only pass over
+        the same translation prices the fresh-drive bandwidth, so the
+        aged-vs-fresh cliff is part of the one answer.
+
+        Block-level program/erase failures are *owned by the FTL
+        accounting* (bad blocks retire through the same valid-count
+        bookkeeping GC uses); the fault sampler here only prices the
+        per-op retry/jitter surcharges, against a read/write view of the
+        translated classes."""
+        spec = request.ftl
+        stream = request.workload
+        fspec = request.faults
+        if fspec is not None and fspec.hedge_fraction > 0.0:
+            stream = _workload.with_hedges(
+                stream, fspec.hedge_fraction,
+                after_us=fspec.hedge_after_us or 0.0, seed=fspec.seed)
+        sess = self._ftl_session(spec)
+        eng, batched = sess._resolve(request)
+        policy_s = request.sched_policy or "stripe"
+        dynamic = _sched.policy_is_dynamic(policy_s)
+        if dynamic and batched:
+            raise ValueError(
+                "dynamic dispatch is FCFS under the eager issue "
+                "policy; 'batched' rounds are fixed at build time "
+                "and only exist for static lowerings")
+        channels, ways = self.config.channels, self.config.ways
+        translation = _ftl.translate(
+            stream, spec,
+            prog_fail_prob=0.0 if fspec is None else fspec.prog_fail_prob,
+            erase_fail_prob=0.0 if fspec is None else fspec.erase_fail_prob,
+            fault_seed=0 if fspec is None else fspec.seed)
+        extra = None
+        sampler = None
+        if fspec is not None:
+            # block-level failures were consumed by translate() above;
+            # the per-op channel prices retries/jitter on a host-class
+            # view of the translated stream (GC reads retry like reads)
+            neutered = dataclasses.replace(
+                fspec, prog_fail_prob=0.0, erase_fail_prob=0.0)
+            if not neutered.is_zero:
+                sampler = FaultSampler(neutered, channels, ways, sess.table)
+                cls_view = np.where(
+                    np.isin(translation.op_cls,
+                            (_ftl.FTL_READ, _ftl.GC_READ)),
+                    _trace.READ, _trace.WRITE).astype(np.int32)
+                extra, _, _ = sampler.sample(cls_view)
+
+        def evaluate(mask=None, want_comp=False):
+            cls = translation.op_cls
+            arr = translation.arrival_us
+            pay = translation.payload
+            ext = extra
+            if mask is not None:
+                cls, arr, pay = cls[mask], arr[mask], pay[mask]
+                ext = None if ext is None else ext[mask]
+            if dynamic:
+                end, comp, chan, way, par = eng.dispatch_run(
+                    sess, cls, arr, n_channels=channels, n_ways=ways,
+                    rule=policy_s, extra_us=ext, retired=None)
+                tr = OpTrace(
+                    cls=np.asarray(cls, np.int32), channel=chan, way=way,
+                    parity=par, channels=channels, ways=ways,
+                    payload=None if pay.all() else pay,
+                    arrival_us=np.asarray(arr, np.float32),
+                    extra_us=(None if ext is None
+                              else np.asarray(ext, np.float32)))
+                return tr, end, comp
+            tr = _sched.lower_ops(cls, arr, channels, ways, policy_s,
+                                  payload=pay)
+            if ext is not None:
+                tr = dataclasses.replace(
+                    tr, extra_us=np.asarray(ext, np.float32))
+            tr.validate_against(sess.table)
+            base = getattr(_EngineBase, "completions")
+            if want_comp and getattr(type(eng), "completions",
+                                     base) is not base:
+                end, comp = eng.completions(
+                    sess, tr, batched=batched,
+                    segment_len=request.segment_len)
+                return tr, end, comp
+            end = eng.end_time(sess, tr, batched=batched,
+                               segment_len=request.segment_len)
+            return tr, end, None
+
+        trace, end_us, comp = evaluate(want_comp=True)
+        lat = None
+        if comp is not None:
+            # GC ops belong to no request (request_id -1): latency
+            # accounting sees host ops only — but over the *aged*
+            # completion times, so GC queueing is in the tail
+            host = translation.request_id >= 0
+            lowered = LoweredWorkload(
+                trace=trace, request_id=translation.request_id[host],
+                request_arrival_us=np.asarray(stream.arrival_us,
+                                              np.float32))
+            lat = _payload_latencies(lowered, np.asarray(comp)[host],
+                                     stream)
+        energy = None
+        if request.objective in ("energy", "all"):
+            # energy is (+,+)-linear, so the engine-free per-op sum is
+            # exact for the translated trace too (DESIGN.md §2.4)
+            energy = sess._breakdown(
+                sess._linear_energy_sums(trace, sess.kind), end_us, trace)
+        fresh_mb_s = None
+        if bool(translation.gc.any()):
+            # fresh-drive reference: the host ops alone (map cost still
+            # charged — FTL classes are kept), no GC competition
+            _, fresh_end, _ = evaluate(mask=~translation.gc)
+            fresh_payload = trace.total_bytes(sess.table)
+            if fresh_payload > 0:
+                fresh_mb_s = fresh_payload / fresh_end
+        stats = translation.stats
+        res = sess._result(trace, end_us, eng.caps.name, energy,
+                           request_lat_us=lat, sched_policy=policy_s,
+                           sampler=sampler)
+        return dataclasses.replace(
+            res, waf=stats.waf, gc_op_count=stats.gc_op_count,
+            free_page_low_watermark=stats.free_page_low_watermark,
+            fresh_mb_s=fresh_mb_s, ftl_stats=stats)
+
     def _run_workload(self, request: SimRequest) -> SimResult:
         """Workload queries: lower the request stream through the
         scheduler (static policies offline, dynamic policies as the
@@ -1106,6 +1307,8 @@ class Simulator:
         stream = request.workload
         if stream.n_requests == 0:
             raise ValueError("empty workload: no requests to simulate")
+        if request.ftl is not None:
+            return self._run_workload_ftl(request)
         if int(np.max(stream.op_cls)) >= self.table.n_classes:
             # checked before the dispatch fold runs: a clamped-garbage
             # simulation followed by a numpy IndexError is not a report

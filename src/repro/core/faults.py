@@ -33,6 +33,15 @@ chunked == one-shot exactly.
 
 This module deliberately imports nothing from ``repro.core.trace`` or
 ``repro.core.sched`` (both consume it); it works on raw NumPy arrays.
+
+On FTL-translated streams (DESIGN.md §2.10) the ownership splits:
+``repro.core.ftl.translate`` owns *block-level* program/erase failure
+and bad-block retirement (its own PCG64 stream, disjoint from this
+sampler's), because retirement must feed back into the allocator that
+chooses the next frontier block.  The query layer then runs this
+sampler with those probabilities zeroed, on a READ/WRITE *class view*
+of the 7-class op stream, so per-op retry and jitter surcharges still
+price host and GC traffic alike.
 """
 
 from __future__ import annotations

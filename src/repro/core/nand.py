@@ -39,6 +39,8 @@ class NandChipParams:
                               # at the interface clock, so the DDR interface
                               # polls proportionally faster)
     t_byte_ns: float = 12.0   # page register <-> latch transfer time [28]
+    t_bers_us: float = 1500.0  # block erase time (t_BERS) — consumed by the
+                               # FTL stage's ERASE op class (DESIGN.md §2.10)
 
     @property
     def page_total_bytes(self) -> int:
@@ -71,6 +73,7 @@ MLC = NandChipParams(
     t_prog_lo_us=200.0,
     t_prog_hi_us=1500.0,
     t_poll_cycles=65.0,
+    t_bers_us=2000.0,
 )
 
 CHIPS = {CellType.SLC: SLC, CellType.MLC: MLC}

@@ -145,6 +145,42 @@ def lower_static(stream: RequestStream, channels: int, ways: int,
         request_arrival_us=np.asarray(stream.arrival_us, np.float32))
 
 
+def lower_ops(cls, arrival_us, channels: int, ways: int,
+              policy: str = "stripe", payload=None) -> OpTrace:
+    """Lower an already-expanded *op* stream (per-op class/arrival
+    arrays) to a placed ``OpTrace`` under a static policy.
+
+    This is the lowering the FTL stage uses (DESIGN.md §2.10): its
+    translated stream interleaves host ops with GC relocation ops, and
+    every op — payload or not — advances the placement slot, so GC
+    traffic competes with host traffic for channels and ways exactly
+    like the dynamic dispatch fold makes it compete for occupancy.
+    (``lower_static`` differs deliberately: there, non-payload ops are
+    hedged *duplicates* that mirror their primary's placement instead
+    of consuming a slot.)"""
+    if policy_is_dynamic(policy):
+        raise ValueError(
+            f"sched policy {policy!r} is dynamic — it cannot be lowered "
+            "offline; run it through Simulator.run(workload=...) / "
+            "sim.dispatch_trace (engines with the 'dispatch' capability)")
+    cls = np.asarray(cls, np.int32)
+    arrival = np.asarray(arrival_us, np.float32)
+    slots = np.arange(len(cls))
+    if policy == "stripe":
+        chan = slots % channels
+        way = (slots // channels) % ways
+    else:                                           # "round_robin": way-first
+        way = slots % ways
+        chan = (slots // ways) % channels
+    if payload is not None:
+        payload = np.asarray(payload, bool)
+        if payload.all():
+            payload = None
+    return dataclasses.replace(
+        _finalize(cls, chan, way, channels, ways, payload=payload),
+        arrival_us=None if not np.any(arrival) else arrival)
+
+
 def apply_faults(trace: OpTrace, spec: FaultSpec, table=None, *,
                  sampler: FaultSampler | None = None,
                  request_id: np.ndarray | None = None

@@ -49,7 +49,12 @@ class RequestStream:
     placement and the query layer resolves first-response-wins latency
     through it (None = no hedges, or legacy adjacent-duplicate streams).
     ``stream`` is the issuing client/tenant id — latency percentiles
-    can be split per tenant after simulation."""
+    can be split per tenant after simulation.
+    ``lpn`` is each request's starting *logical* page number — the
+    address the FTL stage (``repro.core.ftl``) translates; requests
+    span ``lpn .. lpn + n_pages - 1``.  None means address-free (the
+    FTL synthesises a sequential layout; non-FTL queries never read
+    it)."""
 
     arrival_us: np.ndarray          # float32 [R], non-decreasing
     op_cls: np.ndarray              # int32 [R], READ/WRITE
@@ -57,6 +62,7 @@ class RequestStream:
     stream: np.ndarray              # int32 [R]
     payload: np.ndarray | None = None   # bool [R]; None = all payload
     hedge_of: np.ndarray | None = None  # int32 [R]; -1 = not a hedge
+    lpn: np.ndarray | None = None       # int64 [R]; None = address-free
 
     def __post_init__(self):
         r = len(self.arrival_us)
@@ -65,12 +71,14 @@ class RequestStream:
                 raise ValueError(f"RequestStream.{name} has length "
                                  f"{len(getattr(self, name))}, "
                                  f"arrival_us has {r}")
-        for name in ("payload", "hedge_of"):
+        for name in ("payload", "hedge_of", "lpn"):
             arr = getattr(self, name)
             if arr is not None and len(arr) != r:
                 raise ValueError(f"RequestStream.{name} length mismatch")
         if r == 0:
             return
+        if self.lpn is not None and int(np.min(self.lpn)) < 0:
+            raise ValueError("lpn must be non-negative")
         if float(np.min(self.arrival_us)) < 0:
             raise ValueError("arrival_us must be non-negative")
         if np.any(np.diff(np.asarray(self.arrival_us, np.float64)) < 0):
@@ -122,7 +130,8 @@ class RequestStream:
                 f"{len(np.unique(self.stream))} stream(s)")
 
 
-def _stream(arrival, op_cls, n_pages, stream, payload=None) -> RequestStream:
+def _stream(arrival, op_cls, n_pages, stream, payload=None,
+            lpn=None) -> RequestStream:
     r = len(arrival)
     return RequestStream(
         arrival_us=np.asarray(arrival, np.float32),
@@ -131,7 +140,8 @@ def _stream(arrival, op_cls, n_pages, stream, payload=None) -> RequestStream:
                  if np.isscalar(n_pages) else np.asarray(n_pages, np.int32)),
         stream=(np.full(r, stream, np.int32)
                 if np.isscalar(stream) else np.asarray(stream, np.int32)),
-        payload=None if payload is None else np.asarray(payload, bool))
+        payload=None if payload is None else np.asarray(payload, bool),
+        lpn=None if lpn is None else np.asarray(lpn, np.int64))
 
 
 def _classes(n: int, read_fraction: float, rng) -> np.ndarray:
@@ -224,6 +234,11 @@ def multi_tenant(streams) -> RequestStream:
         h_s = h_g[order]
         hedge_of = np.where(h_s >= 0, inv[np.clip(h_s, 0, None)],
                             -1).astype(np.int32)
+    with_lpn = [s.lpn is not None for s in streams]
+    if any(with_lpn) and not all(with_lpn):
+        raise ValueError(
+            "cannot merge streams with and without logical addresses "
+            "(lpn): give every tenant an lpn array or none")
     return RequestStream(
         arrival_us=np.asarray(arrival, np.float32)[order],
         op_cls=cat([s.op_cls for s in streams]),
@@ -232,7 +247,8 @@ def multi_tenant(streams) -> RequestStream:
                     for i, s in enumerate(streams)]),
         payload=(None if all(s.payload is None for s in streams)
                  else cat([s.payload_mask() for s in streams])),
-        hedge_of=hedge_of)
+        hedge_of=hedge_of,
+        lpn=None if not all(with_lpn) else cat([s.lpn for s in streams]))
 
 
 def with_hedges(stream: RequestStream, fraction: float,
@@ -281,7 +297,9 @@ def with_hedges(stream: RequestStream, fraction: float,
         stream=np.asarray(stream.stream, np.int32)[src][order],
         payload=None if payload.all() else payload[order],
         hedge_of=np.where(h_s >= 0, inv[np.clip(h_s, 0, None)],
-                          -1).astype(np.int32))
+                          -1).astype(np.int32),
+        lpn=(None if stream.lpn is None
+             else np.asarray(stream.lpn, np.int64)[src][order]))
 
 
 def request_ops(stream: RequestStream
@@ -295,6 +313,101 @@ def request_ops(stream: RequestStream
             np.repeat(np.asarray(stream.arrival_us, np.float32), reps),
             np.repeat(np.arange(stream.n_requests, dtype=np.int32), reps),
             np.repeat(stream.payload_mask(), reps))
+
+
+def request_lpns(stream: RequestStream, n_logical: int) -> np.ndarray:
+    """Per-page-op logical page numbers [T = total_pages], wrapped into
+    ``[0, n_logical)`` — the address half of :func:`request_ops`, which
+    the FTL stage (``repro.core.ftl``) translates through the L2P map.
+    Requests span ``lpn .. lpn + n_pages - 1``; address-free streams
+    (``lpn is None``) synthesise a sequential layout (op ``t`` touches
+    logical page ``t mod n_logical``), so legacy streams age a drive
+    like a pure sequential writer."""
+    if n_logical < 1:
+        raise ValueError(f"n_logical must be >= 1, got {n_logical}")
+    reps = np.asarray(stream.n_pages, np.int64)
+    t = np.arange(int(reps.sum()), dtype=np.int64)
+    if stream.lpn is None:
+        return t % n_logical
+    starts = np.cumsum(reps) - reps
+    pos = t - np.repeat(starts, reps)          # op offset within request
+    return (np.repeat(np.asarray(stream.lpn, np.int64), reps)
+            + pos) % n_logical
+
+
+# ---------------------------------------------------------------------------
+# Logically-addressed builders (the FTL aging workload class)
+# ---------------------------------------------------------------------------
+
+
+def _arrivals(n: int, mean_interarrival_us: float, rng) -> np.ndarray:
+    """Zero arrivals (a saturating burst) or Poisson at the given mean."""
+    if mean_interarrival_us <= 0.0:
+        return np.zeros(n)
+    gaps = rng.exponential(mean_interarrival_us, n)
+    if n:
+        gaps[0] = 0.0
+    return np.cumsum(gaps)
+
+
+def overwrite_stream(n_requests: int, footprint_pages: int, *,
+                     read_fraction: float = 0.0,
+                     mean_interarrival_us: float = 0.0,
+                     pages_per_request: int = 1, seed: int = 0,
+                     stream: int = 0) -> RequestStream:
+    """Uniform-random overwrites of a ``footprint_pages`` logical
+    region — the steady-state aging workload the analytic greedy-GC
+    WAF model describes (``repro.core.ftl.analytic_waf``).  Defaults to
+    a pure-write saturating burst; ``mean_interarrival_us`` switches to
+    Poisson arrivals and ``read_fraction`` mixes reads over the same
+    footprint."""
+    if footprint_pages < 1:
+        raise ValueError(
+            f"footprint_pages must be >= 1, got {footprint_pages}")
+    if not 0.0 <= read_fraction <= 1.0:
+        raise ValueError(
+            f"read_fraction must be in [0, 1], got {read_fraction}")
+    rng = np.random.default_rng(seed)
+    return _stream(_arrivals(n_requests, mean_interarrival_us, rng),
+                   _classes(n_requests, read_fraction, rng),
+                   pages_per_request, stream,
+                   lpn=rng.integers(0, footprint_pages, n_requests))
+
+
+def aging_stream(n_requests: int, footprint_pages: int, *,
+                 hot_fraction: float = 0.2, hot_traffic: float = 0.8,
+                 read_fraction: float = 0.0,
+                 mean_interarrival_us: float = 0.0,
+                 pages_per_request: int = 1, seed: int = 0,
+                 stream: int = 0) -> RequestStream:
+    """Skewed (hot/cold) overwrites: a ``hot_fraction`` slice of the
+    logical footprint receives ``hot_traffic`` of the requests — the
+    locality real aging exhibits.  Cold data pins valid pages inside GC
+    victims, so a single-frontier FTL amplifies *more* than under the
+    uniform stream at the same overprovisioning (the hot/cold
+    separation motivation)."""
+    if footprint_pages < 2:
+        raise ValueError(
+            f"footprint_pages must be >= 2 (a hot and a cold page), "
+            f"got {footprint_pages}")
+    if not 0.0 < hot_fraction < 1.0:
+        raise ValueError(
+            f"hot_fraction must be in (0, 1), got {hot_fraction}")
+    if not 0.0 <= hot_traffic <= 1.0:
+        raise ValueError(
+            f"hot_traffic must be in [0, 1], got {hot_traffic}")
+    if not 0.0 <= read_fraction <= 1.0:
+        raise ValueError(
+            f"read_fraction must be in [0, 1], got {read_fraction}")
+    rng = np.random.default_rng(seed)
+    n_hot = min(footprint_pages - 1,
+                max(1, int(round(hot_fraction * footprint_pages))))
+    hot = rng.random(n_requests) < hot_traffic
+    lpn = np.where(hot, rng.integers(0, n_hot, n_requests),
+                   rng.integers(n_hot, footprint_pages, n_requests))
+    return _stream(_arrivals(n_requests, mean_interarrival_us, rng),
+                   _classes(n_requests, read_fraction, rng),
+                   pages_per_request, stream, lpn=lpn)
 
 
 # ---------------------------------------------------------------------------
@@ -383,6 +496,7 @@ WORKLOAD_KINDS: tuple[str, ...] = (
     "steady_read", "steady_write", "mixed", "hot_cold",
     "checkpoint", "datapipe", "kvoffload",
     "poisson", "bursty", "closed_loop",
+    "overwrite", "aging",
 )
 
 _BUILDERS = {
@@ -411,6 +525,12 @@ _BUILDERS = {
     "closed_loop": _lowered(
         lambda cfg, n_requests=512, queue_depth=8, service_us=50.0, **kw:
         closed_loop_stream(n_requests, queue_depth, service_us, **kw)),
+    "overwrite": _lowered(
+        lambda cfg, n_requests=512, footprint_pages=2048, **kw:
+        overwrite_stream(n_requests, footprint_pages, **kw)),
+    "aging": _lowered(
+        lambda cfg, n_requests=512, footprint_pages=2048, **kw:
+        aging_stream(n_requests, footprint_pages, **kw)),
 }
 
 

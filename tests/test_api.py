@@ -38,7 +38,7 @@ API_SNAPSHOT = {
     "EngineCaps": "(name: 'str', heterogeneous: 'bool', "
                   "batched_tables: 'bool', energy: 'bool', "
                   "jittable: 'bool', arrivals: 'bool' = False, "
-                  "dispatch: 'bool' = False) -> None",
+                  "dispatch: 'bool' = False, ftl: 'bool' = False) -> None",
     "OBJECTIVES": ("end_time", "bandwidth", "energy", "all"),
     "SimRequest": "(trace: 'OpTrace | None' = None, "
                   "policy: 'Policy | None' = None, "
@@ -47,7 +47,8 @@ API_SNAPSHOT = {
                   "segment_len: 'int | None' = 64, "
                   "workload: 'RequestStream | None' = None, "
                   "sched_policy: 'str | None' = None, "
-                  "faults: 'FaultSpec | None' = None) -> None",
+                  "faults: 'FaultSpec | None' = None, "
+                  "ftl: \"'_ftl.FTLSpec | None'\" = None) -> None",
     "SimResult": "(end_us: 'float', mb_s: 'float | None', "
                  "channel_busy_us: 'np.ndarray', "
                  "energy: 'EnergyBreakdown | None', engine: 'str', "
@@ -55,7 +56,11 @@ API_SNAPSHOT = {
                  "request_lat_us: 'np.ndarray | None' = None, "
                  "sched_policy: 'str | None' = None, "
                  "retry_hist: 'np.ndarray | None' = None, "
-                 "n_remap_ops: 'int' = 0) -> None",
+                 "n_remap_ops: 'int' = 0, waf: 'float | None' = None, "
+                 "gc_op_count: 'int | None' = None, "
+                 "free_page_low_watermark: 'int | None' = None, "
+                 "fresh_mb_s: 'float | None' = None, "
+                 "ftl_stats: \"'_ftl.FTLStats | None'\" = None) -> None",
     "Simulator": "(config: 'SSDConfig | None' = None, *, "
                  "table: 'OpClassTable | None' = None, "
                  "kind: 'InterfaceKind | str | None' = None, "
@@ -65,7 +70,7 @@ API_SNAPSHOT = {
     "register_engine": "(name: 'str', *, heterogeneous: 'bool', "
                        "batched_tables: 'bool', energy: 'bool', "
                        "jittable: 'bool', arrivals: 'bool' = False, "
-                       "dispatch: 'bool' = False)",
+                       "dispatch: 'bool' = False, ftl: 'bool' = False)",
     "registered_engines": "() -> 'tuple[str, ...]'",
     "simulator_for": "(config: 'SSDConfig') -> 'Simulator'",
     "steady_bandwidth_mb_s": "(cfg: 'SSDConfig', mode: 'str', "

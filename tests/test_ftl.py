@@ -1,0 +1,298 @@
+"""FTL subsystem core (DESIGN.md §2.10): the L2P map invariants, GC
+victim policies, the steady-state WAF pin against the analytic
+greedy-GC fixed point, the 7-class op table, byte conservation through
+translation, and the block-level fault accounting.
+
+Deliberately hypothesis-free (plain numpy RNG / fixed seed grids) so
+the suite runs in minimal environments, like tests/test_trace_engines.py."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ftl
+from repro.core.nand import CellType, chip as nand_chip
+from repro.core.sim import SSDConfig
+from repro.core.trace import READ, WRITE, op_class_table
+from repro.core.workload import overwrite_stream, request_lpns, request_ops
+
+CFG = SSDConfig(cell=CellType.MLC, channels=2, ways=4)
+
+
+# --- spec validation + registry ---------------------------------------------
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="blocks"):
+        ftl.FTLSpec(blocks=2)
+    with pytest.raises(ValueError, match="overprovision"):
+        ftl.FTLSpec(overprovision=0.0)
+    with pytest.raises(ValueError, match="gc_free_blocks"):
+        ftl.FTLSpec(blocks=8, gc_free_blocks=7)
+    with pytest.raises(ValueError, match="map_us"):
+        ftl.FTLSpec(map_us=-1.0)
+    with pytest.raises(ValueError, match="unknown GC policy"):
+        ftl.FTLSpec(gc_policy="rr")
+
+
+def test_gc_policy_registry_error_names_kinds():
+    with pytest.raises(ValueError) as e:
+        ftl.select_victim("bogus", np.ones(4), np.ones(4, bool),
+                          np.arange(4))
+    for kind in ftl.GC_POLICIES:
+        assert kind in str(e.value)
+
+
+def test_victim_selection_policies():
+    valid = np.array([5, 2, 9, 2, 7])
+    cand = np.array([True, True, False, True, True])
+    fill = np.array([4, 3, 0, 1, 2])
+    # greedy: min valid among candidates = blocks 1 and 3 (both 2);
+    # tie broken by oldest fill_seq -> block 3 (fill 1 < 3)
+    assert ftl.select_victim("greedy", valid, cand, fill) == 3
+    # lru: oldest-opened candidate = block 3 (fill_seq 1)
+    assert ftl.select_victim("lru", valid, cand, fill) == 3
+    fill2 = np.array([0, 3, 1, 2, 4])
+    assert ftl.select_victim("lru", valid, cand, fill2) == 0
+
+
+def test_spec_geometry_properties():
+    spec = ftl.FTLSpec(blocks=64, pages_per_block=32, overprovision=0.25)
+    assert spec.total_pages == 2048
+    assert spec.logical_pages == int(2048 / 1.25)
+    assert spec.utilization == pytest.approx(0.8, abs=0.001)
+    assert "gc=greedy" in spec.describe()
+
+
+# --- analytic WAF fixed point ------------------------------------------------
+
+
+def test_analytic_waf_fixed_point_and_monotonicity():
+    for u in (0.5, 0.7, 0.8, 0.9):
+        w = ftl.analytic_waf(u)
+        # it IS the fixed point
+        assert w == pytest.approx(1.0 / (1.0 - np.exp(-1.0 / (u * w))),
+                                  rel=1e-9)
+        assert w > 1.0
+    assert ftl.analytic_waf(0.9) > ftl.analytic_waf(0.8) \
+        > ftl.analytic_waf(0.5)
+    with pytest.raises(ValueError):
+        ftl.analytic_waf(1.0)
+    with pytest.raises(ValueError):
+        ftl.analytic_waf(0.0)
+
+
+# --- the WAF pin: measured steady-state vs analytic -------------------------
+
+
+@pytest.mark.parametrize("overprovision", [0.15, 0.25, 0.5])
+def test_steady_state_waf_matches_analytic_greedy(overprovision):
+    """Uniform random overwrites over the full logical space, greedy GC,
+    preconditioned to steady state: measured WAF within 10% of the
+    analytic fixed point (ISSUE acceptance gate).  Geometry is sized so
+    the held-back free reserve is a negligible fraction of the pool."""
+    spec = ftl.FTLSpec(blocks=256, pages_per_block=64,
+                       overprovision=overprovision, gc_free_blocks=1,
+                       precondition=True, precondition_passes=3.0)
+    stream = overwrite_stream(60_000, spec.logical_pages, seed=11)
+    tr = ftl.translate(stream, spec)
+    expect = ftl.analytic_waf(spec.utilization)
+    assert tr.stats.waf == pytest.approx(expect, rel=0.10), \
+        (tr.stats.waf, expect)
+
+
+def test_lru_no_better_than_greedy_on_uniform():
+    """Under uniform overwrites validity decays with age, so greedy and
+    LRU-cold nearly coincide — but greedy (min valid) can never do
+    worse.  Small tolerance for finite-pool noise."""
+    wafs = {}
+    for policy in ftl.GC_POLICIES:
+        spec = ftl.FTLSpec(blocks=128, pages_per_block=32,
+                           overprovision=0.25, gc_policy=policy,
+                           precondition=True, precondition_passes=2.0)
+        stream = overwrite_stream(20_000, spec.logical_pages, seed=5)
+        wafs[policy] = ftl.translate(stream, spec).stats.waf
+    assert wafs["greedy"] <= wafs["lru"] * 1.05, wafs
+
+
+def test_waf_decreases_with_overprovisioning():
+    wafs = []
+    for op in (0.1, 0.25, 0.6):
+        spec = ftl.FTLSpec(blocks=128, pages_per_block=32,
+                           overprovision=op, precondition=True)
+        stream = overwrite_stream(15_000, spec.logical_pages, seed=3)
+        wafs.append(ftl.translate(stream, spec).stats.waf)
+    assert wafs[0] > wafs[1] > wafs[2]
+    assert wafs[2] >= 1.0
+
+
+# --- L2P map invariants (round-trip + conservation) -------------------------
+
+
+def _invariants(state: ftl.FTLState):
+    """The map invariants every translation must preserve."""
+    mapped = np.flatnonzero(state.l2p >= 0)
+    # round trip: p2l[l2p[lpn]] == lpn for every mapped page
+    assert np.array_equal(state.p2l[state.l2p[mapped]], mapped)
+    # and the reverse: every mapped physical page points back
+    phys = np.flatnonzero(state.p2l >= 0)
+    assert np.array_equal(state.l2p[state.p2l[phys]], phys)
+    # no two logical pages share a physical page
+    assert len(np.unique(state.l2p[mapped])) == len(mapped)
+    # per-block valid counts agree with the p2l map
+    ppb = state._ppb
+    counts = np.bincount(phys // ppb, minlength=state.spec.blocks)
+    assert np.array_equal(counts, state.valid_count)
+
+
+@pytest.mark.parametrize("policy", ftl.GC_POLICIES)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_l2p_round_trip_through_gc(policy, seed):
+    spec = ftl.FTLSpec(blocks=32, pages_per_block=16, overprovision=0.3,
+                       gc_policy=policy)
+    stream = overwrite_stream(4000, spec.logical_pages, seed=seed)
+    tr = ftl.translate(stream, spec)
+    assert tr.stats.gc_op_count > 0          # GC actually ran
+    _invariants(tr.state)
+    # every host write is readable at its latest location
+    lpns = request_lpns(stream, spec.logical_pages)
+    cls, _, _, _ = request_ops(stream)
+    written = np.unique(lpns[cls == WRITE])
+    assert (tr.state.l2p[written] >= 0).all()
+
+
+def test_translation_byte_and_op_conservation():
+    """Host payload ops survive translation exactly once each; GC ops
+    carry no payload credit; op counts reconcile with the stats."""
+    spec = ftl.FTLSpec(blocks=32, pages_per_block=16, overprovision=0.3)
+    stream = overwrite_stream(3000, spec.logical_pages,
+                              read_fraction=0.3, seed=2)
+    cls, _, _, payload = request_ops(stream)
+    tr = ftl.translate(stream, spec)
+    # one translated op per host op, payload preserved op-for-op
+    host = ~tr.gc
+    assert host.sum() == len(cls)
+    assert np.array_equal(tr.payload[host], payload)
+    assert not tr.payload[tr.gc].any()
+    # class accounting
+    assert (tr.op_cls[host] == np.where(cls == READ, ftl.FTL_READ,
+                                        ftl.FTL_WRITE)).all()
+    st = tr.stats
+    assert (tr.op_cls == ftl.GC_READ).sum() == st.gc_reads
+    assert (tr.op_cls == ftl.GC_WRITE).sum() == st.gc_writes
+    assert (tr.op_cls == ftl.ERASE).sum() == st.erases
+    assert st.host_pages_written == int((cls == WRITE).sum())
+    assert st.total_pages_written == st.host_pages_written + st.gc_writes
+    # arrivals stay nondecreasing after injection
+    assert (np.diff(tr.arrival_us) >= 0).all()
+    # request ids: host ops keep theirs, GC ops have none
+    assert (tr.request_id[tr.gc] == -1).all()
+    assert (tr.request_id[host] >= 0).all()
+
+
+def test_translate_is_deterministic_and_chains_state():
+    spec = ftl.FTLSpec(blocks=32, pages_per_block=16, overprovision=0.3,
+                       precondition=True, seed=9)
+    stream = overwrite_stream(2000, spec.logical_pages, seed=1)
+    a = ftl.translate(stream, spec)
+    b = ftl.translate(stream, spec)
+    assert np.array_equal(a.op_cls, b.op_cls)
+    assert np.array_equal(a.arrival_us, b.arrival_us)
+    assert a.stats.waf == b.stats.waf
+    # chaining: the second window on the same state starts aged
+    first = ftl.translate(stream, dataclasses.replace(
+        spec, precondition=False))
+    second = ftl.translate(stream, spec, state=first.state)
+    assert second.stats.waf > 1.0
+
+
+def test_free_page_low_watermark_monotone():
+    spec = ftl.FTLSpec(blocks=32, pages_per_block=16, overprovision=0.3)
+    stream = overwrite_stream(3000, spec.logical_pages, seed=4)
+    tr = ftl.translate(stream, spec)
+    wm = tr.stats.free_page_low_watermark
+    assert 0 <= wm <= tr.state.free_pages
+    # the watermark is the floor: GC keeps at least the reserve free
+    assert wm >= (spec.gc_free_blocks - 1) * spec.pages_per_block
+
+
+# --- the 7-class table -------------------------------------------------------
+
+
+def test_ftl_op_class_table_extends_base():
+    spec = ftl.FTLSpec(map_us=0.7)
+    base = op_class_table(CFG)
+    tab = ftl.ftl_op_class_table(CFG, spec)
+    assert tab.n_classes == 7
+    assert tuple(tab.labels) == ftl.FTL_LABELS
+    # rows 0/1 are bitwise the host table (non-FTL traces price equal)
+    for f in ("cmd_us", "pre_us", "slot_us", "post_lo_us", "post_hi_us",
+              "ctrl_us", "arb_us", "data_bytes", "io_us"):
+        np.testing.assert_array_equal(np.asarray(getattr(tab, f))[:2],
+                                      np.asarray(getattr(base, f)))
+    # FTL classes charge the map on the controller, not the bus
+    assert tab.ctrl_us[ftl.FTL_READ] == pytest.approx(
+        base.ctrl_us[READ] + 0.7)
+    assert tab.ctrl_us[ftl.FTL_WRITE] == pytest.approx(
+        base.ctrl_us[WRITE] + 0.7)
+    assert tab.slot_us[ftl.FTL_READ] == base.slot_us[READ]
+    # GC ops move no host payload
+    assert tab.data_bytes[ftl.GC_READ] == tab.data_bytes[READ]
+    assert tab.data_bytes[ftl.ERASE] == 0
+    # erase occupies the die for t_BERS
+    assert tab.post_lo_us[ftl.ERASE] == pytest.approx(
+        nand_chip(CFG.cell).t_bers_us)
+    spec2 = ftl.FTLSpec(erase_us=123.0)
+    assert ftl.ftl_op_class_table(CFG, spec2).post_hi_us[ftl.ERASE] \
+        == pytest.approx(123.0)
+
+
+# --- fault integration: block-level retirement ------------------------------
+
+
+def test_program_failure_retires_blocks_through_accounting():
+    spec = ftl.FTLSpec(blocks=128, pages_per_block=32, overprovision=0.3)
+    stream = overwrite_stream(9000, spec.logical_pages, seed=6)
+    tr = ftl.translate(stream, spec, prog_fail_prob=0.001,
+                       erase_fail_prob=0.01, fault_seed=13)
+    st = tr.stats
+    assert st.prog_fails > 0 and st.blocks_retired > 0
+    # failed programs still wrote physical pages (WAF sees them)
+    assert st.total_pages_written >= st.host_pages_written + st.gc_writes
+    clean = ftl.translate(stream, spec)
+    assert st.waf > clean.stats.waf          # failures amplify writes
+    _invariants(tr.state)
+    # retired blocks are out of the pool: never the open frontier
+    assert not tr.state.retired[tr.state.open_block]
+    assert not any(tr.state.retired[b] for b in tr.state.free)
+
+
+def test_fault_sampling_is_deterministic_per_seed():
+    spec = ftl.FTLSpec(blocks=128, pages_per_block=32, overprovision=0.3)
+    stream = overwrite_stream(6000, spec.logical_pages, seed=6)
+    a = ftl.translate(stream, spec, prog_fail_prob=0.002, fault_seed=3)
+    b = ftl.translate(stream, spec, prog_fail_prob=0.002, fault_seed=3)
+    c = ftl.translate(stream, spec, prog_fail_prob=0.002, fault_seed=4)
+    assert np.array_equal(a.op_cls, b.op_cls)
+    assert a.stats.prog_fails == b.stats.prog_fails
+    assert not np.array_equal(a.op_cls, c.op_cls) \
+        or a.stats.prog_fails != c.stats.prog_fails
+
+
+def test_drive_death_raises_not_hangs():
+    """Retiring most of the pool must end in a loud RuntimeError, not an
+    infinite GC loop."""
+    spec = ftl.FTLSpec(blocks=16, pages_per_block=8, overprovision=0.1)
+    stream = overwrite_stream(4000, spec.logical_pages, seed=0)
+    with pytest.raises(RuntimeError):
+        ftl.translate(stream, spec, erase_fail_prob=0.5, fault_seed=1)
+
+
+def test_translate_rejects_non_host_classes_and_empty():
+    spec = ftl.FTLSpec()
+    stream = overwrite_stream(10, 64, seed=0)
+    bad = dataclasses.replace(
+        stream, op_cls=np.full(stream.n_requests, 5, np.int32))
+    with pytest.raises(ValueError, match="READ/WRITE"):
+        ftl.translate(bad, spec)

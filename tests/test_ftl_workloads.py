@@ -1,0 +1,143 @@
+"""Logically-addressed workload builders (DESIGN.md §2.10): the
+overwrite / aging emitters, lpn threading through the stream
+combinators, and ``request_lpns`` — the workload-side half of the FTL
+stage."""
+
+import numpy as np
+import pytest
+
+from repro.core.sim import SSDConfig
+from repro.core.trace import READ, WRITE
+from repro.core import workload as wl
+
+CFG = SSDConfig(channels=2, ways=4)
+
+
+# --- overwrite / aging emitters ---------------------------------------------
+
+
+def test_overwrite_stream_uniform_over_footprint():
+    s = wl.overwrite_stream(8000, 512, seed=0)
+    assert s.n_requests == 8000
+    assert s.lpn is not None and s.lpn.dtype == np.int64
+    assert int(s.lpn.min()) >= 0 and int(s.lpn.max()) < 512
+    assert (s.op_cls == WRITE).all()
+    # uniform: every page of the footprint is hit, roughly evenly
+    counts = np.bincount(s.lpn, minlength=512)
+    assert (counts > 0).all()
+    assert counts.max() < 10 * counts.mean()
+
+
+def test_overwrite_stream_reads_and_arrivals():
+    s = wl.overwrite_stream(2000, 256, read_fraction=0.4,
+                            mean_interarrival_us=25.0, seed=1)
+    frac = float(np.mean(s.op_cls == READ))
+    assert 0.3 < frac < 0.5
+    assert (np.diff(s.arrival_us) >= 0).all()
+    assert s.arrival_us[0] == 0.0
+    assert float(s.arrival_us[-1]) > 0.0
+
+
+def test_aging_stream_hot_cold_skew():
+    s = wl.aging_stream(20_000, 1000, hot_fraction=0.2, hot_traffic=0.8,
+                        seed=2)
+    n_hot = 200
+    hot_hits = float(np.mean(s.lpn < n_hot))
+    # 80% of traffic on the hottest 20% of the footprint
+    assert 0.75 < hot_hits < 0.85
+    assert int(s.lpn.max()) < 1000
+
+
+def test_builder_validation():
+    with pytest.raises(ValueError, match="footprint"):
+        wl.overwrite_stream(10, 0)
+    with pytest.raises(ValueError, match="read_fraction"):
+        wl.overwrite_stream(10, 64, read_fraction=1.5)
+    with pytest.raises(ValueError, match="hot_fraction"):
+        wl.aging_stream(10, 64, hot_fraction=0.0)
+    with pytest.raises(ValueError, match="hot_traffic"):
+        wl.aging_stream(10, 64, hot_traffic=-0.1)
+    with pytest.raises(ValueError, match="footprint"):
+        wl.aging_stream(10, 1)
+
+
+def test_registry_has_overwrite_and_aging():
+    for kind in ("overwrite", "aging"):
+        assert kind in wl.WORKLOAD_KINDS
+        t = wl.build_workload(kind, CFG, n_requests=128,
+                              footprint_pages=256)
+        assert t.n_ops == 128           # request kinds lower to traces
+    with pytest.raises(ValueError) as e:
+        wl.build_workload("ftl", CFG)
+    assert "overwrite" in str(e.value) and "aging" in str(e.value)
+
+
+# --- lpn threading through the stream machinery -----------------------------
+
+
+def test_request_lpns_explicit_and_round_robin():
+    s = wl.overwrite_stream(100, 64, seed=3)
+    lpns = wl.request_lpns(s, 64)
+    assert np.array_equal(lpns, s.lpn)      # 1 page/request: verbatim
+    # address-free streams fall back to round-robin over the space
+    bare = wl.poisson_stream(10, 50.0, seed=0)
+    assert bare.lpn is None
+    got = wl.request_lpns(bare, 4)
+    assert np.array_equal(got, np.arange(int(np.sum(bare.n_pages))) % 4)
+    with pytest.raises(ValueError):
+        wl.request_lpns(s, 0)
+
+
+def test_request_lpns_multipage_requests_are_contiguous():
+    s = wl.overwrite_stream(50, 256, pages_per_request=4, seed=4)
+    lpns = wl.request_lpns(s, 256)
+    reps = np.asarray(s.n_pages)
+    assert len(lpns) == int(reps.sum())
+    # each request covers lpn, lpn+1, ... (mod the logical space)
+    pos = 0
+    for r in range(s.n_requests):
+        base = int(s.lpn[r])
+        want = (base + np.arange(reps[r])) % 256
+        assert np.array_equal(lpns[pos: pos + reps[r]], want)
+        pos += reps[r]
+
+
+def test_multi_tenant_merges_or_rejects_lpn():
+    a = wl.overwrite_stream(50, 128, seed=0, stream=0)
+    b = wl.aging_stream(50, 128, seed=1, stream=1)
+    merged = wl.multi_tenant([a, b])
+    assert merged.lpn is not None and len(merged.lpn) == 100
+    bare = wl.poisson_stream(50, 10.0, seed=2)
+    with pytest.raises(ValueError, match="lpn"):
+        wl.multi_tenant([a, bare])
+    # two address-free tenants still merge fine
+    assert wl.multi_tenant(
+        [bare, wl.poisson_stream(10, 10.0, seed=3)]).lpn is None
+
+
+def test_with_hedges_carries_lpn():
+    s = wl.overwrite_stream(400, 128, read_fraction=0.6, seed=5)
+    h = wl.with_hedges(s, 0.5, seed=6)
+    assert h.lpn is not None and len(h.lpn) == h.n_requests
+    assert h.n_requests > s.n_requests      # duplicates appended
+    hof = np.asarray(h.hedge_of)
+    dup = hof >= 0
+    # a duplicate re-reads its primary's logical page
+    assert np.array_equal(h.lpn[dup], h.lpn[hof[dup]])
+
+
+def test_stream_lpn_validation():
+    with pytest.raises(ValueError):
+        wl.RequestStream(
+            arrival_us=np.zeros(2, np.float32),
+            op_cls=np.zeros(2, np.int32),
+            n_pages=np.ones(2, np.int64),
+            stream=np.zeros(2, np.int32),
+            lpn=np.array([0, -1], np.int64))
+    with pytest.raises(ValueError):
+        wl.RequestStream(
+            arrival_us=np.zeros(2, np.float32),
+            op_cls=np.zeros(2, np.int32),
+            n_pages=np.ones(2, np.int64),
+            stream=np.zeros(2, np.int32),
+            lpn=np.zeros(3, np.int64))
