@@ -140,10 +140,12 @@ def main() -> None:
         # unhedged under the frozen retry-storm seed, p99 monotone in wear
         _section("reliability",
                  lambda: reliability_bench.run(small=args.smoke)),
-        # FTL aging + garbage collection (DESIGN.md §2.10); gates (smoke
-        # too): greedy WAF within 10% of the analytic fixed point at
-        # every overprovisioning ratio, aged < fresh bandwidth whenever
-        # GC ran, GC-translated cross-engine agreement < 1e-3
+        # FTL aging + garbage collection (DESIGN.md §2.10/§2.11); gates
+        # (smoke too): greedy WAF within 10% of the analytic fixed point
+        # at every overprovisioning ratio, aged < fresh bandwidth
+        # whenever GC ran, GC-translated cross-engine agreement < 1e-3,
+        # scan translation op-for-op identical to the host oracle; full
+        # runs additionally gate the >= 5x fused aged-sweep speedup
         _section("ftl", lambda: ftl_bench.run(small=args.smoke)),
     ]
     _check_speedups(sections, args.smoke)

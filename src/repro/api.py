@@ -35,10 +35,22 @@ Aging and garbage collection (the FTL stage, DESIGN.md §2.10)::
                    ftl=FTLSpec(overprovision=0.25, precondition=True))
     print(aged.waf, aged.mb_s, aged.fresh_mb_s)    # steady vs fresh
 
+Aged design-space sweeps ride the compiled translation engine
+(DESIGN.md §2.11) — one fused translate→lower→simulate fold per point,
+vmapped across points (sharded over devices when there are several)::
+
+    import dataclasses
+
+    points = [FTLSpec(overprovision=op, gc_policy=g, precondition=True)
+              for op in (0.12, 0.25, 0.5) for g in ("greedy", "lru")]
+    ends = sim.sweep(None, overwrite_stream(4096, 2048), ftl=points)
+
 See DESIGN.md §2.5 for the request/response model, the engine registry
 and the cache keying; §2.6 for workloads and scheduling policies; §2.8
 for the fault model and its determinism contract; §2.10 for the FTL
-translation stage, WAF accounting and the GC policy registry.
+translation stage, WAF accounting and the GC policy registry; §2.11
+for the compiled (lax.scan) translation engine behind the fault-free
+default path, the fused sweep and the streaming chunked variant.
 """
 
 from repro.core.api import (CacheInfo, CapabilityError, Engine, EngineCaps,
@@ -52,22 +64,24 @@ from repro.core.energy import EnergyBreakdown
 from repro.core.faults import FaultSampler, FaultSpec
 from repro.core.ftl import (FTLSpec, FTLStats, FTLTranslation, FTL_LABELS,
                             GC_POLICIES, analytic_waf, ftl_op_class_table,
-                            select_victim)
+                            precondition_lpns, select_victim)
 from repro.core.ftl import translate as ftl_translate
+from repro.core.ftl_scan import translate_scan as ftl_translate_scan
 from repro.core.interface import InterfaceKind
 from repro.core.nand import CellType
 from repro.core.sched import (DYNAMIC_POLICIES, LoweredWorkload,
                               SCHED_POLICIES, STATIC_POLICIES, apply_faults,
-                              lower_ops, lower_static, policy_is_dynamic)
+                              lower_ops, lower_ops_chunk, lower_static,
+                              policy_is_dynamic)
 from repro.core.sim import PageOpParams, SSDConfig
 from repro.core.trace import (OpClassTable, OpTrace, READ, WRITE,
                               op_class_table, workload_trace)
 from repro.core.workload import (RequestStream, aging_stream, build_workload,
                                  bursty_stream, checkpoint_requests,
                                  closed_loop_stream, datapipe_requests,
-                                 kvoffload_requests, multi_tenant,
-                                 overwrite_stream, poisson_stream,
-                                 request_lpns, with_hedges)
+                                 iter_request_chunks, kvoffload_requests,
+                                 multi_tenant, overwrite_stream,
+                                 poisson_stream, request_lpns, with_hedges)
 
 __all__ = [
     # the session API proper
@@ -81,15 +95,16 @@ __all__ = [
     "DYNAMIC_POLICIES", "LoweredWorkload", "RequestStream",
     "SCHED_POLICIES", "STATIC_POLICIES", "build_workload", "bursty_stream",
     "checkpoint_requests", "closed_loop_stream", "datapipe_requests",
-    "kvoffload_requests", "lower_static", "multi_tenant",
-    "policy_is_dynamic", "poisson_stream", "aging_stream",
+    "iter_request_chunks", "kvoffload_requests", "lower_static",
+    "multi_tenant", "policy_is_dynamic", "poisson_stream", "aging_stream",
     "overwrite_stream", "request_lpns",
     # the reliability layer (DESIGN.md §2.8)
     "FaultSampler", "FaultSpec", "apply_faults", "with_hedges",
-    # the FTL stage (DESIGN.md §2.10)
+    # the FTL stage (DESIGN.md §2.10-§2.11)
     "FTLSpec", "FTLStats", "FTLTranslation", "FTL_LABELS", "GC_POLICIES",
-    "analytic_waf", "ftl_op_class_table", "ftl_translate", "lower_ops",
-    "select_victim",
+    "analytic_waf", "ftl_op_class_table", "ftl_translate",
+    "ftl_translate_scan", "lower_ops", "lower_ops_chunk",
+    "precondition_lpns", "select_victim",
     # the types a request/result is made of
     "CellType", "EnergyBreakdown", "InterfaceKind", "OpClassTable",
     "OpTrace", "PageOpParams", "READ", "SSDConfig", "WRITE",

@@ -65,6 +65,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import hashlib
 import warnings
 from typing import Literal, Protocol, runtime_checkable
 
@@ -73,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ftl as _ftl
+from repro.core import ftl_scan as _ftl_scan
 from repro.core import sched as _sched
 from repro.core import sim as _sim
 from repro.core import trace as _trace
@@ -471,6 +473,26 @@ class ScanEngine(_EngineBase):
                 n_channels=ft.channels, batched=False)
             folds["ftl_end_time"] = (
                 fend, _padded_trace_args(ft, _bucket_len(ft.n_ops)))
+            # the compiled translation engine itself (DESIGN.md §2.11):
+            # trace the scan FTL fold over the same small stream, so
+            # the invariant net (RNG-free, f32, primitive budget) gates
+            # the machine that now feeds every fault-free FTL query
+            st = _workload.overwrite_stream(48, 24, seed=3)
+            cls, arr, rid, pay = _workload.request_ops(st)
+            lpns = _workload.request_lpns(st, spec.logical_pages)
+            n_b = 64
+            pad = n_b - len(cls)
+            tfold = _ftl_scan.make_translate_fold(
+                spec.blocks, spec.pages_per_block, n_b, 256)
+            folds["ftl_translate"] = (tfold, (
+                jnp.asarray(np.pad(cls, (0, pad)), jnp.int32),
+                jnp.asarray(np.pad(arr, (0, pad)), jnp.float32),
+                jnp.asarray(np.pad(pay, (0, pad)), bool),
+                jnp.asarray(np.pad(rid, (0, pad)), jnp.int32),
+                jnp.asarray(np.pad(lpns, (0, pad)), jnp.int32),
+                jnp.int32(len(cls)), jnp.int32(spec.gc_free_blocks),
+                jnp.asarray(False),
+                _ftl_scan.scan_state_fresh(spec)))
         return folds
 
 
@@ -966,13 +988,17 @@ class Simulator:
     def __init__(self, config: SSDConfig | None = None, *,
                  table: OpClassTable | None = None,
                  kind: InterfaceKind | str | None = None,
-                 max_cache_entries: int | None = 512):
+                 max_cache_entries: int | None = 512,
+                 max_ftl_sessions: int | None = 8):
         if config is None and table is None:
             raise ValueError("Simulator needs an SSDConfig or an "
                              "OpClassTable")
         if max_cache_entries is not None and max_cache_entries < 1:
             raise ValueError("max_cache_entries must be >= 1 or None "
                              f"(unbounded), got {max_cache_entries}")
+        if max_ftl_sessions is not None and max_ftl_sessions < 1:
+            raise ValueError("max_ftl_sessions must be >= 1 or None "
+                             f"(unbounded), got {max_ftl_sessions}")
         self.config = config
         self.table = table if table is not None else op_class_table(config)
         if kind is not None:
@@ -986,12 +1012,27 @@ class Simulator:
         self._e_tables: dict[InterfaceKind, jax.Array] = {}
         self._e_tables_np: dict[InterfaceKind, np.ndarray] = {}
         self.max_cache_entries = max_cache_entries
-        self._ftl_sessions: dict[tuple, "Simulator"] = {}
+        self.max_ftl_sessions = max_ftl_sessions
+        self._ftl_sessions: collections.OrderedDict[tuple, "Simulator"] \
+            = collections.OrderedDict()
+        self._ftl_hits = 0
+        self._ftl_misses = 0
+        self._ftl_evictions = 0
         self._closures: collections.OrderedDict[tuple, object] = \
             collections.OrderedDict()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        # fused aged-sweep memos (DESIGN.md §2.11): preconditioned scan
+        # states per spec batch (a pure function of the specs — the
+        # host translator re-ages per call by design, the compiled
+        # sweep ages once) and learned (t_max, t2) buffer sizes per
+        # (specs, stream) so warm sweeps run exactly-sized folds with
+        # no grow-and-retry replay.
+        self._ftl_pre_states: collections.OrderedDict[tuple, object] = \
+            collections.OrderedDict()
+        self._ftl_sweep_sizes: collections.OrderedDict[
+            tuple, tuple[int, int]] = collections.OrderedDict()
 
     # -- shared per-config sessions ----------------------------------------
 
@@ -1162,11 +1203,28 @@ class Simulator:
                None if spec.erase_us is None else float(spec.erase_us))
         sess = self._ftl_sessions.get(key)
         if sess is None:
+            self._ftl_misses += 1
             sess = self._ftl_sessions[key] = Simulator(
                 self.config,
                 table=_ftl.ftl_op_class_table(self.config, spec),
                 max_cache_entries=self.max_cache_entries)
+            if (self.max_ftl_sessions is not None
+                    and len(self._ftl_sessions) > self.max_ftl_sessions):
+                self._ftl_sessions.popitem(last=False)
+                self._ftl_evictions += 1
+        else:
+            self._ftl_hits += 1
+            self._ftl_sessions.move_to_end(key)
         return sess
+
+    def ftl_cache_info(self) -> CacheInfo:
+        """Counters for the FTL sub-session cache — same shape as
+        :meth:`cache_info`, but one entry here is a whole sibling
+        ``Simulator`` (its own 7-class table device arrays and closure
+        cache), so the bound is deliberately small."""
+        return CacheInfo(self._ftl_hits, self._ftl_misses,
+                         len(self._ftl_sessions), self._ftl_evictions,
+                         self.max_ftl_sessions)
 
     def _run_workload_ftl(self, request: SimRequest) -> SimResult:
         """FTL workload queries (DESIGN.md §2.10): the host stream runs
@@ -1201,11 +1259,20 @@ class Simulator:
                 "policy; 'batched' rounds are fixed at build time "
                 "and only exist for static lowerings")
         channels, ways = self.config.channels, self.config.ways
-        translation = _ftl.translate(
-            stream, spec,
-            prog_fail_prob=0.0 if fspec is None else fspec.prog_fail_prob,
-            erase_fail_prob=0.0 if fspec is None else fspec.erase_fail_prob,
-            fault_seed=0 if fspec is None else fspec.seed)
+        if fspec is None or (fspec.prog_fail_prob == 0.0
+                             and fspec.erase_fail_prob == 0.0):
+            # default path: the compiled lax.scan translation engine
+            # (DESIGN.md §2.11) — exact-agreement twin of the host
+            # translator, regression-pinned op-for-op in the tests
+            translation = _ftl_scan.translate_scan(stream, spec)
+        else:
+            # block-level program/erase failures draw RNG per attempt —
+            # host-oracle territory (the scan folds stay RNG-free)
+            translation = _ftl.translate(
+                stream, spec,
+                prog_fail_prob=fspec.prog_fail_prob,
+                erase_fail_prob=fspec.erase_fail_prob,
+                fault_seed=fspec.seed)
         extra = None
         sampler = None
         if fspec is not None:
@@ -1524,17 +1591,40 @@ class Simulator:
         return results
 
     def run_stream(self, chunks, *, policy: Policy | None = None,
-                   objective: Objective = "end_time") -> SimResult:
+                   objective: Objective = "end_time", ftl=None,
+                   faults: FaultSpec | None = None,
+                   sched_policy: str = "stripe") -> SimResult:
         """Constant-memory streaming query (DESIGN.md §2.7): fold an
         *iterator of OpTrace chunks* (``trace.iter_trace_chunks``, a
         generator builder like ``trace.mixed_trace_chunks``, or any
         iterable) through the streaming engine without ever holding the
         full trace — payload bytes, per-channel occupancy and the op
         count accumulate chunk-by-chunk, so a million-op trace costs
-        O(chunk) memory end to end."""
+        O(chunk) memory end to end.
+
+        With ``ftl=`` (an :class:`FTLSpec`), ``chunks`` is instead an
+        iterator of host :class:`RequestStream` chunks: each chunk runs
+        the scan translation engine carrying the drive state
+        (DESIGN.md §2.11), lowers at the carried placement-slot offset
+        (``sched.lower_ops_chunk``) and feeds the same streaming fold —
+        so a million-request aging trace is translated, placed and
+        simulated without ever materialising the aged op stream, and
+        the result (stats included) is bit-identical to the one-shot
+        path.  ``faults`` prices per-op retry/jitter surcharges with
+        one sequential sampler across chunks (§2.8); hedging and
+        block-level program/erase failures are one-shot-only."""
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r} "
                              f"(one of {', '.join(OBJECTIVES)})")
+        if ftl is not None:
+            return self._run_stream_ftl(
+                chunks, ftl, policy=policy, objective=objective,
+                faults=faults, sched_policy=sched_policy)
+        if faults is not None:
+            raise ValueError(
+                "run_stream(faults=...) needs ftl= (op-trace chunks are "
+                "already placed; apply sched.apply_faults per chunk "
+                "instead)")
         policy = policy or self.default_policy
         batched = policy_is_batched(policy)
         kind = None
@@ -1581,20 +1671,340 @@ class Simulator:
             engine="streaming", n_ops=stats["n_ops"],
             payload_bytes=payload)
 
-    def sweep(self, tables, trace: OpTrace, *,
+    def _run_stream_ftl(self, chunks, spec, *, policy: Policy | None,
+                        objective: Objective, faults: FaultSpec | None,
+                        sched_policy: str) -> SimResult:
+        """FTL-translating adapter for :meth:`run_stream`: a generator
+        turns each host ``RequestStream`` chunk into a placed
+        ``OpTrace`` chunk — translation state, placement-slot offset
+        and the fault sampler all carry across chunks, so the chunked
+        answer equals the one-shot ``run(SimRequest(ftl=...))`` stream
+        op-for-op.  The fold itself is delegated to the FTL
+        sub-session, whose 7-class table owns chunk validation and
+        byte accounting."""
+        if self.config is None:
+            raise ValueError(
+                "workload queries need a Simulator bound to an SSDConfig "
+                "(the scheduler needs the channel/way geometry)")
+        if _sched.policy_is_dynamic(sched_policy):
+            raise ValueError(
+                f"sched policy {sched_policy!r} is dynamic — streaming "
+                "chunks lower offline at a carried slot offset; dynamic "
+                "dispatch needs the one-shot run(SimRequest(ftl=...)) "
+                "path")
+        if faults is not None and (faults.hedge_fraction > 0.0
+                                   or faults.prog_fail_prob > 0.0
+                                   or faults.erase_fail_prob > 0.0):
+            raise ValueError(
+                "run_stream(ftl=...) prices per-op retry/jitter "
+                "surcharges only — hedging and block-level program/"
+                "erase failures rewrite the whole stream and need the "
+                "one-shot run(SimRequest(ftl=...)) path")
+        sess = self._ftl_session(spec)
+        C, W = self.config.channels, self.config.ways
+        carry: dict = {"state": None, "off": 0, "sampler": None,
+                       "stats": None}
+        if faults is not None and not faults.is_zero:
+            carry["sampler"] = FaultSampler(faults, C, W, sess.table)
+
+        def translated():
+            for st in chunks:
+                if st.n_requests == 0:
+                    continue
+                tr = _ftl_scan.translate_scan(st, spec,
+                                              state=carry["state"])
+                carry["state"] = tr.state
+                carry["stats"] = tr.stats
+                ot, carry["off"] = _sched.lower_ops_chunk(
+                    tr.op_cls, tr.arrival_us, C, W, sched_policy,
+                    tr.payload, carry["off"])
+                if carry["sampler"] is not None:
+                    cls_view = np.where(
+                        np.isin(tr.op_cls, (_ftl.FTL_READ, _ftl.GC_READ)),
+                        _trace.READ, _trace.WRITE).astype(np.int32)
+                    extra, _, _ = carry["sampler"].sample(cls_view)
+                    ot = dataclasses.replace(
+                        ot, extra_us=np.asarray(extra, np.float32))
+                yield ot
+
+        try:
+            res = sess.run_stream(translated(), policy=policy,
+                                  objective=objective)
+        except ValueError:
+            if carry["stats"] is None:     # no chunk carried a request
+                raise ValueError(
+                    "empty workload: no requests to translate") from None
+            raise
+        stats = carry["stats"]
+        return dataclasses.replace(
+            res, waf=stats.waf, gc_op_count=stats.gc_op_count,
+            free_page_low_watermark=stats.free_page_low_watermark,
+            ftl_stats=stats)
+
+    def sweep(self, tables, trace, *,
               policy: Policy | None = None, engine: str = "prefix",
               segment_len: int | None = 64, combine: str = "chain",
-              shard: bool | None = None) -> np.ndarray:
+              shard: bool | None = None, ftl=None,
+              sched_policy: str = "stripe") -> np.ndarray:
         """[B] completion times of one trace under a batch of
         design-point tables (``tables=None`` sweeps the bound table
         alone) — the design-space fan-out direction of the serving
         path.  With more than one device the table batch shards across
         devices via ``jax.shard_map`` (``shard=None`` auto / ``True``;
-        ``False`` forces the vmap path)."""
+        ``False`` forces the vmap path).
+
+        ``ftl=`` switches to the *aged* design-space direction
+        (DESIGN.md §2.11): ``trace`` is then a host
+        :class:`RequestStream` and ``ftl`` a sequence of
+        :class:`FTLSpec` design points sharing one geometry and timing
+        — each point runs the whole translate→lower→simulate chain as
+        one fused scan fold (preconditioning included), vmapped across
+        points and sharded over devices like every other sweep.
+        ``tables`` must be None (the FTL spec owns the 7-class table)
+        and ``engine``/``segment_len``/``combine`` are ignored — the
+        fused chain is the masked scan fold by construction."""
+        if ftl is not None:
+            if tables is not None:
+                raise ValueError(
+                    "sweep(ftl=...) sweeps FTL design points — the "
+                    "7-class table comes from the spec; tables must be "
+                    "None")
+            return self._sweep_ftl(trace, ftl,
+                                   policy=policy or self.default_policy,
+                                   sched_policy=sched_policy, shard=shard)
         return sweep_tables(
             [self.table] if tables is None else tables, trace,
             policy=policy or self.default_policy, engine=engine,
             segment_len=segment_len, combine=combine, shard=shard)
+
+    def _sweep_ftl(self, stream: RequestStream, specs, *, policy: Policy,
+                   sched_policy: str, shard: bool | None) -> np.ndarray:
+        """Fused aged sweep: precondition fold → window reset →
+        translation fold → compaction → closed-form static lowering →
+        masked end-time fold, with the batch of FTL design points
+        riding vmap (plus ``shard_map`` with >1 device).  Exactness
+        leans on two §2.11 invariants: the scan translator is op-for-op
+        the host translator, and the closed-form slot/parity lowering
+        is field-for-field ``lower_ops`` — so each lane's end time is
+        the same chain the per-point ``run(SimRequest(ftl=...))`` path
+        computes.
+
+        Two memos make repeated sweeps cheap where the per-call host
+        path cannot be: the *preconditioned state* is a pure function
+        of the spec batch, so it folds once and is reused across calls
+        (``_ftl_pre_states`` — the host translator re-ages on every
+        call by design), and the row/op counts observed on a
+        successful sweep are remembered per (specs, stream) so warm
+        sweeps run exactly-sized buffers with no grow-and-retry replay
+        (``_ftl_sweep_sizes``).  Emission rows compact into the op
+        bucket through a searchsorted gather (XLA:CPU pays scatter
+        cost per update row while gathers vectorise), so the masked
+        end-time fold runs over ``t2 ≈ n_ops`` lanes instead of the
+        raw ``t_max * (2*ppb+1)`` emission buffer."""
+        if self.config is None:
+            raise ValueError(
+                "workload queries need a Simulator bound to an SSDConfig "
+                "(the scheduler needs the channel/way geometry)")
+        specs = list(specs)
+        if not specs:
+            raise ValueError("sweep(ftl=...) needs at least one FTLSpec")
+        if stream.n_requests == 0:
+            raise ValueError("empty workload: no requests to translate")
+        g0 = (specs[0].blocks, specs[0].pages_per_block,
+              float(specs[0].map_us), specs[0].erase_us)
+        for s in specs[1:]:
+            if (s.blocks, s.pages_per_block, float(s.map_us),
+                    s.erase_us) != g0:
+                raise ValueError(
+                    "sweep(ftl=...) points must share geometry and "
+                    "timing (blocks, pages_per_block, map_us, erase_us) "
+                    "— vary overprovision / gc_policy / gc_free_blocks / "
+                    "precondition per point")
+        if _sched.policy_is_dynamic(sched_policy):
+            raise ValueError(
+                f"sched policy {sched_policy!r} is dynamic — the fused "
+                "FTL sweep lowers placement in closed form; use "
+                "run(SimRequest(ftl=...)) per point")
+        batched = policy_is_batched(policy)
+        sess = self._ftl_session(specs[0])
+        blocks, ppb = specs[0].blocks, specs[0].pages_per_block
+        C, W = self.config.channels, self.config.ways
+        cls, arr, rid, pay = _workload.request_ops(stream)
+        if int(np.max(stream.op_cls)) > _trace.WRITE:
+            raise ValueError(
+                "FTL translation consumes host READ/WRITE streams only "
+                f"(got op class {int(np.max(stream.op_cls))})")
+        n = len(cls)
+        n_b = _ftl_scan._bucket(n + ppb)   # burst-window slack
+        dpad = n_b - n
+        cls_p = jnp.asarray(np.pad(cls, (0, dpad)), jnp.int32)
+        arr_p = jnp.asarray(np.pad(arr, (0, dpad)), jnp.float32)
+        pay_p = jnp.asarray(np.pad(pay, (0, dpad)), bool)
+        rid_p = jnp.asarray(np.pad(rid, (0, dpad)), jnp.int32)
+        lpn_rows = np.stack([
+            np.pad(_workload.request_lpns(stream, s.logical_pages),
+                   (0, dpad)).astype(np.int32) for s in specs])
+        pre_lists = [(_ftl.precondition_lpns(s) if s.precondition
+                      else np.zeros(0, np.int64)) for s in specs]
+        has_pre = any(len(p) for p in pre_lists)
+        p_b = _ftl_scan._bucket(max(len(p) for p in pre_lists) + ppb,
+                                floor=1) if has_pre else 1
+        pre_rows = np.stack([
+            np.pad(p, (0, p_b - len(p))).astype(np.int32)
+            for p in pre_lists])
+        pre_n = np.asarray([len(p) for p in pre_lists], np.int32)
+        gc_free = np.asarray([s.gc_free_blocks for s in specs], np.int32)
+        is_lru = np.asarray([s.gc_policy == "lru" for s in specs], bool)
+        n_w = int(np.sum(cls == _trace.WRITE))
+        mesh = _points_mesh() if shard is not False else None
+        mesh_sz = None if mesh is None else mesh.devices.size
+        S = 2 * ppb + 1
+
+        # ---- stage 1: preconditioned states (a pure function of the
+        # spec batch — fold once, reuse across calls)
+        skey = (tuple(specs), mesh_sz)
+        st0 = self._ftl_pre_states.get(skey)
+        if st0 is None and not has_pre:
+            fs0 = _ftl_scan.scan_state_fresh(specs[0])
+            st0 = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    jnp.asarray(x),
+                    (len(specs),) + jnp.shape(jnp.asarray(x))), fs0)
+        elif st0 is None:
+            t_pre = max(_ftl_scan.estimate_t_max(s, 0, len(p),
+                                                 precondition=True)
+                        for s, p in zip(specs, pre_lists) if len(p))
+
+            def build_pre(t_pre):
+                fold_p = _ftl_scan.make_translate_fold(blocks, ppb,
+                                                       p_b, t_pre)
+                fs0 = _ftl_scan.scan_state_fresh(specs[0])
+                cls_pre = jnp.full((p_b,), _trace.WRITE, jnp.int32)
+                arr_pre = jnp.zeros((p_b,), jnp.float32)
+                pay_pre = jnp.zeros((p_b,), bool)
+                rid_pre = jnp.full((p_b,), -1, jnp.int32)
+
+                def point(pre_lpn, n_pre, gfree, lru):
+                    fs, _ = fold_p(cls_pre, arr_pre, pay_pre, rid_pre,
+                                   pre_lpn, n_pre, gfree, lru, fs0)
+                    pre_done = ((fs.h >= n_pre)
+                                & (fs.mode == _ftl_scan.MODE_HOST))
+                    return _ftl_scan._reset_window(fs, ppb), pre_done
+
+                vm = jax.vmap(point)
+                if mesh is not None:
+                    return _shard_points(mesh, vm, n_sharded=4)
+                return jax.jit(vm)
+
+            while True:
+                fn = self._closure(
+                    ("ftl-sweep-pre", blocks, ppb, p_b, t_pre, mesh_sz),
+                    functools.partial(build_pre, t_pre))
+                st0, pre_done = fn(pre_rows, pre_n, gc_free, is_lru)
+                err = np.asarray(st0.err)
+                if err.any():
+                    i = int(np.flatnonzero(err)[0])
+                    _ftl_scan._raise_scan_error(int(err[i]), specs[i])
+                if np.asarray(pre_done).all():
+                    break
+                t_pre *= 2
+        self._ftl_pre_states[skey] = st0
+        self._ftl_pre_states.move_to_end(skey)
+        while len(self._ftl_pre_states) > 4:
+            self._ftl_pre_states.popitem(last=False)
+
+        # ---- stage 2: translate → compact → lower → simulate, with
+        # learned buffer sizes per (specs, stream)
+        digest = hashlib.blake2b(digest_size=8)
+        for a in (cls, arr, lpn_rows):
+            digest.update(np.ascontiguousarray(a).tobytes())
+        wkey = (tuple(specs), n, n_w, digest.hexdigest(), sched_policy,
+                batched, mesh_sz)
+        sizes = self._ftl_sweep_sizes.get(wkey)
+        if sizes is not None:
+            t_max, t2 = sizes
+            self._ftl_sweep_sizes.move_to_end(wkey)
+        else:
+            t_max = max(_ftl_scan.estimate_t_max(s, n - n_w, n_w)
+                        for s in specs)
+            t2 = _ftl_scan._bucket(
+                max(_ftl_scan.estimate_ops(s, n - n_w, n_w)
+                    for s in specs))
+
+        def build(t_max, t2):
+            fold_m = _ftl_scan.make_translate_fold(blocks, ppb, n_b,
+                                                   t_max)
+            T = t_max * S
+            slot1 = jnp.arange(1, t2 + 1, dtype=jnp.int32)
+            # compacted op i sits at slot i, so the closed-form static
+            # placement (`lower_ops` field-for-field) is a closure
+            # constant shared by every design point
+            slot = jnp.arange(t2, dtype=jnp.int32)
+            if sched_policy == "stripe":
+                chan_c, way_c = slot % C, (slot // C) % W
+            else:                       # "round_robin": way-first
+                way_c, chan_c = slot % W, (slot // W) % C
+            par_c = (slot // (C * W)) % 2
+            extra_c = jnp.zeros((t2,), jnp.float32)
+
+            def point(fs, lpn, gfree, lru,
+                      h_cls, h_arr, h_pay, h_rid, n_eff):
+                fs, ys = fold_m(h_cls, h_arr, h_pay, h_rid, lpn, n_eff,
+                                gfree, lru, fs)
+                # compact the [t_max, 2*ppb+1] emission rows into the
+                # op bucket: position of the i-th valid lane via binary
+                # search on the running popcount (gathers, no scatter)
+                op_cls, arrival, valid = (ys[0].reshape(-1),
+                                          ys[1].reshape(-1),
+                                          ys[4].reshape(-1))
+                cum = jnp.cumsum(valid.astype(jnp.int32))
+                n_ops = cum[-1]
+                pos = jnp.minimum(
+                    jnp.searchsorted(cum, slot1, side="left"), T - 1)
+                end = _sim._trace_end_time_masked_impl(
+                    *sess._targs, op_cls[pos], chan_c, way_c, par_c,
+                    arrival[pos], extra_c, slot1 <= n_ops, C, batched)
+                done = ((fs.h >= n_eff)
+                        & (fs.mode == _ftl_scan.MODE_HOST))
+                rows = jnp.sum(jnp.any(ys[4], axis=1).astype(jnp.int32))
+                return end, fs.err, done, n_ops, rows
+
+            vm = jax.vmap(point, in_axes=(0, 0, 0, 0,
+                                          None, None, None, None, None))
+            if mesh is not None:
+                return _shard_points(mesh, vm, n_sharded=4)
+            return jax.jit(vm)
+
+        while True:
+            fn = self._closure(
+                ("ftl-sweep", blocks, ppb, n_b, t_max, t2, C, W,
+                 sched_policy, batched, mesh_sz),
+                functools.partial(build, t_max, t2))
+            end, err, done, n_ops, rows = fn(
+                st0, lpn_rows, gc_free, is_lru,
+                cls_p, arr_p, pay_p, rid_p, jnp.int32(n))
+            err = np.asarray(err)
+            if err.any():
+                i = int(np.flatnonzero(err)[0])
+                _ftl_scan._raise_scan_error(int(err[i]), specs[i])
+            n_ops = np.asarray(n_ops)
+            grow = False
+            if not np.asarray(done).all():
+                t_max *= 2           # emission buffer overflowed
+                grow = True
+            if int(n_ops.max()) > t2:
+                # op bucket overflowed; n_ops from an overflowed
+                # emission buffer is a lower bound, which only means
+                # one more growth round
+                t2 = _ftl_scan._bucket(int(n_ops.max()))
+                grow = True
+            if not grow:
+                self._ftl_sweep_sizes[wkey] = (
+                    _ftl_scan._bucket(int(np.asarray(rows).max()) + 1),
+                    t2)
+                while len(self._ftl_sweep_sizes) > 32:
+                    self._ftl_sweep_sizes.popitem(last=False)
+                return np.asarray(end, np.float64)
 
 
 @functools.lru_cache(maxsize=128)

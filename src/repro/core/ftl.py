@@ -275,6 +275,12 @@ class FTLStats:
     prog_fails: int = 0
     blocks_retired: int = 0
     free_page_low_watermark: int = 0
+    # per-block wear summary (ROADMAP wear leveling): computed from the
+    # drive state's erase_count array when translate() returns, so it
+    # covers the whole drive lifetime (preconditioning included) even
+    # though the counters above reset to the measured window
+    max_erase_count: int = 0
+    mean_erase_count: float = 0.0
 
     @property
     def gc_op_count(self) -> int:
@@ -307,6 +313,7 @@ class FTLState:
         self.bad = np.zeros(spec.blocks, bool)       # retire at next erase
         self.retired = np.zeros(spec.blocks, bool)   # out of the pool
         self.fill_seq = np.full(spec.blocks, -1, np.int64)
+        self.erase_count = np.zeros(spec.blocks, np.int64)
         self._seq = 1
         self.free = collections.deque(range(1, spec.blocks))
         self.open_block = 0
@@ -477,6 +484,7 @@ def _gc_cycle(state: FTLState, emitter, arrival: float,
     state.fill_seq[victim] = -1
     emitter.emit(ERASE, arrival, False, -1, True)
     state.stats.erases += 1
+    state.erase_count[victim] += 1
     erase_failed = (erase_fail_prob > 0.0
                     and rng.random() < erase_fail_prob)
     if erase_failed or state.bad[victim]:
@@ -514,20 +522,27 @@ def _run_ops(state: FTLState, emitter, cls, arrival, rid, payload, lpns,
         state.note_watermark()
 
 
-def _precondition(state: FTLState, rng_faults, prog_fail_prob: float,
-                  erase_fail_prob: float):
-    """Silently age the drive to steady state: sequential fill of the
-    whole logical space, then ``precondition_passes`` passes of uniform
-    random overwrites (seeded by ``spec.seed``), with GC running.
-    Stats are reset afterwards, so the measured window reports
-    steady-state WAF only."""
-    spec = state.spec
-    sink = _NullEmitter()
+def precondition_lpns(spec: FTLSpec) -> np.ndarray:
+    """The preconditioning overwrite order: sequential fill of the whole
+    logical space, then ``precondition_passes`` passes of uniform random
+    overwrites seeded by ``spec.seed``.  One definition shared by the
+    host translator and the ``lax.scan`` translation engine
+    (``repro.core.ftl_scan``), so both age the same drive."""
     n = spec.logical_pages
     rng = np.random.default_rng(spec.seed)
     fill = np.arange(n, dtype=np.int64)
     over = rng.integers(0, n, int(round(spec.precondition_passes * n)))
-    lpns = np.concatenate([fill, over])
+    return np.concatenate([fill, over])
+
+
+def _precondition(state: FTLState, rng_faults, prog_fail_prob: float,
+                  erase_fail_prob: float):
+    """Silently age the drive to steady state (``precondition_lpns``)
+    with GC running.  Stats are reset afterwards, so the measured window
+    reports steady-state WAF only."""
+    spec = state.spec
+    sink = _NullEmitter()
+    lpns = precondition_lpns(spec)
     zeros_f = np.zeros(len(lpns), np.float32)
     _run_ops(state, sink, np.full(len(lpns), WRITE, np.int32), zeros_f,
              np.full(len(lpns), -1, np.int32), np.zeros(len(lpns), bool),
@@ -567,6 +582,8 @@ def translate(stream: RequestStream, spec: FTLSpec, *,
     emitter = _Emitter()
     _run_ops(state, emitter, cls, arrival, rid, payload, lpns,
              rng_faults, prog_fail_prob, erase_fail_prob)
+    state.stats.max_erase_count = int(state.erase_count.max())
+    state.stats.mean_erase_count = float(state.erase_count.mean())
     return FTLTranslation(
         op_cls=np.asarray(emitter.cls, np.int32),
         arrival_us=np.asarray(emitter.arrival, np.float32),
@@ -579,6 +596,6 @@ def translate(stream: RequestStream, spec: FTLSpec, *,
 __all__ = [
     "ERASE", "FTLSpec", "FTLState", "FTLStats", "FTLTranslation",
     "FTL_LABELS", "FTL_READ", "FTL_WRITE", "GC_POLICIES", "GC_READ",
-    "GC_WRITE", "analytic_waf", "ftl_op_class_table", "select_victim",
-    "translate",
+    "GC_WRITE", "analytic_waf", "ftl_op_class_table", "precondition_lpns",
+    "select_victim", "translate",
 ]

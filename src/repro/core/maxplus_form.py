@@ -400,6 +400,7 @@ def structured_segment_products(
     ways: int,
     batched: bool,
     segment_len: int,
+    valid: jax.Array | None = None,        # [T] bool op mask
 ) -> jax.Array:
     """[S, N, N] (max,+) products of the trace's S = ceil(T/L) segments.
 
@@ -422,7 +423,14 @@ def structured_segment_products(
     extends the op's chip row only (chip = bus' + post + extra); the
     bus and serial-ctrl rows are never extended — retries re-run the
     sense inside the die.  None / all-zero extras add +0.0 — exact,
-    bit-for-bit."""
+    bit-for-bit.
+
+    ``valid`` masks ops out *exactly*: a False lane rides the same
+    drop-sentinel path as the ragged tail — no row is written, so the
+    op is the (max,+) identity on the product, not a zero-timing op
+    (which would still serialise the bus).  This is how sparsely
+    padded traces — the fused FTL sweep's ``[t_max, 2*ppb+1]``
+    emission rows (DESIGN.md §2.11) — evaluate without compaction."""
     layout = StateLayout(channels, ways)
     n = layout.n_state
     t_steps = cls.shape[0]
@@ -451,7 +459,9 @@ def structured_segment_products(
     par = cols(jnp.asarray(parity, jnp.int32))
     arr = cols(jnp.asarray(arrival_us, jnp.float32))
     ext = cols(jnp.asarray(extra_us, jnp.float32))
-    valid = cols(jnp.ones((t_steps,), bool), fill=False)
+    if valid is None:
+        valid = jnp.ones((t_steps,), bool)
+    valid = cols(jnp.asarray(valid, bool), fill=False)
     ready_off = ((w + 1).astype(jnp.float32) * cmd_us[k] if batched
                  else cmd_us[k]) + pre_us[k]
     xs = (c, c * ways + w,

@@ -225,3 +225,49 @@ def apply_faults(trace: OpTrace, spec: FaultSpec, table=None, *,
                     else np.asarray(arr2, np.float32)),
         extra_us=np.asarray(ext2, np.float32))
     return trace2, rid2, sampler
+
+
+def lower_ops_chunk(cls, arrival_us, channels: int, ways: int,
+                    policy: str = "stripe", payload=None,
+                    slot_offset: int = 0) -> tuple[OpTrace, int]:
+    """Chunked form of :func:`lower_ops`: lower one slice of an op
+    stream whose earlier ops already consumed ``slot_offset`` placement
+    slots, so concatenating the per-chunk traces is field-for-field
+    identical to lowering the whole stream at once.
+
+    Placement at a nonzero offset needs the page parity in closed form
+    (``_finalize`` counts per-chip ops from zero): under both static
+    policies every op advances the slot, each chip sees every
+    ``channels * ways``-th slot, so op ``s``'s per-chip ordinal is
+    ``s // (channels * ways)`` and its MLC parity is that ordinal mod 2
+    — regression-pinned against ``_finalize`` in the sched tests.
+
+    Returns ``(trace, next_offset)``; feed ``next_offset`` to the next
+    chunk.  This is what lets the FTL translation stream through
+    ``trace_chunk_fold`` (DESIGN.md §2.11) without materialising the
+    full aged op trace."""
+    if policy_is_dynamic(policy):
+        raise ValueError(
+            f"sched policy {policy!r} is dynamic — it cannot be lowered "
+            "offline; run it through Simulator.run(workload=...) / "
+            "sim.dispatch_trace (engines with the 'dispatch' capability)")
+    cls = np.asarray(cls, np.int32)
+    arrival = np.asarray(arrival_us, np.float32)
+    slots = slot_offset + np.arange(len(cls))
+    if policy == "stripe":
+        chan = slots % channels
+        way = (slots // channels) % ways
+    else:                                           # "round_robin": way-first
+        way = slots % ways
+        chan = (slots // ways) % channels
+    parity = (slots // (channels * ways)) % 2
+    if payload is not None:
+        payload = np.asarray(payload, bool)
+        if payload.all():
+            payload = None
+    trace = OpTrace(
+        cls=cls, channel=chan.astype(np.int32), way=way.astype(np.int32),
+        parity=parity.astype(np.int32), channels=channels, ways=ways,
+        payload=payload,
+        arrival_us=None if not np.any(arrival) else arrival)
+    return trace, slot_offset + len(cls)

@@ -688,14 +688,15 @@ def dispatch_trace(
 def _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
         cls, channel, way, parity, arrival, extra, n_channels, n_ways,
-        batched, segment_len, combine):
+        batched, segment_len, combine, valid=None):
     from repro.core import maxplus_form as mf  # deferred: mf imports us
 
     prods = mf.structured_segment_products(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
         cls, channel, way, parity, arrival, extra,
         channels=n_channels, ways=n_ways, batched=batched,
-        segment_len=segment_len if segment_len is not None else 1)
+        segment_len=segment_len if segment_len is not None else 1,
+        valid=valid)
     layout = mf.StateLayout(n_channels, n_ways)
     s0 = jnp.zeros((layout.n_state,), jnp.float32)
     if combine == "assoc":        # log-depth dense combine (TPU-shaped)
@@ -733,6 +734,7 @@ def trace_end_time_prefix(
     batched: bool,
     segment_len: int | None = 64,
     combine: str = "chain",
+    valid: jax.Array | None = None,   # [T] bool: False lanes skip exactly
 ) -> jax.Array:
     """Same recurrence as ``trace_end_time``, evaluated in O(L + S)
     depth (S = ceil(T/L)): the trace's S segment products are computed
@@ -750,11 +752,15 @@ def trace_end_time_prefix(
     layout (smaller than the scan engine's fixed MAX_WAYS block, so the
     combine matrices stay compact).  ``segment_len=None`` folds each op
     as its own segment — with ``combine="assoc"`` the pure O(log T)-
-    depth dense form."""
+    depth dense form.
+
+    ``valid`` (optional [T] bool) masks lanes out of the product
+    exactly — the masked-fold identity for sparsely padded traces
+    (the fused FTL sweep's emission rows, DESIGN.md §2.11)."""
     return _trace_end_time_prefix_impl(
         cmd_us, pre_us, slot_us, post_lo_us, post_hi_us, ctrl_us, arb_us,
         cls, channel, way, parity, arrival_us, extra_us, n_channels,
-        n_ways, batched, segment_len, combine)
+        n_ways, batched, segment_len, combine, valid)
 
 
 @functools.partial(jax.jit, static_argnames=("n_channels", "n_ways",

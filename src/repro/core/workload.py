@@ -335,6 +335,38 @@ def request_lpns(stream: RequestStream, n_logical: int) -> np.ndarray:
             + pos) % n_logical
 
 
+def iter_request_chunks(stream: RequestStream, chunk_requests: int):
+    """Slice a request stream into contiguous chunks of at most
+    ``chunk_requests`` requests — the feeder for the streaming FTL path
+    (``Simulator.run_stream(ftl=...)``), which translates and lowers
+    chunk by chunk while carrying drive state.
+
+    Address-free streams (``lpn is None``) synthesise their logical
+    layout from the *global* op index inside :func:`request_lpns`, so
+    naive slicing would restart every chunk at logical page 0; this
+    helper materialises each request's unwrapped starting lpn first
+    (``request_lpns`` wraps modulo the footprint later), making the
+    chunked translation identical to the one-shot stream for any
+    logical size."""
+    if chunk_requests < 1:
+        raise ValueError(
+            f"chunk_requests must be >= 1, got {chunk_requests}")
+    if stream.hedge_of is not None:
+        raise ValueError(
+            "hedged streams cannot be chunked (hedge_of links cross "
+            "chunk boundaries) — hedging is one-shot-only")
+    if stream.lpn is None and stream.n_requests:
+        reps = np.asarray(stream.n_pages, np.int64)
+        stream = dataclasses.replace(stream, lpn=np.cumsum(reps) - reps)
+    arrays = {f.name: getattr(stream, f.name)
+              for f in dataclasses.fields(stream)
+              if isinstance(getattr(stream, f.name), np.ndarray)}
+    for lo in range(0, stream.n_requests, chunk_requests):
+        yield dataclasses.replace(
+            stream, **{k: v[lo:lo + chunk_requests]
+                       for k, v in arrays.items()})
+
+
 # ---------------------------------------------------------------------------
 # Logically-addressed builders (the FTL aging workload class)
 # ---------------------------------------------------------------------------

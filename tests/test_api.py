@@ -64,7 +64,8 @@ API_SNAPSHOT = {
     "Simulator": "(config: 'SSDConfig | None' = None, *, "
                  "table: 'OpClassTable | None' = None, "
                  "kind: 'InterfaceKind | str | None' = None, "
-                 "max_cache_entries: 'int | None' = 512)",
+                 "max_cache_entries: 'int | None' = 512, "
+                 "max_ftl_sessions: 'int | None' = 8)",
     "engine_capabilities": "() -> 'dict[str, EngineCaps]'",
     "get_engine": "(name: 'str') -> 'Engine'",
     "register_engine": "(name: 'str', *, heterogeneous: 'bool', "
@@ -99,11 +100,14 @@ SIMULATOR_METHODS = {
                 "segment_len: 'int | None' = 64, "
                 "shard: 'bool | None' = None) -> 'list[SimResult]'",
     "run_stream": "(self, chunks, *, policy: 'Policy | None' = None, "
-                  "objective: 'Objective' = 'end_time') -> 'SimResult'",
-    "sweep": "(self, tables, trace: 'OpTrace', *, "
+                  "objective: 'Objective' = 'end_time', ftl=None, "
+                  "faults: 'FaultSpec | None' = None, "
+                  "sched_policy: 'str' = 'stripe') -> 'SimResult'",
+    "sweep": "(self, tables, trace, *, "
              "policy: 'Policy | None' = None, engine: 'str' = 'prefix', "
              "segment_len: 'int | None' = 64, combine: 'str' = 'chain', "
-             "shard: 'bool | None' = None) -> 'np.ndarray'",
+             "shard: 'bool | None' = None, ftl=None, "
+             "sched_policy: 'str' = 'stripe') -> 'np.ndarray'",
     "cache_info": "(self) -> 'CacheInfo'",
 }
 
